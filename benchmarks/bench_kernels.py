@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: fused Pallas (interpret on CPU) vs jnp oracle.
+
+On CPU the *absolute* numbers reflect the interpreter, not Mosaic — the
+purpose here is regression coverage of wrapper overhead + the oracle
+path's wall time. HLO-level fusion quality is covered by the roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    n = 4096 if quick else 16384
+    rows = []
+
+    d = jnp.asarray(rng.uniform(0.2, 6.0, (n,)), jnp.float32)
+    freqs = jnp.arange(1, 32, dtype=jnp.float32) * jnp.pi
+    jit_ref = jax.jit(lambda dd: ref.fused_rbf_ref(dd, freqs, 6.0, 8))
+    rows.append(("kern_rbf_oracle_jit", _time(jit_ref, d), f"n={n}"))
+
+    th = jnp.asarray(rng.uniform(0, np.pi, (n,)), jnp.float32)
+    jit_f = jax.jit(lambda tt: ref.fused_fourier_ref(tt, 31))
+    rows.append(("kern_fourier_oracle_jit", _time(jit_f, th), f"n={n}"))
+
+    m = 2048 if quick else 8192
+    x = jnp.asarray(rng.normal(0, 1, (m, 256)), jnp.float32)
+    wc = jnp.asarray(rng.normal(0, .1, (256, 64)), jnp.float32)
+    wg = jnp.asarray(rng.normal(0, .1, (256, 64)), jnp.float32)
+    z = jnp.zeros(64)
+    o = jnp.ones(64)
+    ref_two = jax.jit(lambda xx: ref.fused_gated_mlp_ref(
+        xx, wc, z, wg, z, o, z, o, z))
+    rows.append(("kern_gatedmlp_oracle_jit", _time(ref_two, x), f"m={m}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

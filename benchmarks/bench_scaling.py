@@ -1,0 +1,79 @@
+"""Fig. 10 reproduction: strong/weak scaling of DP training over host
+devices (subprocess per device count; CPU cores stand in for GPUs — the
+paper's 66-91% efficiencies are the reference points).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_WORKER = textwrap.dedent("""
+    import os, sys, json, time, itertools
+    n = int(sys.argv[1]); batch = int(sys.argv[2]); steps = int(sys.argv[3])
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    import jax
+    from repro.core.chgnet import CHGNetConfig
+    from repro.data import BatchIterator, SyntheticConfig, capacity_for, make_dataset
+    from repro.train import TrainConfig, Trainer
+
+    ds = make_dataset(SyntheticConfig(num_crystals=128, max_atoms=20, seed=0))
+    caps = capacity_for(ds, batch // n)
+    mesh = jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tr = Trainer(CHGNetConfig(readout="direct"),
+                 TrainConfig(global_batch=batch), mesh=mesh)
+    it = itertools.cycle(iter(BatchIterator(ds, batch, n, caps, stack=True)))
+    tr.train(itertools.islice(it, 2))  # warmup/compile
+    t0 = time.perf_counter()
+    tr.train(itertools.islice(it, steps))
+    dt = (time.perf_counter() - t0) / steps
+    print(json.dumps({"n": n, "batch": batch, "step_s": dt}))
+""")
+
+
+def _run(n, batch, steps=4):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _WORKER, str(n), str(batch), str(steps)],
+        capture_output=True, text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-1500:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(device_counts=(1, 2, 4), strong_batch: int = 32,
+        weak_per_dev: int = 8):
+    import os
+
+    cores = os.cpu_count() or 1
+    sim = ";SIMULATED(1-core-host)" if cores < max(device_counts) else ""
+    rows = []
+    # strong scaling: fixed global batch
+    base = None
+    for n in device_counts:
+        r = _run(n, strong_batch)
+        if base is None:
+            base = r["step_s"]
+        speedup = base / r["step_s"]
+        eff = speedup / (n / device_counts[0])
+        rows.append((f"fig10_strong_n{n}", r["step_s"] * 1e6,
+                     f"speedup={speedup:.2f}x;eff={eff * 100:.0f}%{sim}"))
+    # weak scaling: fixed per-device batch
+    base = None
+    for n in device_counts:
+        r = _run(n, weak_per_dev * n)
+        if base is None:
+            base = r["step_s"]
+        eff = base / r["step_s"]
+        rows.append((f"fig10_weak_n{n}", r["step_s"] * 1e6,
+                     f"eff={eff * 100:.0f}%{sim}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,42 @@
+"""§Roofline: build the three-term roofline table from the dry-run records
+(benchmarks/results/dryrun.json) and write markdown + CSV artifacts."""
+from __future__ import annotations
+
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run():
+    from repro.analysis.roofline import load_and_build, to_markdown
+
+    path = os.path.join(RESULTS, "dryrun.json")
+    if not os.path.exists(path):
+        return [("roofline_missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all` first")]
+    rows, recs = load_and_build(path)
+    md = to_markdown(rows)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline.md"), "w") as f:
+        f.write(md + "\n")
+
+    out = []
+    for r in rows:
+        if r.mesh != "16x16":
+            continue  # roofline table is single-pod per the brief
+        bound = max(r.compute_s, r.memory_s, r.collective_s)
+        frac = r.compute_s / bound if bound else 0.0
+        out.append((
+            f"roofline_{r.arch}_{r.shape}",
+            bound * 1e6,  # bound time per step-chip, us
+            f"dominant={r.dominant};frac={frac:.2f};"
+            f"useful={r.useful_frac:.2f};mem={r.mem_gib:.1f}GiB",
+        ))
+    skips = sum(1 for rec in recs if str(rec["status"]).startswith("skip"))
+    out.append(("roofline_cells", float(len(rows)), f"skips={skips}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,18 @@
+"""repro: FastCHGNet (CS.DC 2024) in JAX — a multi-pod TPU training and
+inference framework.
+
+Subpackages:
+    core         the paper's contribution: CHGNet/FastCHGNet in JAX
+    kernels      Pallas TPU kernels + jnp oracles
+    data         synthetic MPtrj-like dataset, load-balance sampler
+    optim        Adam, schedules (Eq. 14), grad transforms
+    distributed  collectives, GPipe pipeline parallelism
+    runtime      checkpoint / elastic / fault tolerance
+    train        Trainer + DP shard_map steps
+    models       LM substrate for the 10 assigned architectures
+    configs      per-arch configs + shapes + input_specs
+    launch       production mesh, multi-pod dry-run, training launcher
+    analysis     roofline model
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,31 @@
+"""The paper's own model: CHGNet v0.3.0-style config for MPtrj training
+(paper §IV Parameters Setting) + the FastCHGNet variants of Table I.
+"""
+from repro.core.chgnet import CHGNetConfig
+from repro.core.losses import LossWeights
+
+# reference CHGNet (autodiff force/stress, sequential blocks)
+REFERENCE = CHGNetConfig(
+    dim=64, num_rbf=31, num_fourier=31, num_blocks=3,
+    r_cut_atom=6.0, r_cut_bond=3.0, envelope_p=8,
+    readout="autodiff", block_variant="reference", mlp_impl="ref",
+    envelope_impl="reference",
+)
+
+# FastCHGNet "w/o head": all system optimizations, physics-consistent readout
+FAST_WO_HEAD = REFERENCE.with_(
+    block_variant="fast", mlp_impl="packed", envelope_impl="factored",
+)
+
+# FastCHGNet "F/S head": + decoupled Force/Stress heads (paper C1)
+FAST_FS_HEAD = FAST_WO_HEAD.with_(readout="direct")
+
+LOSS = LossWeights(energy=2.0, force=1.5, stress=0.1, magmom=0.1,
+                   huber_delta=0.1)
+
+# paper training recipe
+BATCH_SIZE = 128          # reference single-GPU recipe
+LARGE_BATCH = 2048        # multi-GPU recipe (Fig. 6)
+EPOCHS = 30
+BASE_LR = 3e-4
+LR_K = 128                # Eq. 14

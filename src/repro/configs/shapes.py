@@ -1,0 +1,143 @@
+"""Assigned input shapes × input_specs() builders for the dry-run.
+
+Shapes (assigned to every LM arch):
+    train_4k     seq=4096   global_batch=256   (training step)
+    prefill_32k  seq=32768  global_batch=32    (inference prefill)
+    decode_32k   seq=32768  global_batch=128   (one-token decode, full KV)
+    long_500k    seq=524288 global_batch=1     (long-context decode;
+                 SSM/hybrid only — skipped for pure full-attention archs)
+
+``input_specs(cfg, shape, multi_pod)`` returns ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero allocation) plus the matching
+PartitionSpecs for every model input of the step being lowered.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import family_fns
+from repro.models.config import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str       # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _bax(batch: int, multi_pod: bool, mesh_sizes: dict):
+    """Batch sharding axes, degraded to replication if not divisible."""
+    axes = batch_axes(multi_pod)
+    total = 1
+    for a in axes:
+        total *= mesh_sizes.get(a, 1)
+    return axes if batch % total == 0 and total > 1 else None
+
+
+def cell_status(cfg: LMConfig, shape: Shape) -> str:
+    """'ok' or 'skip:<reason>' for this (arch x shape) cell."""
+    fns = family_fns(cfg)
+    if shape.name == "long_500k" and not fns.supports_long_context:
+        return ("skip: pure full-attention arch — 524k dense-attention "
+                "decode is defined for sub-quadratic (SSM/hybrid) archs only")
+    return "ok"
+
+
+def input_specs(cfg: LMConfig, shape: Shape, *, multi_pod: bool,
+                mesh_sizes: dict):
+    """Returns dict(kind, args=tuple[ShapeDtypeStruct-trees],
+    specs=tuple[PartitionSpec-trees], donate=tuple[int indices])."""
+    fns = family_fns(cfg)
+    s = jax.ShapeDtypeStruct
+    b, sl = shape.batch, shape.seq
+    bax = _bax(b, multi_pod, mesh_sizes)
+    tok_spec = P(bax, None)
+    cdtype = jnp.dtype(cfg.compute_dtype)
+
+    def positions(batch, seq):
+        if not fns.has_positions:
+            return None, None
+        if fns.positions_3d:
+            return s((batch, seq, 3), jnp.int32), P(bax, None, None)
+        return s((batch, seq), jnp.int32), tok_spec
+
+    if shape.kind == "train":
+        if fns.token_input:
+            x = s((b, sl), jnp.int32)
+            x_spec = tok_spec
+        else:  # whisper: precomputed frame embeddings (frontend stub)
+            x = s((b, sl, cfg.d_model), cdtype)
+            x_spec = P(bax, None, None)
+        labels = s((b, sl), jnp.int32)
+        pos, pos_spec = positions(b, sl)
+        args = (x, labels) + ((pos,) if pos is not None else ())
+        specs = (x_spec, tok_spec) + ((pos_spec,) if pos is not None else ())
+        return {"kind": "train", "args": args, "specs": specs, "donate": ()}
+
+    if shape.kind == "prefill":
+        if fns.token_input:
+            x = s((b, sl), jnp.int32)
+            x_spec = tok_spec
+        else:
+            x = s((b, sl, cfg.d_model), cdtype)
+            x_spec = P(bax, None, None)
+        pos, pos_spec = positions(b, sl)
+        args = (x,) + ((pos,) if pos is not None else ())
+        specs = (x_spec,) + ((pos_spec,) if pos is not None else ())
+        return {"kind": "prefill", "args": args, "specs": specs, "donate": ()}
+
+    # decode: one new token against a seq-len KV cache / recurrent state
+    tokens = s((b, 1), jnp.int32)
+    pos, pos_spec = positions(b, 1)
+    state_struct, state_spec = decode_state_structs(
+        cfg, b, sl, multi_pod=multi_pod, mesh_sizes=mesh_sizes)
+    args = (tokens, state_struct) + ((pos,) if pos is not None else ())
+    specs = (P(bax, None), state_spec) + (
+        (pos_spec,) if pos is not None else ())
+    return {"kind": "decode", "args": args, "specs": specs, "donate": (2,)}
+
+
+def decode_state_structs(cfg: LMConfig, batch: int, max_len: int, *,
+                         multi_pod: bool, mesh_sizes: dict):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the decode state."""
+    fns = family_fns(cfg)
+    bax = _bax(batch, multi_pod, mesh_sizes)
+    seq_axis = "model"  # SP fallback axis for KV when heads can't shard
+
+    if cfg.family == "encdec":
+        s = jax.ShapeDtypeStruct
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        ld = cfg.num_decoder_layers
+        struct = {
+            "k": s((ld, batch, max_len, hkv, hd), jnp.bfloat16),
+            "v": s((ld, batch, max_len, hkv, hd), jnp.bfloat16),
+            "xk": s((ld, batch, max_len, hkv, hd), jnp.bfloat16),
+            "xv": s((ld, batch, max_len, hkv, hd), jnp.bfloat16),
+            "pos": s((), jnp.int32),
+        }
+        spec = fns.decode_state_specs(cfg, mesh_sizes, bax, seq_axis)
+        return struct, spec
+
+    struct = jax.eval_shape(
+        lambda: fns.init_decode_state(cfg, batch, max_len, jnp.bfloat16)
+    )
+    spec = fns.decode_state_specs(cfg, mesh_sizes, bax, seq_axis)
+    return struct, spec

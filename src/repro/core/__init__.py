@@ -1,0 +1,12 @@
+"""Core CHGNet / FastCHGNet implementation (the paper's contribution)."""
+from .chgnet import CHGNetConfig, chgnet_apply, chgnet_init, param_count
+from .graph import BatchCapacities, CrystalGraphBatch, batch_crystals, batch_input_specs
+from .losses import LossWeights, chgnet_loss
+from .neighbors import Crystal, GraphIndices, build_graph
+
+__all__ = [
+    "CHGNetConfig", "chgnet_apply", "chgnet_init", "param_count",
+    "BatchCapacities", "CrystalGraphBatch", "batch_crystals",
+    "batch_input_specs", "LossWeights", "chgnet_loss",
+    "Crystal", "GraphIndices", "build_graph",
+]

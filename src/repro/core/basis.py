@@ -1,0 +1,155 @@
+"""Radial / angular basis expansion (paper §II-B (2), §III-C).
+
+Contains both the *reference* formulations and the FastCHGNet-optimized
+ones so benchmarks can measure each optimization separately:
+
+  - ``envelope_reference``  : Eq. 12 (4 independent pow() terms)
+  - ``envelope_factored``   : Eq. 13, with the paper's sign typo fixed and a
+                              Horner evaluation (single pow + 2 fma)
+  - ``smooth_rbf``          : trainable-frequency smooth radial Bessel basis
+  - ``fourier_basis``       : angle Fourier expansion [DC, cos(n t), sin(n t)]
+  - ``compute_geometry``    : batched (Alg. 2) bond vectors / distances /
+                              angle cosines from the padded graph, fully
+                              differentiable w.r.t. positions and strain.
+
+The Pallas-fused versions live in ``repro.kernels`` and are numerically
+checked against these in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .graph import CrystalGraphBatch
+
+
+# ---------------------------------------------------------------------------
+# Polynomial envelope u(r): smooth cutoff, u(r_cut) = u'(r_cut) = u''(r_cut)=0
+# ---------------------------------------------------------------------------
+
+def envelope_reference(xi: jnp.ndarray, p: int = 8) -> jnp.ndarray:
+    """Eq. 12, four separate power terms (redundant compute).
+
+    NOTE paper typo: Eq. 12 prints the last coefficient as -p(p+2)/2, with
+    which u(1) = 1 - (p+2)/2 != 0 — the envelope would not vanish at the
+    cutoff. The correct smooth-cutoff coefficients (DimeNet, and CHGNet's
+    actual implementation) are a=-(p+1)(p+2)/2, b=p(p+2), c=-p(p+1)/2,
+    giving u(1) = u'(1) = 0. We implement the correct form.
+    """
+    a = -(p + 1) * (p + 2) / 2.0
+    b = float(p * (p + 2))
+    c = -p * (p + 1) / 2.0
+    return 1.0 + a * xi**p + b * xi ** (p + 1) + c * xi ** (p + 2)
+
+
+def envelope_factored(xi: jnp.ndarray, p: int = 8) -> jnp.ndarray:
+    """Eq. 13 (redundancy bypass, C5): common terms factored out and the
+    bracket evaluated in Horner form — ONE pow() and two fmas instead of
+    three independent pow() calls:
+
+        u = 1 - xi^p/2 * [ (p+1)(p+2) - 2p(p+2) xi + p(p+1) xi^2 ]
+
+    Property-tested equal to ``envelope_reference`` in tests/test_basis.py
+    (the paper's printed Eq. 13 additionally carries Eq. 12's coefficient
+    typo and a sign typo; see envelope_reference).
+    """
+    inner = (p + 1.0) * (p + 2.0) + xi * (
+        -2.0 * p * (p + 2.0) + xi * (p * (p + 1.0)))
+    return 1.0 - 0.5 * xi**p * inner
+
+
+# ---------------------------------------------------------------------------
+# Smooth radial Bessel function basis (sRBF), DimeNet-style, trainable freqs
+# ---------------------------------------------------------------------------
+
+def rbf_frequencies(num_basis: int) -> jnp.ndarray:
+    """Initial (trainable) frequencies n*pi, n = 1..num_basis."""
+    return jnp.arange(1, num_basis + 1, dtype=jnp.float32) * jnp.pi
+
+
+def smooth_rbf(
+    r: jnp.ndarray,
+    freqs: jnp.ndarray,
+    r_cut: float,
+    p: int = 8,
+    *,
+    envelope=envelope_factored,
+) -> jnp.ndarray:
+    """sRBF(r)_n = sqrt(2/rc) * sin(f_n * r/rc) / r * u(r/rc).
+
+    r: (...,) distances;  freqs: (K,) trainable;  returns (..., K).
+    Safe at r ~ 0 (padded entries): sin(f x)/r -> finite via masked divide.
+    """
+    xi = r / r_cut
+    u = envelope(xi, p)
+    r_safe = jnp.where(r > 1e-8, r, 1.0)
+    phases = xi[..., None] * freqs  # (..., K)
+    val = jnp.sqrt(2.0 / r_cut) * jnp.sin(phases) / r_safe[..., None]
+    return val * u[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Fourier expansion of the bond angle
+# ---------------------------------------------------------------------------
+
+def fourier_basis(theta: jnp.ndarray, num_basis: int = 31) -> jnp.ndarray:
+    """FT(theta) -> (..., num_basis): [1/sqrt(2), cos(n t), sin(n t)]/sqrt(pi).
+
+    num_basis = 2*L + 1 (DC + L cos + L sin). Paper sets num_basis = 31.
+    """
+    assert num_basis % 2 == 1, "fourier num_basis must be odd (DC + pairs)"
+    harmonics = (num_basis - 1) // 2
+    n = jnp.arange(1, harmonics + 1, dtype=theta.dtype)
+    ang = theta[..., None] * n  # (..., L)
+    dc = jnp.full(theta.shape + (1,), 1.0 / jnp.sqrt(2.0), dtype=theta.dtype)
+    feats = jnp.concatenate([dc, jnp.cos(ang), jnp.sin(ang)], axis=-1)
+    return feats / jnp.sqrt(jnp.pi).astype(theta.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Batched geometry (paper Alg. 2): one fused computation for the whole batch
+# ---------------------------------------------------------------------------
+
+def compute_geometry(
+    graph: CrystalGraphBatch,
+    *,
+    displacement: jnp.ndarray | None = None,
+    strain: jnp.ndarray | None = None,
+):
+    """Compute bond vectors, distances and angle cosines for a padded batch.
+
+    displacement: (atom_cap, 3) added to Cartesian coordinates — zero at the
+        evaluation point; forces are -dE/d(displacement).
+    strain: (B, 3, 3) symmetric strain eps — lattice is deformed as
+        L' = L @ (I + eps); stress is (1/V) dE/d(eps).
+
+    Returns (bond_vec (Nb,3), bond_dist (Nb,), cos_theta (Na,), theta (Na,)).
+    """
+    lattice = graph.lattice
+    if strain is not None:
+        eye = jnp.eye(3, dtype=lattice.dtype)
+        lattice = jnp.einsum("bij,bjk->bik", lattice, eye + strain)
+
+    # Cartesian positions: (atom_cap, 3) — one batched matmul (Alg. 2 l.12)
+    cart = jnp.einsum(
+        "ai,aij->aj", graph.frac_coords, lattice[graph.atom_crystal]
+    )
+    if displacement is not None:
+        cart = cart + displacement
+
+    # bond vector r_ij = r_j + image @ L - r_i  (Alg. 2 l.13-14, batched)
+    shift = jnp.einsum(
+        "bi,bij->bj", graph.bond_image, lattice[graph.bond_crystal]
+    )
+    vec = cart[graph.bond_nbr] + shift - cart[graph.bond_center]
+    dist = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-16)
+
+    # angles between bond ij and bond ik (both indices into bonds)
+    v_ij = vec[graph.angle_ij]
+    v_ik = vec[graph.angle_ik]
+    d_ij = dist[graph.angle_ij]
+    d_ik = dist[graph.angle_ik]
+    cos_t = jnp.sum(v_ij * v_ik, axis=-1) / (d_ij * d_ik + 1e-12)
+    cos_t = jnp.clip(cos_t, -1.0 + 1e-7, 1.0 - 1e-7)
+    theta = jnp.arccos(cos_t)
+    return vec, dist, cos_t, theta

@@ -1,0 +1,193 @@
+"""CHGNet / FastCHGNet model (paper §II-B, §III).
+
+Pure-JAX functional model: ``chgnet_init`` builds the parameter pytree,
+``chgnet_apply`` runs the forward pass. Two readout modes:
+
+  - readout="autodiff" (reference CHGNet): E from the energy head;
+      F_i = -dE/d(x_i),  sigma = (1/V) dE/d(eps)  via jax.grad — this makes
+      the *training* backward pass a second-order derivative (the cost the
+      paper eliminates).
+  - readout="direct" (FastCHGNet "F/S head"): Force/Stress heads (C1).
+
+Block variant ("reference" | "fast") and GatedMLP impl ("ref" | "packed" |
+"pallas") select the paper's other model-level optimizations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import basis, heads
+from .graph import CrystalGraphBatch
+from .interaction import (
+    gated_mlp_init,
+    interaction_block_apply,
+    interaction_block_init,
+    linear_apply,
+    linear_init,
+)
+
+MAX_Z = 95  # elements supported (MPtrj has 89)
+EV_A3_TO_GPA = 160.21766  # eV/A^3 -> GPa
+
+
+@dataclasses.dataclass(frozen=True)
+class CHGNetConfig:
+    dim: int = 64
+    num_rbf: int = 31
+    num_fourier: int = 31
+    num_blocks: int = 3          # full interaction blocks (+1 final atom conv)
+    r_cut_atom: float = 6.0
+    r_cut_bond: float = 3.0
+    envelope_p: int = 8
+    readout: str = "direct"      # "direct" (F/S heads) | "autodiff" (reference)
+    block_variant: str = "fast"  # "fast" (dep. elimination) | "reference"
+    mlp_impl: str = "packed"     # "ref" | "packed" | "pallas"
+    agg_impl: str = "scatter"    # "scatter" | "matmul"
+    envelope_impl: str = "factored"  # "factored" | "reference"
+    stress_scale: float = 0.1
+
+    def with_(self, **kw) -> "CHGNetConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def chgnet_init(key, cfg: CHGNetConfig, dtype=jnp.float32):
+    n_keys = 8 + cfg.num_blocks
+    ks = jax.random.split(key, n_keys)
+    params = {
+        # Feature embedding (Eq. 2). The three bond linears are PACKED into
+        # one (num_rbf -> 3*dim) weight (Fig. 3a): [e^0 | e^a | e^b].
+        "atom_embed": jax.random.normal(ks[0], (MAX_Z, cfg.dim), dtype) * 0.02,
+        "bond_embed": linear_init(ks[1], cfg.num_rbf, 3 * cfg.dim, dtype),
+        "angle_embed": linear_init(ks[2], cfg.num_fourier, cfg.dim, dtype),
+        "rbf_freqs": basis.rbf_frequencies(cfg.num_rbf).astype(dtype),
+        "blocks": [
+            interaction_block_init(ks[3 + i], cfg.dim, dtype)
+            for i in range(cfg.num_blocks)
+        ],
+        # final block: atom conv only (CHGNet v0.3.0 has a last atom update)
+        "final_block": interaction_block_init(ks[3 + cfg.num_blocks], cfg.dim, dtype),
+        "energy_head": heads.energy_head_init(ks[4 + cfg.num_blocks], cfg.dim, dtype),
+        "magmom_head": heads.magmom_head_init(ks[5 + cfg.num_blocks], cfg.dim, dtype),
+    }
+    if cfg.readout == "direct":
+        params["force_head"] = heads.force_head_init(
+            ks[6 + cfg.num_blocks], cfg.dim, dtype
+        )
+        params["stress_head"] = heads.stress_head_init(
+            ks[7 + cfg.num_blocks], cfg.dim, cfg.stress_scale, dtype
+        )
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward trunk: embeddings + interaction blocks -> (v, e, a, geometry)
+# ---------------------------------------------------------------------------
+
+def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
+           displacement=None, strain=None):
+    env = (
+        basis.envelope_factored
+        if cfg.envelope_impl == "factored"
+        else basis.envelope_reference
+    )
+    vec, dist, _cos, theta = basis.compute_geometry(
+        graph, displacement=displacement, strain=strain
+    )
+    if cfg.mlp_impl == "pallas":
+        from repro.kernels import ops as kops
+
+        rbf = kops.fused_rbf(
+            dist, params["rbf_freqs"], cfg.r_cut_atom, cfg.envelope_p
+        )
+        four = kops.fused_fourier(theta, cfg.num_fourier)
+    else:
+        rbf = basis.smooth_rbf(
+            dist, params["rbf_freqs"], cfg.r_cut_atom, cfg.envelope_p,
+            envelope=env,
+        )
+        four = basis.fourier_basis(theta, cfg.num_fourier)
+
+    # Feature embedding (packed bond linear -> split into e0 / e_a / e_b)
+    packed = linear_apply(params["bond_embed"], rbf)  # (Nb, 3*dim)
+    e0, e_a, e_b = jnp.split(packed, 3, axis=-1)
+    v = params["atom_embed"][graph.atom_z] * graph.atom_mask[..., None]
+    a = linear_apply(params["angle_embed"], four) * graph.angle_mask[..., None]
+    e = e0 * graph.bond_mask[..., None]
+
+    for blk in params["blocks"]:
+        v, e, a = interaction_block_apply(
+            blk, graph, v, e, a, e_a, e_b,
+            variant=cfg.block_variant,
+            mlp_impl=cfg.mlp_impl,
+            agg_impl=cfg.agg_impl,
+        )
+    # last block updates atoms only (matches CHGNet's final atom conv)
+    from .interaction import atom_conv
+
+    v = atom_conv(
+        params["final_block"], graph, v, e, e_a,
+        mlp_impl=cfg.mlp_impl, agg_impl=cfg.agg_impl,
+    )
+    return v, e, a, vec, dist
+
+
+def _volume(lattice):
+    return jnp.abs(jnp.linalg.det(lattice))
+
+
+# ---------------------------------------------------------------------------
+# Public forward passes
+# ---------------------------------------------------------------------------
+
+def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
+    """Full prediction: energy (B,), forces (A,3), stress (B,3,3), magmom (A,).
+
+    readout="direct": one forward pass, no derivatives (FastCHGNet).
+    readout="autodiff": forces/stress by differentiating the energy
+    (reference CHGNet) — training through this is second-order.
+    """
+    if cfg.readout == "direct":
+        v, e, a, vec, dist = _trunk(params, cfg, graph)
+        energy = heads.energy_head_apply(params["energy_head"], graph, v)
+        magmom = heads.magmom_head_apply(params["magmom_head"], graph, v)
+        forces = heads.force_head_apply(params["force_head"], graph, e, vec, dist)
+        stress = heads.stress_head_apply(params["stress_head"], graph, v)
+        return {"energy": energy, "forces": forces, "stress": stress,
+                "magmom": magmom}
+
+    if cfg.readout == "autodiff":
+        def energy_of(disp, strain):
+            v, _e, _a, _vec, _dist = _trunk(
+                params, cfg, graph, displacement=disp, strain=strain
+            )
+            e_tot = heads.energy_head_apply(params["energy_head"], graph, v)
+            return jnp.sum(e_tot), v
+
+        disp0 = jnp.zeros_like(graph.frac_coords)
+        strain0 = jnp.zeros_like(graph.lattice)
+        (de_ddisp, de_dstrain), v = jax.grad(
+            energy_of, argnums=(0, 1), has_aux=True
+        )(disp0, strain0)
+        energy = heads.energy_head_apply(params["energy_head"], graph, v)
+        magmom = heads.magmom_head_apply(params["magmom_head"], graph, v)
+        forces = -de_ddisp * graph.atom_mask[..., None]
+        vol = _volume(graph.lattice)[:, None, None]
+        stress = de_dstrain / (vol + 1e-12) * EV_A3_TO_GPA
+        stress = stress * graph.crystal_mask[:, None, None]
+        return {"energy": energy, "forces": forces, "stress": stress,
+                "magmom": magmom}
+
+    raise ValueError(f"unknown readout {cfg.readout!r}")
+
+
+@partial(jax.jit, static_argnums=(1,))
+def chgnet_apply_jit(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
+    return chgnet_apply(params, cfg, graph)

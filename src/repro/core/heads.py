@@ -1,0 +1,97 @@
+"""Output heads (paper §III-B, Fig. 2c/2d).
+
+Energy / magmom heads are shared by both readout modes. The *direct*
+Force/Stress heads (FastCHGNet C1) replace the reference autodiff readout:
+
+  Force head (Eq. 7):  n_ij = MLP(e_ij) in R;  F_i = sum_j n_ij * x_hat_ij
+      — n_ij must be a SCALAR per bond for the rotation-equivariance proof
+      (Eq. 8) to hold: R sum n x = sum n (R x).
+
+  Stress head (Eq. 9): sigma = sum_i (scale * MLP9(v_i)) ⊙ N(L),
+      N(L) = sum_{a,b} L_a/|L_a| ⊗ L_b/|L_b|  (3x3 lattice-normal matrix).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .graph import CrystalGraphBatch
+from .interaction import _glorot, linear_apply, linear_init
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [linear_init(k, a, b, dtype) for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(layers, x):
+    for i, p in enumerate(layers):
+        x = linear_apply(p, x)
+        if i < len(layers) - 1:
+            x = jax.nn.silu(x)
+    return x
+
+
+# ------------------------------ energy ------------------------------------
+
+def energy_head_init(key, dim=64, dtype=jnp.float32):
+    return {"mlp": mlp_init(key, (dim, dim, dim, 1), dtype)}
+
+
+def energy_head_apply(p, graph: CrystalGraphBatch, v):
+    """Per-site energies summed per crystal -> (B,) total energies [eV]."""
+    site_e = mlp_apply(p["mlp"], v)[..., 0] * graph.atom_mask
+    return jax.ops.segment_sum(
+        site_e, graph.atom_crystal, num_segments=graph.num_crystals
+    )
+
+
+# ------------------------------ magmom ------------------------------------
+
+def magmom_head_init(key, dim=64, dtype=jnp.float32):
+    return {"mlp": mlp_init(key, (dim, dim, 1), dtype)}
+
+
+def magmom_head_apply(p, graph: CrystalGraphBatch, v):
+    return jnp.abs(mlp_apply(p["mlp"], v)[..., 0]) * graph.atom_mask
+
+
+# ------------------------------ force head --------------------------------
+
+def force_head_init(key, dim=64, dtype=jnp.float32):
+    return {"mlp": mlp_init(key, (dim, dim, 1), dtype)}
+
+
+def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist):
+    """Eq. 7: F_i = sum_j n_ij * x_hat_ij (rotation equivariant).
+
+    e: (bond_cap, D) final bond features (invariant); bond_vec/bond_dist
+    from compute_geometry.
+    """
+    n_ij = mlp_apply(p["mlp"], e)[..., 0] * graph.bond_mask  # (Nb,)
+    x_hat = bond_vec / (bond_dist[..., None] + 1e-12)
+    contrib = n_ij[..., None] * x_hat  # (Nb, 3)
+    return jax.ops.segment_sum(
+        contrib, graph.bond_center, num_segments=graph.atom_cap
+    ) * graph.atom_mask[..., None]
+
+
+# ------------------------------ stress head -------------------------------
+
+def stress_head_init(key, dim=64, scale=0.1, dtype=jnp.float32):
+    return {"mlp": mlp_init(key, (dim, dim, 9), dtype),
+            "scale": jnp.asarray(scale, dtype)}
+
+
+def stress_head_apply(p, graph: CrystalGraphBatch, v):
+    """Eq. 9. Returns (B, 3, 3) stresses [GPa]."""
+    lat = graph.lattice  # (B, 3, 3) rows are lattice vectors
+    l_hat = lat / (jnp.linalg.norm(lat, axis=-1, keepdims=True) + 1e-12)
+    # N(L)_{mn} = sum_{a,b} l_hat[a, m] * l_hat[b, n] = (sum_a l_hat_a) ⊗ (..)
+    s = jnp.sum(l_hat, axis=1)  # (B, 3)
+    normal = jnp.einsum("bm,bn->bmn", s, s)
+    per_atom = mlp_apply(p["mlp"], v) * graph.atom_mask[..., None]  # (A, 9)
+    per_crystal = jax.ops.segment_sum(
+        per_atom, graph.atom_crystal, num_segments=graph.num_crystals
+    ).reshape(-1, 3, 3)
+    return p["scale"] * per_crystal * normal

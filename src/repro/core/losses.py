@@ -1,0 +1,61 @@
+"""Multi-target Huber loss (paper §IV: prefactors E:2, F:1.5, S:0.1, M:0.1).
+
+Energy is supervised per-atom (meV/atom convention); all reductions are
+mask-aware so padding never contributes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .graph import CrystalGraphBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class LossWeights:
+    energy: float = 2.0
+    force: float = 1.5
+    stress: float = 0.1
+    magmom: float = 0.1
+    huber_delta: float = 0.1
+
+
+def huber(x, delta):
+    absx = jnp.abs(x)
+    quad = 0.5 * x * x
+    lin = delta * (absx - 0.5 * delta)
+    return jnp.where(absx <= delta, quad, lin)
+
+
+def _masked_mean(x, mask):
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chgnet_loss(pred: dict, graph: CrystalGraphBatch, w: LossWeights):
+    """Returns (scalar loss, metrics dict with per-target MAEs)."""
+    n = jnp.maximum(graph.n_atoms_per_crystal, 1.0)
+    e_err = (pred["energy"] - graph.energy) / n  # eV/atom
+    f_err = pred["forces"] - graph.forces
+    s_err = pred["stress"] - graph.stress
+    m_err = pred["magmom"] - graph.magmoms
+
+    cmask = graph.crystal_mask
+    amask = graph.atom_mask
+    fmask = amask[..., None] * jnp.ones_like(f_err)
+    smask = cmask[:, None, None] * jnp.ones_like(s_err)
+
+    l_e = _masked_mean(huber(e_err, w.huber_delta), cmask)
+    l_f = _masked_mean(huber(f_err, w.huber_delta), fmask)
+    l_s = _masked_mean(huber(s_err, w.huber_delta), smask)
+    l_m = _masked_mean(huber(m_err, w.huber_delta), amask)
+    loss = w.energy * l_e + w.force * l_f + w.stress * l_s + w.magmom * l_m
+
+    metrics = {
+        "loss": loss,
+        "mae_e_per_atom": _masked_mean(jnp.abs(e_err), cmask),
+        "mae_f": _masked_mean(jnp.abs(f_err), fmask),
+        "mae_s": _masked_mean(jnp.abs(s_err), smask),
+        "mae_m": _masked_mean(jnp.abs(m_err), amask),
+    }
+    return loss, metrics

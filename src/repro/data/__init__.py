@@ -1,0 +1,10 @@
+"""Data substrate: synthetic MPtrj-like dataset, samplers, prefetch."""
+from .pipeline import BatchIterator, Prefetcher, capacity_for
+from .sampler import DefaultSampler, LoadBalanceSampler, cov_of_device_loads, device_loads
+from .synthetic import SyntheticConfig, SyntheticDataset, make_dataset
+
+__all__ = [
+    "BatchIterator", "Prefetcher", "capacity_for", "DefaultSampler",
+    "LoadBalanceSampler", "cov_of_device_loads", "device_loads",
+    "SyntheticConfig", "SyntheticDataset", "make_dataset",
+]

@@ -1,0 +1,79 @@
+"""Batch samplers, including the paper's Load Balance Sampler (C6, Fig. 4).
+
+The load metric of a sample is its feature count = atoms + bonds + angles
+(paper Fig. 9). Imbalance across the per-device shards of a global batch is
+measured by the coefficient of variation (CoV) of per-device totals —
+the paper reports CoV 0.186 (default) -> 0.064 (balanced) at minibatch 32
+on 4 GPUs.
+
+LoadBalanceSampler: sort the global batch by feature count ascending, then
+repeatedly pair the smallest remaining with the largest remaining sample
+and deal the pairs to devices round-robin — each device gets an equal
+number of samples whose (small+large) pair sums are nearly constant.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def cov_of_device_loads(loads: np.ndarray) -> float:
+    """Coefficient of variation of per-device load totals."""
+    mu = float(np.mean(loads))
+    if mu == 0.0:
+        return 0.0
+    return float(np.std(loads) / mu)
+
+
+class DefaultSampler:
+    """Random global batches, contiguous split across devices (reference)."""
+
+    def __init__(self, feature_counts: np.ndarray, seed: int = 0):
+        self.counts = np.asarray(feature_counts)
+        self.rng = np.random.default_rng(seed)
+
+    def epoch(self, batch_size: int, num_devices: int):
+        """Yields (global_indices, per_device_index_lists)."""
+        n = self.counts.shape[0]
+        perm = self.rng.permutation(n)
+        per_dev = batch_size // num_devices
+        for s in range(0, n - batch_size + 1, batch_size):
+            idx = perm[s:s + batch_size]
+            shards = [
+                idx[d * per_dev:(d + 1) * per_dev] for d in range(num_devices)
+            ]
+            yield idx, shards
+
+
+class LoadBalanceSampler:
+    """Paper Fig. 4: smallest+largest pairing, dealt round-robin."""
+
+    def __init__(self, feature_counts: np.ndarray, seed: int = 0):
+        self.counts = np.asarray(feature_counts)
+        self.rng = np.random.default_rng(seed)
+
+    def assign(self, idx: np.ndarray, num_devices: int) -> list[np.ndarray]:
+        """Split one global batch's indices across devices, balanced."""
+        order = np.argsort(self.counts[idx], kind="stable")
+        sorted_idx = idx[order]
+        lo, hi = 0, len(sorted_idx) - 1
+        shards: list[list[int]] = [[] for _ in range(num_devices)]
+        d = 0
+        while lo <= hi:
+            shards[d].append(sorted_idx[lo])
+            lo += 1
+            if lo <= hi:
+                shards[d].append(sorted_idx[hi])
+                hi -= 1
+            d = (d + 1) % num_devices
+        return [np.asarray(s, dtype=np.int64) for s in shards]
+
+    def epoch(self, batch_size: int, num_devices: int):
+        n = self.counts.shape[0]
+        perm = self.rng.permutation(n)
+        for s in range(0, n - batch_size + 1, batch_size):
+            idx = perm[s:s + batch_size]
+            yield idx, self.assign(idx, num_devices)
+
+
+def device_loads(counts: np.ndarray, shards: list[np.ndarray]) -> np.ndarray:
+    return np.array([counts[s].sum() for s in shards], dtype=np.float64)

@@ -1,0 +1,6 @@
+"""Distribution substrate: collectives, sharding rules, pipeline parallel."""
+from .collectives import bucketed_psum, compressed_psum, pmean_metrics
+from .pipeline import bubble_fraction, gpipe_apply, split_stages
+
+__all__ = ["bucketed_psum", "compressed_psum", "pmean_metrics",
+           "bubble_fraction", "gpipe_apply", "split_stages"]

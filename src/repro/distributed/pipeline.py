@@ -1,0 +1,91 @@
+"""GPipe-style pipeline parallelism over a 'pipe' mesh axis (DESIGN.md §5).
+
+For 1000+-node scaling a third mesh axis is warranted; this module
+provides the schedule: layers are split into S stages (stage s owns the
+contiguous block of L/S layers, params sharded P('pipe') on the stacked
+leading dim), microbatches stream through with ``lax.ppermute`` hops.
+The fill/drain bubble is the standard (S-1)/(M+S-1) fraction.
+
+Differentiation: jax.grad through the scan+ppermute schedule yields the
+reversed (drain-first) pipeline automatically — ppermute transposes to
+the inverse permutation — so the same function trains.
+
+Used inside ``shard_map(..., in_specs=(P("pipe"), P()), out_specs=P())``;
+see tests/test_pipeline_parallel.py for the 4-stage device test.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def gpipe_apply(
+    stage_params,
+    x_microbatches: jnp.ndarray,
+    stage_fn: Callable,
+    *,
+    axis: str = "pipe",
+):
+    """Run (M, mb, ...) microbatches through S pipeline stages.
+
+    stage_params: this device's stage parameters (leading dim = layers
+        of this stage) — pass through shard_map with in_spec P(axis).
+    x_microbatches: (M, mb, ...) inputs, replicated across stages.
+    stage_fn(stage_params, x) -> y: applies ONE stage's layers.
+
+    Returns (M, mb, ...) outputs (replicated — psum'd off the last stage).
+    """
+    s = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    # shard_map keeps the P(axis)-sharded leading dim at local size 1
+    stage_params = jax.tree.map(lambda a: a[0], stage_params)
+    m = x_microbatches.shape[0]
+    steps = m + s - 1
+    perm = [(i, (i + 1) % s) for i in range(s)]
+
+    buf = jnp.zeros_like(x_microbatches[0])
+    outputs = jnp.zeros_like(x_microbatches)
+
+    def step(carry, t):
+        buf, outputs = carry
+        # stage 0 ingests microbatch t while t < M; later stages consume
+        # the activation received from the previous stage
+        take = jnp.clip(t, 0, m - 1)
+        x_in = jnp.where(idx == 0, x_microbatches[take], buf)
+        y = stage_fn(stage_params, x_in)
+        # the last stage's result at step t is microbatch t-(S-1)
+        out_t = t - (s - 1)
+        valid = (out_t >= 0) & (out_t < m) & (idx == s - 1)
+        outputs = jax.lax.cond(
+            valid,
+            lambda o: o.at[jnp.clip(out_t, 0, m - 1)].set(y),
+            lambda o: o,
+            outputs,
+        )
+        buf = jax.lax.ppermute(y, axis, perm)
+        return (buf, outputs), None
+
+    (_, outputs), _ = jax.lax.scan(
+        step, (buf, outputs), jnp.arange(steps))
+    # broadcast the last stage's outputs to all stages
+    outputs = jax.lax.psum(
+        jnp.where(idx == s - 1, outputs, jnp.zeros_like(outputs)), axis)
+    return outputs
+
+
+def split_stages(layer_params, num_stages: int):
+    """Reshape stacked (L, ...) layer params into (S, L/S, ...) for
+    P('pipe') sharding of the leading dim."""
+    def re(a):
+        l = a.shape[0]
+        assert l % num_stages == 0, (l, num_stages)
+        return a.reshape((num_stages, l // num_stages) + a.shape[1:])
+
+    return jax.tree.map(re, layer_params)
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    """GPipe fill/drain overhead: (S-1) / (M+S-1)."""
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)

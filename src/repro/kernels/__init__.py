@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (paper C4 kernel fusion).
+
+Each kernel has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle in interpret mode (CPU CI) — the same
+pallas_call lowers to Mosaic on real TPUs.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  - pad inputs to kernel-aligned shapes (rows -> block multiple, basis
+    lanes -> 128) and slice the outputs back;
+  - select interpret mode automatically (interpret=True off-TPU so the
+    same code paths run in CI; compiled Mosaic on TPU);
+  - expose the packed-parameter calling convention used by
+    repro.core.interaction.gated_mlp_apply(impl="pallas").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .fused_fourier import fused_fourier_pallas
+from .fused_gated_mlp import fused_gated_mlp_pallas
+from .fused_rbf import fused_rbf_pallas
+from .fused_swiglu import fused_swiglu_pallas
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, n
+
+
+def fused_rbf(dist, freqs, r_cut: float, p: int = 8, *, block_m: int = 512):
+    """(N,) x (K,) -> (N, K) fused smooth-RBF basis."""
+    k = freqs.shape[0]
+    k_pad = (-k) % 128
+    freqs_p = jnp.pad(freqs, (0, k_pad)) if k_pad else freqs
+    dist_p, n = _pad_rows(dist, block_m)
+    out = fused_rbf_pallas(
+        dist_p, freqs_p, r_cut, p, block_m=block_m, interpret=_interpret()
+    )
+    return out[:n, :k]
+
+
+def fused_fourier(theta, num_basis: int, *, block_m: int = 512):
+    """(N,) -> (N, num_basis) fused Fourier angle basis."""
+    theta_p, n = _pad_rows(theta, block_m)
+    out = fused_fourier_pallas(
+        theta_p, num_basis, block_m=block_m, interpret=_interpret()
+    )
+    return out[:n, :num_basis]
+
+
+def fused_gated_mlp(x, wc, bc, wg, bg, sc, oc, sg, og, *, block_m: int = 256):
+    """CHGNet GatedMLP with packed weights; x: (M, d_in) -> (M, d_out)."""
+    w_packed = jnp.concatenate([wc, wg], axis=1)
+    b_packed = jnp.concatenate([bc, bg], axis=0)
+    ln_scale = jnp.concatenate([sc, sg], axis=0)
+    ln_bias = jnp.concatenate([oc, og], axis=0)
+    x_p, m = _pad_rows(x, block_m)
+    out = fused_gated_mlp_pallas(
+        x_p, w_packed, b_packed, ln_scale, ln_bias,
+        block_m=block_m, interpret=_interpret(),
+    )
+    return out[:m]
+
+
+def fused_swiglu(x, w_gate, w_up, w_down, *, activation: str = "silu",
+                 block_m: int = 128, block_f: int = 256):
+    """LM gated MLP: (M, D) -> (M, D), whole MLP in one kernel."""
+    x_p, m = _pad_rows(x, block_m)
+    out = fused_swiglu_pallas(
+        x_p, w_gate, w_up, w_down, activation=activation,
+        block_m=block_m, block_f=block_f, interpret=_interpret(),
+    )
+    return out[:m]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    block_q: int = 128, block_k: int = 128):
+    """(B, H, S, D) flash attention; folds B,H into the grid."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=_interpret(),
+    )
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth in tests).
+
+These mirror the *reference* math (repro.core.basis / interaction) but are
+kept dependency-free so kernel tests read as kernel-vs-oracle only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def envelope(xi, p: int = 8):
+    inner = (p + 1.0) * (p + 2.0) + xi * (
+        -2.0 * p * (p + 2.0) + xi * (p * (p + 1.0)))
+    return 1.0 - 0.5 * xi**p * inner
+
+
+def fused_rbf_ref(dist, freqs, r_cut: float, p: int = 8):
+    """(N,) x (K,) -> (N, K) smooth radial Bessel basis."""
+    xi = dist / r_cut
+    u = envelope(xi, p)
+    r_safe = jnp.where(dist > 1e-8, dist, 1.0)
+    # phase = freq * r / r_cut, matching core.basis.smooth_rbf exactly
+    val = jnp.sqrt(2.0 / r_cut) * jnp.sin(xi[:, None] * freqs[None, :])
+    return val / r_safe[:, None] * u[:, None]
+
+
+def fused_fourier_ref(theta, num_basis: int):
+    """(N,) -> (N, num_basis): [1/sqrt(2), cos(n t), sin(n t)] / sqrt(pi)."""
+    harmonics = (num_basis - 1) // 2
+    n = jnp.arange(1, harmonics + 1, dtype=theta.dtype)
+    ang = theta[:, None] * n
+    dc = jnp.full((theta.shape[0], 1), 1.0 / jnp.sqrt(2.0), theta.dtype)
+    out = jnp.concatenate([dc, jnp.cos(ang), jnp.sin(ang)], axis=-1)
+    return out / jnp.sqrt(jnp.pi).astype(theta.dtype)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def fused_gated_mlp_ref(x, wc, bc, wg, bg, sc, oc, sg, og):
+    """CHGNet GatedMLP: silu(LN(x@wc+bc)) * sigmoid(LN(x@wg+bg))."""
+    core = _layer_norm(x @ wc + bc, sc, oc)
+    gate = _layer_norm(x @ wg + bg, sg, og)
+    return jax.nn.silu(core) * jax.nn.sigmoid(gate)
+
+
+def fused_swiglu_ref(x, w_gate, w_up, w_down):
+    """LM SwiGLU MLP: (silu(x@w_gate) * (x@w_up)) @ w_down."""
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, scale: float | None = None):
+    """(B, H, S, D) attention oracle with optional causal mask."""
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        s_q, s_k = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((s_q, s_k), bool), k=s_k - s_q)
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count at first
+# backend init). The 512 placeholder host devices exist ONLY here — smoke
+# tests and benchmarks see the real single CPU device.
+# (No `from __future__` here: these two lines must stay the first
+# statements in the module, which Python only allows without it.)
+
+_DOC = """Multi-pod dry-run: lower + compile EVERY (arch x shape) cell on the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, and record
+memory_analysis / cost_analysis / the collective schedule for the
+roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single,multi
+Results append to benchmarks/results/dryrun.json (one record per cell).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, cell_status
+from repro.launch.mesh import make_production_mesh, mesh_sizes
+from repro.launch.steps import build_cell
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo: str) -> dict:
+    """Per-chip collective traffic model from the partitioned HLO.
+
+    For each collective op we take the LHS (result) shapes as the payload
+    and apply ring-traffic factors: all-reduce 2*(g-1)/g, others (g-1)/g,
+    with g = replica group size parsed from the op (fallback: 2 -> factor
+    ~1). '-start' ops carry the payload; '-done' ops are skipped.
+    """
+    out = {"bytes": 0.0, "count": 0, "by_op": {}}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line or "= token" in line:
+            continue
+        if "%" not in line or "=" not in line:
+            continue
+        op = m.group(1)
+        lhs = line.split(op)[0]
+        payload = _shape_bytes(lhs)
+        if payload == 0:
+            continue
+        g = 2
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = max(2, len(gm.group(1).split(",")))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = max(2, int(gi.group(2)))
+        factor = 2.0 * (g - 1) / g if op == "all-reduce" else (g - 1) / g
+        traffic = payload * factor
+        out["bytes"] += traffic
+        out["count"] += 1
+        rec = out["by_op"].setdefault(op, {"bytes": 0.0, "count": 0})
+        rec["bytes"] += traffic
+        rec["count"] += 1
+    return out
+
+
+def run_chgnet_cell(multi_pod: bool, global_batch: int = 2048) -> dict:
+    """The paper's own model at production scale: FastCHGNet DP training
+    (shard_map) with the paper's large-batch recipe (batch 2048, Fig. 6)
+    on the production mesh. Per-device padded-graph capacities are sized
+    from MPtrj-like statistics (P99 + margin, see data.pipeline)."""
+    import jax.numpy as jnp
+
+    from repro.configs import chgnet_mptrj as C
+    from repro.core.graph import BatchCapacities, batch_input_specs
+    from repro.train.trainer import TrainConfig, make_dp_train_step
+    from repro.core.chgnet import chgnet_init
+    from repro.optim.adam import adam_init
+
+    rec = {"arch": "chgnet-fastchgnet", "shape": f"train_b{global_batch}",
+           "mesh": "2x16x16" if multi_pod else "16x16", "kind": "train"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = int(mesh.devices.size)
+    per_dev = global_batch // ndev
+    # MPtrj-like per-crystal stats: ~32 atoms, ~900 bonds, ~1100 angles
+    caps = BatchCapacities(atoms=64 * per_dev, bonds=1536 * per_dev,
+                           angles=2048 * per_dev)
+    t0 = time.time()
+    try:
+        model_cfg = C.FAST_FS_HEAD
+        tcfg = TrainConfig(global_batch=global_batch, total_steps=1000,
+                           loss=C.LOSS)
+        # flatten the mesh to one DP axis for the graph shard_map
+        flat = jax.make_mesh(
+            (ndev,), ("data",),
+            axis_types=(jax.sharding.AxisType.Auto,),
+            devices=mesh.devices.reshape(-1))
+        step = make_dp_train_step(model_cfg, tcfg, flat)
+        params = jax.eval_shape(
+            lambda: chgnet_init(jax.random.PRNGKey(0), model_cfg))
+        opt = jax.eval_shape(adam_init, params)
+        one = batch_input_specs(per_dev, caps)
+        batch = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((ndev,) + s.shape, s.dtype), one)
+        with flat:
+            lowered = step.lower(params, opt, batch,
+                                 jax.ShapeDtypeStruct((), jnp.int32))
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_stats(compiled.as_text())
+        rec.update({
+            "status": "ok", "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_device_bytes": (
+                    mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes),
+            },
+            "cost": {"flops": cost.get("flops", 0.0),
+                     "bytes_accessed": cost.get("bytes accessed", 0.0)},
+            "collectives": coll,
+        })
+    except Exception as exc:  # noqa: BLE001
+        rec["status"] = f"error: {type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             attn_chunk: int = 1024) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    status = cell_status(cfg, shape)
+    if status != "ok":
+        rec["status"] = status
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        step, args, shardings, donate, out_shardings = build_cell(
+            cfg, shape, mesh, multi_pod=multi_pod, attn_chunk=attn_chunk)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=shardings,
+                             out_shardings=out_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_per_device_bytes": (
+                    mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes
+                ),
+            },
+            "cost": {
+                "flops": cost.get("flops", 0.0),
+                "bytes_accessed": cost.get("bytes accessed", 0.0),
+            },
+            "collectives": coll,
+            "hlo_bytes": len(hlo),
+        })
+    except Exception as exc:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = f"error: {type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or comma list")
+    ap.add_argument("--shape", default=None, help="shape name or comma list")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else args.arch.split(",")
+    shapes = list(SHAPES) if (args.all or not args.shape) else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    run_chgnet = args.all or (args.arch and "chgnet" in args.arch)
+    if args.arch and "chgnet" in args.arch:
+        archs = [a for a in archs if a != "chgnet"]
+
+    out_path = args.out or os.path.normpath(
+        os.path.join(RESULTS_DIR, "dryrun.json"))
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    records = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            records = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                multi = mesh_kind == "multi"
+                key = (arch, shape, "2x16x16" if multi else "16x16")
+                records = [
+                    r for r in records
+                    if (r["arch"], r["shape"], r["mesh"]) != key
+                ]
+                print(f"== {arch} x {shape} x {key[2]} ==", flush=True)
+                rec = run_cell(arch, shape, multi, args.attn_chunk)
+                print("   ->", rec["status"],
+                      f"compile={rec.get('compile_s', '-')}s",
+                      f"mem/dev={rec.get('memory', {}).get('peak_per_device_bytes', 0)/2**30:.2f}GiB"
+                      if rec.get("memory") else "", flush=True)
+                records.append(rec)
+                with open(out_path, "w") as f:
+                    json.dump(records, f, indent=1)
+
+    if run_chgnet:
+        for mesh_kind in meshes:
+            multi = mesh_kind == "multi"
+            key = ("chgnet-fastchgnet", "train_b2048",
+                   "2x16x16" if multi else "16x16")
+            records = [r for r in records
+                       if (r["arch"], r["shape"], r["mesh"]) != key]
+            print(f"== chgnet-fastchgnet x train_b2048 x {key[2]} ==",
+                  flush=True)
+            rec = run_chgnet_cell(multi)
+            print("   ->", rec["status"],
+                  f"compile={rec.get('compile_s', '-')}s", flush=True)
+            records.append(rec)
+            with open(out_path, "w") as f:
+                json.dump(records, f, indent=1)
+    print(f"wrote {out_path} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""LM step builders shared by the dry-run, launcher and benchmarks.
+
+Each builder returns (step_fn, arg_structs, in_shardings, donate) ready
+for ``jax.jit(step_fn, in_shardings=...).lower(*arg_structs).compile()``.
+Serve steps return greedy token ids (not logits) so outputs stay small on
+huge-vocab archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import Shape, decode_state_structs, input_specs
+from repro.models import encdec, hybrid, rwkv, transformer
+from repro.models.api import family_fns
+from repro.models.config import LMConfig
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.optim.grad import clip_by_global_norm
+
+
+def _shard(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _fw_kwargs(cfg: LMConfig, shape: Shape, attn_chunk: int,
+               batch_axes=None):
+    kw: dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        kw["attn_mode"] = "chunked"
+        kw["chunk"] = attn_chunk
+    if batch_axes is not None:
+        kw["batch_axes"] = batch_axes
+    return kw
+
+
+def param_structs(cfg: LMConfig, dtype=None):
+    fns = family_fns(cfg)
+    tree = jax.eval_shape(lambda: fns.init(cfg, jax.random.PRNGKey(0)))
+    if dtype is not None:
+        d = jnp.dtype(dtype)
+        tree = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, d if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype),
+            tree)
+    return tree
+
+
+# Per-cell memory-policy overrides discovered during the §Perf iterations
+# (EXPERIMENTS.md) — nested-scan remat + deeper grad accumulation for the
+# deepest/largest model.
+CELL_OVERRIDES: dict[tuple[str, str], dict] = {
+    ("qwen1.5-110b", "train_4k"): {"accum_steps": 16, "layer_block": 8},
+    # §Perf llama-1: accum 8->4 cuts per-step FSDP weight gathers ~2x
+    # (per-step collectives 27.7 -> 18.0 GB/chip est.) at 14.1 GiB peak
+    ("llama3-8b", "train_4k"): {"accum_steps": 4},
+}
+
+
+def default_accum_steps(cfg: LMConfig, shape: Shape, dp_total: int,
+                        target_tokens_per_dev: int = 8192) -> int:
+    """Microbatch count: keep ~target tokens per device per microbatch
+    (activation-memory control; same total FLOPs)."""
+    per_dev = max(1, shape.batch // dp_total)
+    want = max(1, (per_dev * shape.seq) // target_tokens_per_dev)
+    accum = min(per_dev, want)
+    while per_dev % accum != 0:  # must divide the per-device batch
+        accum -= 1
+    return max(1, accum)
+
+
+def build_cell(cfg: LMConfig, shape: Shape, mesh, *, multi_pod: bool,
+               attn_chunk: int = 1024, lr: float = 1e-4,
+               grad_clip: float = 1.0, accum_steps: int | None = None,
+               serve_dtype="bfloat16", compress_grads: bool = False):
+    """Build the jit-able step for one (arch x shape) cell on a mesh.
+
+    serve_dtype: prefill/decode weights dtype — bf16 halves the serving
+    weight footprint AND the per-token weight-read time (§Perf serve-1).
+    compress_grads: bf16 gradient all-reduce (paper C8 + compression).
+    """
+    from repro.launch.mesh import mesh_sizes as _ms
+
+    sizes = _ms(mesh)
+    fns = family_fns(cfg)
+    specs = fns.specs(cfg, sizes)
+    p_structs = param_structs(
+        cfg, dtype=None if shape.kind == "train" else serve_dtype)
+    io = input_specs(cfg, shape, multi_pod=multi_pod, mesh_sizes=sizes)
+    adam_cfg = AdamConfig()
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp_total = 1
+    for a in dp_axes:
+        dp_total *= sizes.get(a, 1)
+    overrides = CELL_OVERRIDES.get((cfg.name, shape.name), {})
+    if accum_steps is None:
+        accum_steps = overrides.get("accum_steps")
+    if accum_steps is None and shape.kind == "train":
+        accum_steps = default_accum_steps(cfg, shape, dp_total)
+    if accum_steps is not None and shape.kind == "train":
+        # the microbatch must stay divisible by the DP extent, or the
+        # batch anchor degrades to replication (sweep-3 regression)
+        accum_steps = max(1, min(accum_steps, shape.batch // dp_total))
+        while shape.batch % accum_steps != 0:
+            accum_steps -= 1
+    # anchor activation batch sharding iff the (micro)batch divides DP
+    eff_batch = shape.batch // (accum_steps or 1) if shape.kind == "train" \
+        else shape.batch
+    bax = dp_axes if eff_batch % dp_total == 0 else None
+    fw = _fw_kwargs(cfg, shape, attn_chunk, batch_axes=bax)
+    if sizes.get("model", 1) > 1 \
+            and cfg.padded_vocab % sizes["model"] == 0:
+        fw["vocab_axis"] = "model"  # anchor CE chain vocab sharding
+    if cfg.is_moe and sizes.get("model", 1) > 1 \
+            and cfg.moe.num_experts % sizes["model"] == 0:
+        fw["moe_axes"] = (bax, "model")  # EP anchor for dispatch buffers
+    if "layer_block" in overrides and cfg.family in ("dense", "moe", "vlm"):
+        fw["layer_block"] = overrides["layer_block"]
+
+    if shape.kind == "train":
+        opt_structs = jax.eval_shape(adam_init, p_structs)
+        opt_specs = {
+            "mu": specs, "nu": specs, "count": P(),
+        }
+        bax = None if shape.batch % dp_total else dp_axes
+
+        def to_micro(x):
+            """(B, ...) -> (K, B/K, ...), microbatch-major, DP inner."""
+            k = accum_steps
+            y = x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            spec = P(None, bax, *([None] * (y.ndim - 2)))
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, spec))
+
+        def train_step(params, opt_state, *inputs):
+            micro = tuple(to_micro(x) for x in inputs)
+
+            def mb(carry, m_inputs):
+                gsum, loss_sum = carry
+                loss, grads = jax.value_and_grad(
+                    lambda p: fns.loss(cfg, p, *m_inputs, **fw)
+                )(params)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, loss_sum + loss), None
+
+            gzero = jax.tree.map(jnp.zeros_like, params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                mb, (gzero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            if compress_grads:
+                # bf16 round-trip on the accumulated grads: under pjit the
+                # cross-DP reduction then moves half the bytes (§Perf C8+)
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads)
+            grads = clip_by_global_norm(grads, grad_clip)
+            params, opt_state = adam_update(
+                grads, opt_state, params, lr, adam_cfg)
+            return params, opt_state, loss_sum / accum_steps
+
+        train_step.accum_steps = accum_steps
+        args = (p_structs, opt_structs) + io["args"]
+        shardings = (
+            _shard(mesh, specs), _shard(mesh, opt_specs),
+        ) + tuple(_shard(mesh, s) for s in io["specs"])
+        out_shardings = (_shard(mesh, specs), _shard(mesh, opt_specs),
+                         NamedSharding(mesh, P()))
+        # donate params + opt state (in-place update at scale)
+        return train_step, args, shardings, (0, 1), out_shardings
+
+    if shape.kind == "prefill":
+        max_len = shape.seq
+
+        def prefill_step(params, *inputs):
+            if cfg.family in ("dense", "moe", "vlm"):
+                x, pos = inputs
+                logits, cache = transformer.prefill(
+                    cfg, params, x, pos, max_len, chunk=attn_chunk,
+                    batch_axes=bax, moe_axes=fw.get("moe_axes"))
+            elif cfg.family == "encdec":
+                (x,) = inputs
+                enc_out = encdec.encode(cfg, params, x,
+                                        attn_mode="chunked",
+                                        chunk=attn_chunk, batch_axes=bax)
+                cache = encdec.init_cache(cfg, params, enc_out, max_len)
+                logits = enc_out[:, -1:, :1]  # placeholder readout
+            elif cfg.family == "hybrid":
+                x, pos = inputs
+                logits, cache = hybrid.prefill(
+                    cfg, params, x, pos, max_len, chunk=attn_chunk,
+                    batch_axes=bax)
+            elif cfg.family == "rwkv":
+                (x,) = inputs
+                logits, cache = rwkv.prefill(cfg, params, x, batch_axes=bax)
+            else:
+                raise ValueError(cfg.family)
+            next_tok = jnp.argmax(logits[..., -1, :], axis=-1)
+            return next_tok, cache
+
+        args = (p_structs,) + io["args"]
+        shardings = (_shard(mesh, specs),) + tuple(
+            _shard(mesh, s) for s in io["specs"])
+        # CRITICAL: without explicit out_shardings XLA may replicate the
+        # returned KV cache across the pod (observed: whisper prefill cache
+        # at 96 GiB/device). Shard outputs like the decode-state specs.
+        _, state_spec = decode_state_structs(
+            cfg, shape.batch, max_len, multi_pod=multi_pod,
+            mesh_sizes=sizes)
+        out_shardings = (NamedSharding(mesh, P()), _shard(mesh, state_spec))
+        return prefill_step, args, shardings, (), out_shardings
+
+    # decode
+    def decode_step(params, tokens, state, *rest):
+        logits, new_state = fns.decode_step(cfg, params, tokens, state, *rest)
+        next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok, new_state
+
+    args = (p_structs,) + io["args"]
+    shardings = (_shard(mesh, specs),) + tuple(
+        _shard(mesh, s) for s in io["specs"])
+    # state out_sharding = state in_sharding (donation aliases buffers)
+    state_spec = io["specs"][1]
+    out_shardings = (NamedSharding(mesh, P()), _shard(mesh, state_spec))
+    # donate the state (index 2 overall: params=0, tokens=1, state=2)
+    return decode_step, args, shardings, (2,), out_shardings

@@ -1,0 +1,5 @@
+"""LM model substrate: transformer (dense/MoE/VLM), enc-dec, SSM, hybrid."""
+from .api import FamilyFns, family_fns
+from .config import LMConfig, MoEConfig
+
+__all__ = ["FamilyFns", "family_fns", "LMConfig", "MoEConfig"]

@@ -1,0 +1,150 @@
+"""Unified per-family API used by the launcher, dry-run and tests.
+
+``family_fns(cfg)`` returns a FamilyFns bundle: init / specs / loss /
+decode plumbing with one calling convention across all five model
+families. All *_inputs functions produce concrete arrays for smoke tests;
+``configs.shapes.input_specs`` produces the ShapeDtypeStruct versions for
+the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import encdec, hybrid, rwkv, transformer
+from .config import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyFns:
+    init: Callable            # (cfg, key, mesh_sizes=None) -> params
+    specs: Callable           # (cfg, mesh_sizes) -> spec tree
+    loss: Callable            # (cfg, params, *inputs, **fw) -> scalar
+    decode_step: Callable | None      # (cfg, params, tokens, state, [pos])
+    init_decode_state: Callable | None
+    decode_state_specs: Callable | None
+    has_positions: bool       # loss takes positions input
+    positions_3d: bool        # M-RoPE (B, S, 3)
+    token_input: bool         # False => float frames input (whisper)
+    supports_long_context: bool
+
+
+def _transformer_fns(cfg: LMConfig) -> FamilyFns:
+    def init_state(c, batch, max_len, dtype=jnp.bfloat16):
+        return transformer.init_cache(c, batch, max_len, dtype)
+
+    def state_specs(c, mesh_sizes, batch_axes, seq_axis):
+        return transformer.cache_specs(
+            c, mesh_sizes, batch_axes=batch_axes, seq_axis=seq_axis)
+
+    return FamilyFns(
+        init=transformer.decoder_init,
+        specs=transformer.decoder_specs,
+        loss=transformer.lm_loss,
+        decode_step=transformer.decode_step,
+        init_decode_state=init_state,
+        decode_state_specs=state_specs,
+        has_positions=True,
+        positions_3d=bool(cfg.mrope_sections),
+        token_input=True,
+        supports_long_context=False,
+    )
+
+
+def _encdec_fns(cfg: LMConfig) -> FamilyFns:
+    def loss(c, params, frames, labels, positions=None, **fw):
+        return encdec.lm_loss(c, params, frames, labels, **fw)
+
+    def decode(c, params, tokens, state, positions=None):
+        return encdec.decode_step(c, params, tokens, state)
+
+    def init_state(c, batch, max_len, dtype=jnp.bfloat16):
+        # encoder output stub for cache construction (frontend is a stub)
+        enc_out = jnp.zeros((batch, max_len, c.d_model), dtype)
+        params_needed = None  # built by caller with params; see dryrun
+        raise NotImplementedError(
+            "use encdec.init_cache(cfg, params, enc_out, max_len) directly")
+
+    def state_specs(c, mesh_sizes, batch_axes, seq_axis):
+        return encdec.cache_specs(
+            c, mesh_sizes, batch_axes=batch_axes, seq_axis=seq_axis)
+
+    return FamilyFns(
+        init=encdec.whisper_init,
+        specs=encdec.whisper_specs,
+        loss=loss,
+        decode_step=decode,
+        init_decode_state=init_state,
+        decode_state_specs=state_specs,
+        has_positions=False,
+        positions_3d=False,
+        token_input=False,
+        supports_long_context=False,
+    )
+
+
+def _hybrid_fns(cfg: LMConfig) -> FamilyFns:
+    def init_state(c, batch, max_len, dtype=jnp.bfloat16):
+        return hybrid.init_state(c, batch, max_len, dtype)
+
+    def state_specs(c, mesh_sizes, batch_axes, seq_axis):
+        return hybrid.state_specs(
+            c, mesh_sizes, batch_axes=batch_axes, seq_axis=seq_axis)
+
+    return FamilyFns(
+        init=hybrid.zamba_init,
+        specs=hybrid.zamba_specs,
+        loss=hybrid.lm_loss,
+        decode_step=hybrid.decode_step,
+        init_decode_state=init_state,
+        decode_state_specs=state_specs,
+        has_positions=True,
+        positions_3d=False,
+        token_input=True,
+        supports_long_context=True,
+    )
+
+
+def _rwkv_fns(cfg: LMConfig) -> FamilyFns:
+    def loss(c, params, tokens, labels, positions=None, **fw):
+        return rwkv.lm_loss(c, params, tokens, labels, **fw)
+
+    def decode(c, params, tokens, state, positions=None):
+        return rwkv.decode_step(c, params, tokens, state)
+
+    def init_state(c, batch, max_len, dtype=jnp.bfloat16):
+        del max_len  # O(1) state — independent of context length
+        return rwkv.rwkv_init_states(c, batch, dtype)
+
+    def state_specs(c, mesh_sizes, batch_axes, seq_axis):
+        del seq_axis
+        return rwkv.state_specs(c, batch_axes=batch_axes)
+
+    return FamilyFns(
+        init=rwkv.rwkv_init,
+        specs=rwkv.rwkv_specs,
+        loss=loss,
+        decode_step=decode,
+        init_decode_state=init_state,
+        decode_state_specs=state_specs,
+        has_positions=False,
+        positions_3d=False,
+        token_input=True,
+        supports_long_context=True,
+    )
+
+
+def family_fns(cfg: LMConfig) -> FamilyFns:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _transformer_fns(cfg)
+    if cfg.family == "encdec":
+        return _encdec_fns(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_fns(cfg)
+    if cfg.family == "rwkv":
+        return _rwkv_fns(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,232 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model); the encoder is
+the transformer stack on top of them (sinusoidal positions added here).
+Decoder: causal self-attention + cross-attention + plain-GELU MLP
+(whisper uses ungated MLPs, unlike the llama family).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import LMConfig
+from .layers import (
+    Maker, attention_chunked, attention_full, attn_init, attn_qkv,
+    cast_floats, constrain_batch, constrain_logits, embed_lookup,
+    plain_mlp_apply, plain_mlp_init, rms_norm,
+)
+from .transformer import _prepend_none, _stack
+
+
+def sinusoid_pos(s: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32) / d * jnp.log(10000.0))
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def _enc_layer_init(mk: Maker, cfg: LMConfig):
+    d = cfg.d_model
+    return {
+        "ln1": mk.make((d,), P(None), init="ones"),
+        "attn": attn_init(mk, d, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.resolved_head_dim),
+        "ln2": mk.make((d,), P(None), init="ones"),
+        "mlp": plain_mlp_init(mk, d, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(mk: Maker, cfg: LMConfig):
+    p = _enc_layer_init(mk, cfg)
+    p["ln_x"] = mk.make((cfg.d_model,), P(None), init="ones")
+    p["cross"] = attn_init(mk, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                           cfg.resolved_head_dim)
+    return p
+
+
+def whisper_init(cfg: LMConfig, key, mesh_sizes: dict | None = None):
+    dtype = jnp.dtype(cfg.param_dtype)
+    mk = Maker(key, mesh_sizes, dtype)
+    d, v = cfg.d_model, cfg.padded_vocab
+    if mk.abstract:
+        enc = _prepend_none(_enc_layer_init(mk, cfg))
+        dec = _prepend_none(_dec_layer_init(mk, cfg))
+    else:
+        enc = _stack([_enc_layer_init(mk, cfg) for _ in range(cfg.num_layers)])
+        dec = _stack([_dec_layer_init(mk, cfg)
+                      for _ in range(cfg.num_decoder_layers)])
+    return {
+        "embed": mk.make((v, d), P(mk.first_ax(v), None), scale=0.02),
+        "unembed": mk.make((d, v), P(None, mk.ax("model", v) or mk.first_ax(v)), scale=d**-0.5),
+        "enc_final": mk.make((d,), P(None), init="ones"),
+        "dec_final": mk.make((d,), P(None), init="ones"),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def whisper_specs(cfg: LMConfig, mesh_sizes: dict):
+    return whisper_init(cfg, None, mesh_sizes)
+
+
+def encode(cfg: LMConfig, params, frames, *, attn_mode="full",
+           chunk: int = 1024, remat: bool = True, batch_axes=None):
+    """frames: (B, S_enc, d) precomputed embeddings (frontend stub)."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain_batch(x + sinusoid_pos(x.shape[1], x.shape[2], x.dtype),
+                        batch_axes)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        q, k, v = attn_qkv(lp["attn"], h, cfg, None)
+        if attn_mode == "chunked":
+            out = attention_chunked(q, k, v, causal=False, chunk=chunk)
+        else:
+            out = attention_full(q, k, v, causal=False)
+        b, s, _, _ = out.shape
+        x = x + out.reshape(b, s, -1) @ lp["attn"]["wo"]
+        x = x + plain_mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"]))
+        return constrain_batch(x, batch_axes), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"])
+    return rms_norm(x, params["enc_final"])
+
+
+def _dec_layer(cfg, lp, x, enc_out, *, attn_mode, chunk, cache=None,
+               pos=None):
+    h = rms_norm(x, lp["ln1"])
+    q, k, v = attn_qkv(lp["attn"], h, cfg, None)
+    new_kv = None
+    if cache is not None:  # decode: update self cache
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, 1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, 1)
+        kv_len = jnp.full((x.shape[0],), pos + 1, jnp.int32)
+        out = attention_full(q, k_c.astype(q.dtype), v_c.astype(q.dtype),
+                             causal=False, kv_len=kv_len)
+        new_kv = (k_c, v_c)
+    elif attn_mode == "chunked":
+        out = attention_chunked(q, k, v, causal=True, chunk=chunk)
+    else:
+        out = attention_full(q, k, v, causal=True)
+    b, s, _, _ = out.shape
+    x = x + out.reshape(b, s, -1) @ lp["attn"]["wo"]
+
+    # cross attention (enc_out may be precomputed K/V in decode)
+    hx = rms_norm(x, lp["ln_x"])
+    qx = (hx @ lp["cross"]["wq"]).reshape(
+        b, s, cfg.num_heads, cfg.resolved_head_dim)
+    if cache is not None:
+        outx = attention_full(qx, cache["xk"].astype(q.dtype),
+                              cache["xv"].astype(q.dtype), causal=False)
+    else:
+        kx = (enc_out @ lp["cross"]["wk"]).reshape(
+            b, enc_out.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        vx = (enc_out @ lp["cross"]["wv"]).reshape(
+            b, enc_out.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        outx = attention_full(qx, kx, vx, causal=False)
+    x = x + outx.reshape(b, s, -1) @ lp["cross"]["wo"]
+    x = x + plain_mlp_apply(lp["mlp"], rms_norm(x, lp["ln2"]))
+    return x, new_kv
+
+
+def forward_train(cfg: LMConfig, params, frames, dec_tokens, *,
+                  attn_mode="full", chunk: int = 1024, remat: bool = True,
+                  batch_axes=None, **_unused):
+    enc_out = encode(cfg, params, frames, attn_mode=attn_mode, chunk=chunk,
+                     remat=remat, batch_axes=batch_axes)
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][dec_tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain_batch(x + sinusoid_pos(x.shape[1], x.shape[2], x.dtype),
+                        batch_axes)
+
+    def body(x, lp):
+        y, _ = _dec_layer(cfg, lp, x, enc_out, attn_mode=attn_mode,
+                          chunk=chunk)
+        return constrain_batch(y, batch_axes), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["decoder"])
+    x = rms_norm(x, params["dec_final"])
+    return x @ params["unembed"].astype(x.dtype)
+
+
+def lm_loss(cfg: LMConfig, params, frames, labels, **fw):
+    """Teacher-forced CE: decoder input = labels shifted right."""
+    dec_in = jnp.pad(labels[:, :-1], ((0, 0), (1, 0)))
+    vocab_axis = fw.pop("vocab_axis", None)
+    logits = forward_train(cfg, params, frames, dec_in, **fw).astype(jnp.float32)
+    logits = constrain_logits(logits, fw.get("batch_axes"), vocab_axis)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # vocab-parallel CE: one-hot dot stays sharded over V (take_along_axis
+    # would all-gather the full logits on vocab-sharded meshes)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def init_cache(cfg: LMConfig, params, enc_out, max_len: int,
+               dtype=jnp.bfloat16):
+    """Self-attention cache + precomputed cross K/V from the encoder."""
+    params = cast_floats(params, cfg.compute_dtype)
+    b = enc_out.shape[0]
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ld = cfg.num_decoder_layers
+
+    def cross_kv(lp):
+        kx = (enc_out @ lp["cross"]["wk"]).reshape(
+            b, enc_out.shape[1], hkv, hd)
+        vx = (enc_out @ lp["cross"]["wv"]).reshape(
+            b, enc_out.shape[1], hkv, hd)
+        return kx.astype(dtype), vx.astype(dtype)
+
+    xk, xv = jax.vmap(cross_kv)(params["decoder"])  # leading L axis? no --
+    # params["decoder"] leaves have leading L: vmap maps over it.
+    return {
+        "k": jnp.zeros((ld, b, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((ld, b, max_len, hkv, hd), dtype),
+        "xk": xk, "xv": xv,
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache):
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    s_abs = cache["pos"]
+    d = cfg.d_model
+    # gather the s_abs-th sinusoid row for the current decode position
+    full = sinusoid_pos(cache["k"].shape[2], d, x.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(full, s_abs, 1, axis=0)[None]
+
+    def body(x, inp):
+        lp, kc, vc, xk, xv = inp
+        y, (k_new, v_new) = _dec_layer(
+            cfg, lp, x, None, attn_mode="full", chunk=0,
+            cache={"k": kc, "v": vc, "xk": xk, "xv": xv}, pos=s_abs,
+        )
+        return y, (k_new, v_new)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+    )
+    x = rms_norm(x, params["dec_final"])
+    logits = x @ params["unembed"].astype(x.dtype)
+    new_cache = dict(cache, k=k_all, v=v_all, pos=s_abs + 1)
+    return logits, new_cache
+
+
+def cache_specs(cfg: LMConfig, mesh_sizes: dict, *, batch_axes,
+                seq_axis: str | None):
+    mk = Maker(None, mesh_sizes)
+    head_ax = mk.head_ax(cfg.num_kv_heads)
+    seq = seq_axis if head_ax is None else None
+    kv = P(None, batch_axes, seq, head_ax, None)
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": P()}

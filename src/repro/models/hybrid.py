@@ -1,0 +1,265 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with one SHARED-weight attention
+block applied every ``attn_every`` layers (weights shared, KV cache per
+application site).
+
+The layer stack is a lax.scan over mamba layers; the shared attention
+block is applied inside the scan via lax.cond on (i % attn_every ==
+attn_every - 1), with a dynamic cache-site index i // attn_every.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import LMConfig
+from .layers import (
+    Maker, attention_chunked, attention_full, attn_init, attn_qkv,
+    cast_floats, constrain_batch, constrain_logits, embed_lookup,
+    gated_mlp_apply, gated_mlp_init, rms_norm,
+)
+from .ssm import (
+    mamba_decode_step, mamba_fwd, mamba_init, mamba_init_state,
+)
+from .transformer import _prepend_none, _stack
+
+
+def num_attn_sites(cfg: LMConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+def zamba_init(cfg: LMConfig, key, mesh_sizes: dict | None = None):
+    dtype = jnp.dtype(cfg.param_dtype)
+    mk = Maker(key, mesh_sizes, dtype)
+    d, v = cfg.d_model, cfg.padded_vocab
+
+    def mamba_layer(m):
+        return {"ln": m.make((d,), P(None), init="ones"), "mamba": mamba_init(m, cfg)}
+
+    if mk.abstract:
+        layers = _prepend_none(mamba_layer(mk))
+    else:
+        layers = _stack([mamba_layer(mk) for _ in range(cfg.num_layers)])
+    shared = {
+        "ln1": mk.make((d,), P(None), init="ones"),
+        "attn": attn_init(mk, d, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.resolved_head_dim),
+        "ln2": mk.make((d,), P(None), init="ones"),
+        "mlp": gated_mlp_init(mk, d, cfg.d_ff),
+    }
+    return {
+        "embed": mk.make((v, d), P(mk.first_ax(v), None), scale=0.02),
+        "unembed": mk.make((d, v), P(None, mk.ax("model", v) or mk.first_ax(v)), scale=d**-0.5),
+        "final_norm": mk.make((d,), P(None), init="ones"),
+        "layers": layers,
+        "shared": shared,
+    }
+
+
+def zamba_specs(cfg: LMConfig, mesh_sizes: dict):
+    return zamba_init(cfg, None, mesh_sizes)
+
+
+def _shared_attn_fwd(cfg, sp, x, positions, *, attn_mode, chunk):
+    h = rms_norm(x, sp["ln1"])
+    q, k, v = attn_qkv(sp["attn"], h, cfg, positions)
+    if attn_mode == "chunked":
+        out = attention_chunked(q, k, v, causal=True, chunk=chunk)
+    else:
+        out = attention_full(q, k, v, causal=True)
+    b, s, _, _ = out.shape
+    x = x + out.reshape(b, s, -1) @ sp["attn"]["wo"]
+    h2 = rms_norm(x, sp["ln2"])
+    return x + gated_mlp_apply(sp["mlp"], h2, "silu")
+
+
+def forward_train(cfg: LMConfig, params, tokens, positions, *,
+                  attn_mode: str = "full", chunk: int = 1024,
+                  ssd_chunk: int = 128, remat: bool = True,
+                  batch_axes=None, **_unused):
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain_batch(x, batch_axes)
+    shared = params["shared"]
+    every = cfg.attn_every
+
+    def body(x, inp):
+        i, lp = inp
+        x = x + mamba_fwd(lp["mamba"], rms_norm(x, lp["ln"]), cfg,
+                          chunk=ssd_chunk)
+        x = jax.lax.cond(
+            (i % every) == every - 1,
+            lambda xx: _shared_attn_fwd(cfg, shared, xx, positions,
+                                        attn_mode=attn_mode, chunk=chunk),
+            lambda xx: xx,
+            x,
+        )
+        return constrain_batch(x, batch_axes), None
+
+    fn = jax.checkpoint(body) if remat else body
+    idx = jnp.arange(cfg.num_layers)
+    x, _ = jax.lax.scan(fn, x, (idx, params["layers"]))
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["unembed"].astype(x.dtype)
+
+
+def lm_loss(cfg: LMConfig, params, tokens, labels, positions, **fw):
+    vocab_axis = fw.pop("vocab_axis", None)
+    logits = forward_train(cfg, params, tokens, positions, **fw).astype(jnp.float32)
+    logits = constrain_logits(logits, fw.get("batch_axes"), vocab_axis)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # vocab-parallel CE: one-hot dot stays sharded over V (take_along_axis
+    # would all-gather the full logits on vocab-sharded meshes)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# decode: per-layer mamba states + per-site attention KV caches
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: LMConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    one = mamba_init_state(cfg, batch, dtype)
+    mamba_states = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one
+    )
+    sites = num_attn_sites(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "mamba": mamba_states,
+        "k": jnp.zeros((sites, batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((sites, batch, max_len, hkv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(cfg: LMConfig, mesh_sizes: dict, *, batch_axes,
+                seq_axis: str | None):
+    mk = Maker(None, mesh_sizes)
+    head_ax = mk.head_ax(cfg.num_kv_heads)
+    seq = seq_axis if head_ax is None else None
+    kv = P(None, batch_axes, seq, head_ax, None)
+    return {
+        "mamba": {
+            "ssm": P(None, batch_axes, None, None, None),
+            "conv": P(None, batch_axes, None, None),
+        },
+        "k": kv, "v": kv, "pos": P(),
+    }
+
+
+def prefill(cfg: LMConfig, params, tokens, positions, max_len: int, *,
+            chunk: int = 1024, ssd_chunk: int = 128,
+            cache_dtype=jnp.bfloat16, batch_axes=None):
+    """Run the prompt; return (last logits, decode state): per-layer mamba
+    states + per-site attention KV caches (padded to max_len)."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    shared = params["shared"]
+    every = cfg.attn_every
+    b, s = tokens.shape
+    sites = num_attn_sites(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k_all = jnp.zeros((sites, b, max_len, hkv, hd), cache_dtype)
+    v_all = jnp.zeros((sites, b, max_len, hkv, hd), cache_dtype)
+
+    def body(carry, inp):
+        x, k_all, v_all = carry
+        i, lp = inp
+        y, mst = mamba_fwd(lp["mamba"], rms_norm(x, lp["ln"]), cfg,
+                           chunk=ssd_chunk, return_state=True)
+        x = x + y
+        site = i // every
+
+        def do_attn(args):
+            x, k_all, v_all = args
+            h = rms_norm(x, shared["ln1"])
+            q, k, v = attn_qkv(shared["attn"], h, cfg, positions)
+            out = attention_chunked(q, k, v, causal=True, chunk=chunk)
+            xx = x + out.reshape(b, s, -1) @ shared["attn"]["wo"]
+            h2 = rms_norm(xx, shared["ln2"])
+            xx = xx + gated_mlp_apply(shared["mlp"], h2, "silu")
+            pad = max_len - s
+            kp = jnp.pad(k.astype(cache_dtype),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v.astype(cache_dtype),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k_all2 = jax.lax.dynamic_update_index_in_dim(k_all, kp, site, 0)
+            v_all2 = jax.lax.dynamic_update_index_in_dim(v_all, vp, site, 0)
+            return xx, k_all2, v_all2
+
+        x, k_all, v_all = jax.lax.cond(
+            (i % every) == every - 1, do_attn, lambda a: a, (x, k_all, v_all)
+        )
+        return (constrain_batch(x, batch_axes), k_all, v_all), mst
+
+    idx = jnp.arange(cfg.num_layers)
+    (x, k_all, v_all), mamba_states = jax.lax.scan(
+        body, (x, k_all, v_all), (idx, params["layers"]))
+    x = rms_norm(x[:, -1:, :], params["final_norm"])
+    logits = x @ params["unembed"].astype(x.dtype)
+    state = {"mamba": mamba_states, "k": k_all, "v": v_all,
+             "pos": jnp.asarray(s, jnp.int32)}
+    return logits, state
+
+
+def _shared_attn_decode(cfg, sp, x, k_cache, v_cache, pos, positions):
+    h = rms_norm(x, sp["ln1"])
+    q, k, v = attn_qkv(sp["attn"], h, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    kv_len = jnp.full((x.shape[0],), pos + 1, jnp.int32)
+    out = attention_full(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                         causal=False, kv_len=kv_len)
+    b, s, _, _ = out.shape
+    x = x + out.reshape(b, s, -1) @ sp["attn"]["wo"]
+    h2 = rms_norm(x, sp["ln2"])
+    x = x + gated_mlp_apply(sp["mlp"], h2, "silu")
+    return x, k_cache, v_cache
+
+
+def decode_step(cfg: LMConfig, params, tokens, state, positions):
+    """tokens (B,1) -> (logits, new state). Scan over mamba layers with the
+    shared-attention cond applied at its sites."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    shared = params["shared"]
+    every = cfg.attn_every
+    pos = state["pos"]
+
+    def body(carry, inp):
+        x, k_all, v_all = carry
+        i, lp, mst = inp
+        y, new_mst = mamba_decode_step(
+            lp["mamba"], rms_norm(x, lp["ln"]), mst, cfg)
+        x = x + y
+        site = i // every
+
+        def do_attn(args):
+            x, k_all, v_all = args
+            kc = jax.lax.dynamic_index_in_dim(k_all, site, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(v_all, site, 0, keepdims=False)
+            x, kc, vc = _shared_attn_decode(cfg, shared, x, kc, vc, pos,
+                                            positions)
+            k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, site, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, site, 0)
+            return x, k_all, v_all
+
+        x, k_all, v_all = jax.lax.cond(
+            (i % every) == every - 1, do_attn, lambda a: a, (x, k_all, v_all)
+        )
+        return (x, k_all, v_all), new_mst
+
+    idx = jnp.arange(cfg.num_layers)
+    (x, k_all, v_all), new_mamba = jax.lax.scan(
+        body, (x, state["k"], state["v"]),
+        (idx, params["layers"], state["mamba"]),
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["unembed"].astype(x.dtype)
+    new_state = {"mamba": new_mamba, "k": k_all, "v": v_all, "pos": pos + 1}
+    return logits, new_state

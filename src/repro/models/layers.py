@@ -1,0 +1,387 @@
+"""Shared LM layers: norms, RoPE / M-RoPE, GQA attention, gated MLPs.
+
+All functions are functional (params-in, value-out). Parameter creation
+goes through ``Maker`` which doubles as the sharding-spec builder: with a
+PRNG key it returns initialized arrays; in abstract mode it returns the
+PartitionSpec for each leaf (same code path => init and specs can't drift).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Param builder / spec builder
+# ---------------------------------------------------------------------------
+
+class Maker:
+    """Creates params (key mode) or PartitionSpecs (abstract mode).
+
+    Sharding convention (DESIGN.md §5): 'model' = TP axis, 'data' = FSDP
+    axis. A dim is sharded only if divisible by the axis size; the spec
+    helper ``ax`` silently degrades to replication otherwise (e.g. gemma's
+    8 q-heads on a 16-way model axis).
+    """
+
+    def __init__(self, key, mesh_sizes: dict[str, int] | None = None,
+                 dtype=jnp.float32):
+        self.key = key
+        self.abstract = key is None
+        self.mesh = mesh_sizes or {}
+        self.dtype = dtype
+
+    def ax(self, axis: str | tuple, dim: int):
+        """axis name if dim divides evenly on the mesh, else None."""
+        if isinstance(axis, tuple):
+            size = 1
+            for a in axis:
+                size *= self.mesh.get(a, 1)
+        else:
+            size = self.mesh.get(axis, 1)
+        return axis if size > 1 and dim % size == 0 else None
+
+    def first_ax(self, dim: int, candidates=(("data", "model"), "model", "data")):
+        """First candidate axis (or axis tuple) that divides ``dim``.
+        Used for vocab dims where full 2D sharding may not divide evenly
+        (e.g. qwen3's 151936 vocab on a 256-chip pod -> 'model' only)."""
+        for cand in candidates:
+            if self.ax(cand, dim) is not None:
+                return cand
+        return None
+
+    def head_ax(self, num_heads: int):
+        """TP axis for a fused (heads*head_dim) projection dim: shard only
+        if the *head count* divides the model axis (rope/softmax are
+        per-head; splitting inside a head is not supported)."""
+        size = self.mesh.get("model", 1)
+        return "model" if size > 1 and num_heads % size == 0 else None
+
+    def make(self, shape, spec: P, *, scale: float | None = None,
+             init: str = "normal"):
+        if self.abstract:
+            return spec
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        self.key, sub = jax.random.split(self.key)
+        std = scale if scale is not None else float(shape[0]) ** -0.5
+        return jax.random.normal(sub, shape, self.dtype) * std
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def cast_floats(tree: Any, dtype) -> Any:
+    """Cast float leaves to the compute dtype (mixed-precision forward:
+    bf16 compute against f32 master params held by the optimizer)."""
+    d = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda a: a.astype(d)
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating)
+        else a,
+        tree,
+    )
+
+
+def constrain_batch(x, batch_axes):
+    """Anchor the leading (batch) dim of an activation to the DP axes.
+
+    Without this, XLA's sharding propagation on deep scans can settle on
+    model-sharded/batch-REPLICATED activations (observed: +5-16x activation
+    memory on train cells — EXPERIMENTS.md §Perf iteration act-shard-1).
+    No-op when batch_axes is None (single-device smoke tests).
+    Requires an ambient mesh (`with mesh:`) when enabled.
+    """
+    if batch_axes is None:
+        return x
+    spec = P(batch_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_logits(logits, batch_axes, vocab_axis):
+    """Anchor (B, S, V) logits: batch over DP, vocab over the TP axis.
+    Without the vocab anchor the CE chain (one-hot, lse, unembed grads,
+    Adam states of the embedding) replicates the full vocab dim — observed
+    +20 GiB/dev on qwen1.5-110b train (EXPERIMENTS.md §Perf vocab-1)."""
+    if batch_axes is None and vocab_axis is None:
+        return logits
+    return jax.lax.with_sharding_constraint(
+        logits, P(batch_axes, None, vocab_axis))
+
+
+@jax.custom_vjp
+def embed_lookup(table, tokens):
+    """Embedding lookup with a partition-friendly backward.
+
+    Forward: plain gather. Backward: the natural scatter-add of dtable
+    triggers GSPMD "involuntary full rematerialization" on vocab-sharded
+    tables (the whole (V, d) grad replicates on every chip — observed
+    +14 GiB/dev on qwen1.5-110b train). Instead compute
+    dtable = one_hot(tokens)^T @ dx — a matmul that partitions cleanly
+    over (vocab x data). Costs 2*B*S*V*d FLOPs (~3% of a step), saves the
+    replication (EXPERIMENTS.md §Perf embed-1).
+    """
+    return table[tokens]
+
+
+def _embed_fwd(table, tokens):
+    # the table rides along as a residual only to carry its static
+    # shape/dtype into bwd (it is a live parameter anyway — no extra HBM)
+    return table[tokens], (tokens, table)
+
+
+def _embed_bwd(res, g):
+    tokens, table = res
+    onehot = jax.nn.one_hot(tokens, table.shape[0], dtype=g.dtype)
+    dtable = jnp.einsum("...v,...d->vd", onehot, g).astype(table.dtype)
+    return dtable, None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _inv_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    return theta ** (
+        -jnp.arange(0, head_dim // 2, dtype=dtype) / (head_dim // 2)
+    )
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int -> rotated x."""
+    d = x.shape[-1]
+    inv = _inv_freqs(d, theta, jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def apply_mrope(x, positions, sections: tuple[int, ...], theta: float):
+    """Qwen2-VL M-RoPE. positions: (B, S, 3) for (t, h, w); ``sections``
+    splits the D/2 frequency slots across the three position components."""
+    d = x.shape[-1]
+    inv = _inv_freqs(d, theta, jnp.float32)  # (D/2,)
+    assert sum(sections) == d // 2, (sections, d)
+    comp = []
+    off = 0
+    for i, sec in enumerate(sections):
+        comp.append(
+            positions[..., i:i + 1].astype(jnp.float32) * inv[off:off + sec]
+        )
+        off += sec
+    ang = jnp.concatenate(comp, axis=-1)  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full / q-chunked / decode)
+# ---------------------------------------------------------------------------
+
+def _gqa_logits(q, k, scale):
+    """q: (B, Sq, H, D), k: (B, Sk, Hkv, D) -> (B, H, Sq, Sk)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * scale
+    return logits.reshape(b, h, sq, k.shape[1])
+
+
+def _gqa_out(probs, v):
+    """probs: (B, H, Sq, Sk), v: (B, Sk, Hkv, D) -> (B, Sq, H, D)."""
+    b, h, sq, sk = probs.shape
+    hkv = v.shape[2]
+    g = h // hkv
+    pg = probs.reshape(b, hkv, g, sq, sk)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pg, v)
+    return out.reshape(b, sq, h, out.shape[-1])
+
+
+def attention_full(q, k, v, *, causal: bool, q_offset: int = 0,
+                   kv_len=None):
+    """Materializing attention (training shapes / decode steps).
+
+    kv_len: optional (B,) valid KV length mask for decode with a
+    partially-filled cache.
+    """
+    scale = q.shape[-1] ** -0.5
+    logits = _gqa_logits(q, k, scale)  # (B, H, Sq, Sk)
+    sq, sk = logits.shape[-2], logits.shape[-1]
+    neg = jnp.finfo(logits.dtype).min
+    if causal and sq > 1:
+        rows = jnp.arange(sq)[:, None] + q_offset
+        cols = jnp.arange(sk)[None, :]
+        logits = jnp.where(rows >= cols, logits, neg)
+    if kv_len is not None:
+        mask = jnp.arange(sk)[None, :] < kv_len[:, None]  # (B, Sk)
+        logits = jnp.where(mask[:, None, None, :], logits, neg)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def attention_decode_merge(q, k_cache, v_cache, k_new, v_new, pos):
+    """Decode attention WITHOUT writing the new token into the cache.
+
+    Attends over the (stale) cache masked to ``pos`` entries, then merges
+    the current token's contribution with an online-softmax correction.
+    This lets the decode layer-scan return only the tiny (B,1,Hkv,D) new
+    KV as ys — the full cache is updated once, outside the scan, with a
+    single aliased dynamic-update-slice (EXPERIMENTS.md §Perf decode-1;
+    the naive in-scan update materializes a second full cache as scan ys).
+
+    q: (B,1,H,D); k_cache/v_cache: (B,S,Hkv,D); k_new/v_new: (B,1,Hkv,D).
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = d ** -0.5
+    logits_c = _gqa_logits(q, k_cache, scale)          # (B,H,1,S)
+    neg = jnp.finfo(logits_c.dtype).min
+    sk = k_cache.shape[1]
+    mask = (jnp.arange(sk)[None, :] < pos)             # (1,S)
+    logits_c = jnp.where(mask[:, None, None, :], logits_c, neg)
+    logits_c = logits_c.astype(jnp.float32)
+
+    qg = q.reshape(b, 1, hkv, g, d)
+    l_s = jnp.einsum("bqhgd,bqhd->bhgq", qg, k_new) * scale
+    l_s = l_s.reshape(b, h, 1).astype(jnp.float32)     # (B,H,1)
+
+    m_c = jnp.max(logits_c, axis=-1)                   # (B,H,1)
+    m = jnp.maximum(m_c, l_s)
+    p_c = jnp.exp(logits_c - m[..., None])
+    den_c = jnp.sum(p_c, axis=-1)                      # (B,H,1)
+    num_c = _gqa_out(p_c.astype(q.dtype), v_cache)     # (B,1,H,D)
+    beta = jnp.exp(l_s - m)                            # (B,H,1)
+    v_rep = jnp.repeat(v_new, g, axis=2)               # (B,1,H,D)
+    num = num_c + (beta.transpose(0, 2, 1)[..., None]).astype(q.dtype) * v_rep
+    den = (den_c + beta).transpose(0, 2, 1)[..., None].astype(q.dtype)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def attention_chunked(q, k, v, *, causal: bool, chunk: int = 1024):
+    """Flash-style q-chunked attention: the (Sq x Sk) logits never exist
+    whole; per-chunk transient is (chunk x Sk). Used for prefill_32k.
+    (On real TPUs the Pallas flash kernel replaces this; the jnp version
+    is what the dry-run lowers — same memory behavior class.)"""
+    b, sq, h, d = q.shape
+    if sq % chunk != 0 or sq == 1:
+        return attention_full(q, k, v, causal=causal)
+    n = sq // chunk
+    qc = q.reshape(b, n, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def one(carry, args):
+        i, qi = args
+        out = attention_full(qi, k, v, causal=causal, q_offset=i * chunk)
+        return carry, out
+
+    _, outs = jax.lax.scan(one, None, (jnp.arange(n), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def gated_mlp_apply(p, x, activation: str, use_pallas: bool = False):
+    """SwiGLU / GeGLU: (act(x@wg) * (x@wu)) @ wd  (paper C4 on the LM side)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        shape = x.shape
+        out = kops.fused_swiglu(
+            x.reshape(-1, shape[-1]), p["wg"], p["wu"], p["wd"],
+            activation=activation,
+        )
+        return out.reshape(shape)
+    g = x @ p["wg"]
+    u = x @ p["wu"]
+    act = jax.nn.silu(g) if activation == "silu" else jax.nn.gelu(g, approximate=True)
+    return (act * u) @ p["wd"]
+
+
+def gated_mlp_init(mk: Maker, d: int, f: int):
+    return {
+        "wg": mk.make((d, f), P(mk.ax("data", d), mk.ax("model", f))),
+        "wu": mk.make((d, f), P(mk.ax("data", d), mk.ax("model", f))),
+        "wd": mk.make((f, d), P(mk.ax("model", f), mk.ax("data", d))),
+    }
+
+
+def plain_mlp_init(mk: Maker, d: int, f: int):
+    return {
+        "w1": mk.make((d, f), P(mk.ax("data", d), mk.ax("model", f))),
+        "b1": mk.make((f,), P(mk.ax("model", f)), init="zeros"),
+        "w2": mk.make((f, d), P(mk.ax("model", f), mk.ax("data", d))),
+        "b2": mk.make((d,), P(None), init="zeros"),
+    }
+
+
+def plain_mlp_apply(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"], approximate=True) @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Attention block params
+# ---------------------------------------------------------------------------
+
+def attn_init(mk: Maker, d: int, h: int, hkv: int, hd: int, *,
+              qkv_bias: bool = False, qk_norm: bool = False):
+    p = {
+        "wq": mk.make((d, h * hd), P(mk.ax("data", d), mk.head_ax(h))),
+        "wk": mk.make((d, hkv * hd), P(mk.ax("data", d), mk.head_ax(hkv))),
+        "wv": mk.make((d, hkv * hd), P(mk.ax("data", d), mk.head_ax(hkv))),
+        "wo": mk.make((h * hd, d), P(mk.head_ax(h), mk.ax("data", d))),
+    }
+    if qkv_bias:
+        p["bq"] = mk.make((h * hd,), P(None), init="zeros")
+        p["bk"] = mk.make((hkv * hd,), P(None), init="zeros")
+        p["bv"] = mk.make((hkv * hd,), P(None), init="zeros")
+    if qk_norm:
+        p["q_norm"] = mk.make((hd,), P(None), init="ones")
+        p["k_norm"] = mk.make((hd,), P(None), init="ones")
+    return p
+
+
+def attn_qkv(p, x, cfg, positions):
+    """Project + (qk-norm) + rope. Returns q (B,S,H,D), k/v (B,S,Hkv,D)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if positions is not None:
+        if cfg.mrope_sections:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v

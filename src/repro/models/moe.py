@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch,
+expert-parallel sharding (EP over the 'model' axis).
+
+TPU adaptation (DESIGN.md §2): no dynamic shapes. GShard-style grouped
+dispatch — tokens are grouped by sequence (the group dim shards over
+'data', so routing sorts are local), each group has a static expert
+capacity C = ceil(S * top_k * capacity_factor / E); overflow tokens drop
+(standard on TPU). Dispatch is sort-based (argsort + one scatter + one
+gather) rather than the O(T*E*C) one-hot einsum of the original GShard —
+the MegaBlocks-era formulation, much cheaper at large T.
+
+Shared experts (DeepSeek-MoE) are a dense gated MLP with ff = n_shared *
+d_ff_expert, always on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import Maker, gated_mlp_apply, gated_mlp_init
+
+
+def moe_init(mk: Maker, cfg):
+    d = cfg.d_model
+    m = cfg.moe
+    e, fe = m.num_experts, m.d_ff_expert
+    p = {
+        "router": mk.make((d, e), P(None, mk.ax("model", e)), scale=d**-0.5),
+        "we_gate": mk.make((e, d, fe), P(mk.ax("model", e), mk.ax("data", d), None)),
+        "we_up": mk.make((e, d, fe), P(mk.ax("model", e), mk.ax("data", d), None)),
+        "we_down": mk.make((e, fe, d), P(mk.ax("model", e), None, mk.ax("data", d))),
+    }
+    if m.num_shared:
+        p["shared"] = gated_mlp_init(mk, d, m.num_shared * fe)
+    return p
+
+
+def _dispatch_group(x, gate, idx, num_experts: int, capacity: int):
+    """One group's sort-based dispatch.
+
+    x: (T, d); gate/idx: (T, k). Returns (expert_in (E, C, d), combine
+    info for the gather-back).
+    """
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)                      # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos = jnp.arange(t * k, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    group_start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    rank = pos - group_start                      # rank within expert
+    keep = rank < capacity
+    slot = jnp.where(keep, sorted_e * capacity + rank, num_experts * capacity)
+    token = order // k                            # source token per slot
+    buf = jnp.zeros((num_experts * capacity + 1, x.shape[-1]), x.dtype)
+    buf = buf.at[slot].set(x[token])
+    expert_in = buf[:-1].reshape(num_experts, capacity, x.shape[-1])
+    gate_sorted = gate.reshape(-1)[order]
+    return expert_in, (slot, token, keep, gate_sorted)
+
+
+def _combine_group(expert_out, combine, t: int, k: int):
+    slot, token, keep, gate_sorted = combine
+    flat = expert_out.reshape(-1, expert_out.shape[-1])
+    flat = jnp.concatenate([flat, jnp.zeros_like(flat[:1])], 0)
+    y_sorted = flat[slot] * (gate_sorted * keep)[:, None]
+    out = jnp.zeros((t, expert_out.shape[-1]), expert_out.dtype)
+    return out.at[token].add(y_sorted)
+
+
+def moe_apply(p, x, cfg, *, use_pallas: bool = False, moe_axes=None):
+    """x: (B, S, d) -> (B, S, d). Groups = sequences (shard over data).
+
+    moe_axes: optional (batch_axes, expert_axis) sharding anchor for the
+    dispatched (B, E, C, d) buffers — without it the SPMD partitioner can
+    replicate the x[token] gather across the pod (EXPERIMENTS.md §Perf
+    iteration moe-1).
+    """
+    b, s, d = x.shape
+    m = cfg.moe
+    e, k = m.num_experts, m.top_k
+    capacity = max(k, int(s * k * m.capacity_factor / e))
+
+    logits = x @ p["router"]                      # (B, S, E) in f32
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gate, idx = jax.lax.top_k(probs, k)           # (B, S, k)
+    gate = (gate / (gate.sum(-1, keepdims=True) + 1e-9)).astype(x.dtype)
+
+    expert_in, combine = jax.vmap(
+        lambda xx, gg, ii: _dispatch_group(xx, gg, ii, e, capacity)
+    )(x, gate, idx)                                # expert_in: (B, E, C, d)
+    if moe_axes is not None:
+        bax, eax = moe_axes
+        spec = P(bax, eax, None, None)
+        expert_in = jax.lax.with_sharding_constraint(expert_in, spec)
+
+    # expert FFN with stacked weights (einsum over the expert dim = EP)
+    g = jnp.einsum("becd,edf->becf", expert_in, p["we_gate"])
+    u = jnp.einsum("becd,edf->becf", expert_in, p["we_up"])
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("becf,efd->becd", h, p["we_down"])
+    if moe_axes is not None:
+        bax, eax = moe_axes
+        expert_out = jax.lax.with_sharding_constraint(
+            expert_out, P(bax, eax, None, None))
+
+    y = jax.vmap(lambda eo, cb: _combine_group(eo, cb, s, k))(
+        expert_out, combine
+    )                                              # (B, S, d)
+
+    if m.num_shared:
+        y = y + gated_mlp_apply(p["shared"], x, "silu", use_pallas)
+    return y

@@ -1,0 +1,118 @@
+"""RWKV6 ("Finch") full model: attention-free LM with data-dependent decay.
+
+Decode is O(1) in context length — the long_500k cell's decode step is
+byte-identical to decode at any other length (the state is fixed-size);
+this is the whole point of running the long-context shape on this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import LMConfig
+from .layers import Maker, cast_floats, constrain_batch, constrain_logits, embed_lookup, rms_norm
+from .ssm import rwkv_init_state, rwkv_layer_fwd, rwkv_layer_init
+from .transformer import _prepend_none, _stack
+
+
+def rwkv_init(cfg: LMConfig, key, mesh_sizes: dict | None = None):
+    dtype = jnp.dtype(cfg.param_dtype)
+    mk = Maker(key, mesh_sizes, dtype)
+    d, v = cfg.d_model, cfg.padded_vocab
+    if mk.abstract:
+        layer = _prepend_none(rwkv_layer_init(mk, cfg))
+    else:
+        layer = _stack([rwkv_layer_init(mk, cfg) for _ in range(cfg.num_layers)])
+    return {
+        "embed": mk.make((v, d), P(mk.first_ax(v), None), scale=0.02),
+        "unembed": mk.make((d, v), P(None, mk.ax("model", v) or mk.first_ax(v)), scale=d**-0.5),
+        "final_norm": mk.make((d,), P(None), init="ones"),
+        "layers": layer,
+    }
+
+
+def rwkv_specs(cfg: LMConfig, mesh_sizes: dict):
+    return rwkv_init(cfg, None, mesh_sizes)
+
+
+def rwkv_init_states(cfg: LMConfig, batch: int, dtype=jnp.float32):
+    one = rwkv_init_state(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one
+    )
+
+
+def state_specs(cfg: LMConfig, batch_axes):
+    return {
+        "wkv": P(None, batch_axes, None, None, None),
+        "tm_prev": P(None, batch_axes, None, None),
+        "cm_prev": P(None, batch_axes, None, None),
+    }
+
+
+def forward_train(cfg: LMConfig, params, tokens, positions=None, *,
+                  remat: bool = True, batch_axes=None, **_unused):
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain_batch(x, batch_axes)
+    b = tokens.shape[0]
+    state0 = rwkv_init_state(cfg, b, x.dtype)
+
+    def body(x, lp):
+        y, _ = rwkv_layer_fwd(lp, x, cfg, state0)
+        return constrain_batch(y, batch_axes), None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["unembed"].astype(x.dtype)
+
+
+def lm_loss(cfg: LMConfig, params, tokens, labels, positions=None, **fw):
+    vocab_axis = fw.pop("vocab_axis", None)
+    logits = forward_train(cfg, params, tokens, positions, **fw).astype(jnp.float32)
+    logits = constrain_logits(logits, fw.get("batch_axes"), vocab_axis)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # vocab-parallel CE: one-hot dot stays sharded over V (take_along_axis
+    # would all-gather the full logits on vocab-sharded meshes)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def prefill(cfg: LMConfig, params, tokens, positions=None, *,
+            batch_axes=None):
+    """Run the prompt, returning (last-token logits, stacked final states).
+    RWKV state is O(1) in prompt length — this is just forward_train that
+    keeps each layer's final recurrent state."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain_batch(x, batch_axes)
+    b = tokens.shape[0]
+    state0 = rwkv_init_state(cfg, b, x.dtype)
+
+    def body(x, lp):
+        y, st = rwkv_layer_fwd(lp, x, cfg, state0)
+        return constrain_batch(y, batch_axes), st
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:, :], params["final_norm"])
+    logits = x @ params["unembed"].astype(x.dtype)
+    return logits, states
+
+
+def decode_step(cfg: LMConfig, params, tokens, states, positions=None):
+    """One-token decode. states: stacked (L, ...) per-layer RWKV states."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(x, inp):
+        lp, st = inp
+        y, new_st = rwkv_layer_fwd(lp, x, cfg, st)
+        return y, new_st
+
+    x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["unembed"].astype(x.dtype)
+    return logits, new_states

@@ -1,0 +1,316 @@
+"""State-space models: Mamba2 (chunked SSD) and RWKV6 (Finch).
+
+Mamba2 uses the SSD chunked formulation (matmul-heavy -> MXU-friendly, the
+TPU-native adaptation): within a chunk the recurrence is evaluated as a
+masked (C B^T) quadratic form; across chunks a lax.scan carries the
+(heads, head_dim, state) SSM state. Decode is the O(1) single-step
+recurrence with a rolling conv cache.
+
+RWKV6 implements the data-dependent-decay WKV recurrence with a lax.scan
+over time (exact), plus O(1) decode. Sharding note (DESIGN.md §4): 40 wkv
+heads don't divide a 16-way model axis, so the recurrence shards over
+batch ('data'); channel-mix and projections shard over 'model'.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import Maker, rms_norm
+
+
+# ===========================================================================
+# Mamba2
+# ===========================================================================
+
+def mamba_init(mk: Maker, cfg):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    st = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    kk = cfg.ssm_conv
+    conv_ch = d_in + 2 * st
+    return {
+        "wz": mk.make((d, d_in), P(mk.ax("data", d), mk.ax("model", d_in))),
+        "wx": mk.make((d, d_in), P(mk.ax("data", d), mk.ax("model", d_in))),
+        "wB": mk.make((d, st), P(mk.ax("data", d), None)),
+        "wC": mk.make((d, st), P(mk.ax("data", d), None)),
+        "wdt": mk.make((d, nh), P(mk.ax("data", d), mk.ax("model", nh))),
+        "conv_w": mk.make((kk, conv_ch), P(None, None), scale=0.5),
+        "conv_b": mk.make((conv_ch,), P(None), init="zeros"),
+        "A_log": mk.make((nh,), P(mk.ax("model", nh)), init="zeros"),
+        "D": mk.make((nh,), P(mk.ax("model", nh)), init="ones"),
+        "dt_bias": mk.make((nh,), P(mk.ax("model", nh)), init="zeros"),
+        "norm": mk.make((d_in,), P(mk.ax("model", d_in)), init="ones"),
+        "wo": mk.make((d_in, d), P(mk.ax("model", d_in), mk.ax("data", d))),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over time. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    out = b
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xi * w[i]
+    return out
+
+
+def mamba_fwd(p, x, cfg, *, chunk: int = 128, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d). Chunked SSD.
+
+    return_state=True additionally returns the final
+    {ssm (B,nh,hd,st) f32, conv (B,K-1,C)} state (for prefill)."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    st = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    bb = x @ p["wB"]
+    cc = x @ p["wC"]
+    dt = jax.nn.softplus(x @ p["wdt"] + p["dt_bias"])      # (B,S,nh)
+
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)
+    conv_tail = conv_in[:, -(cfg.ssm_conv - 1):, :]  # rolling cache (prefill)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xin = conv_out[..., :d_in]
+    bb = conv_out[..., d_in:d_in + st]
+    cc = conv_out[..., d_in + st:]
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))            # (nh,) negative
+    la = (dt.astype(jnp.float32) * a)                       # (B,S,nh) log-decay
+    xh = xin.reshape(b, s, nh, hd) * dt[..., None].astype(xin.dtype)
+
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    lac = la.reshape(b, nc, chunk, nh)
+    cums = jnp.cumsum(lac, axis=2)                          # (B,nc,c,nh)
+    xc = xh.reshape(b, nc, chunk, nh, hd)
+    bc = bb.reshape(b, nc, chunk, st)
+    ccc = cc.reshape(b, nc, chunk, st)
+
+    # intra-chunk: y[i] = sum_{j<=i} exp(cums_i - cums_j) (C_i.B_j) xbar_j
+    cb = jnp.einsum("bnis,bnjs->bnij", ccc, bc)             # (B,nc,c,c)
+    li = cums[:, :, :, None, :] - cums[:, :, None, :, :]    # (B,nc,c,c,nh)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    y_intra = jnp.einsum(
+        "bnij,bnijh,bnjhp->bnihp", cb.astype(jnp.float32), lmat,
+        xc.astype(jnp.float32),
+    )
+
+    # inter-chunk: scan carrying state (B,nh,hd,st)
+    decay_out = jnp.exp(cums)                               # (B,nc,c,nh)
+    decay_tot = jnp.exp(cums[:, :, -1, :])                  # (B,nc,nh)
+    decay_in = jnp.exp(cums[:, :, -1:, :] - cums)           # (B,nc,c,nh)
+    chunk_state = jnp.einsum(
+        "bcjh,bcjhp,bcjs->bchps", decay_in, xc.astype(jnp.float32),
+        bc.astype(jnp.float32),
+    )                                                        # (B,nc,nh,hd,st)
+
+    def body(state, inp):
+        c_state, d_tot, c_c, d_out = inp
+        # y_inter[i] = exp(cums_i) * C_i . state
+        y_int = jnp.einsum("bis,bhps,bih->bihp", c_c, state, d_out)
+        state = state * d_tot[..., None, None] + c_state
+        return state, y_int
+
+    state0 = jnp.zeros((b, nh, hd, st), jnp.float32)
+    state_fin, y_inter = jax.lax.scan(
+        body, state0,
+        (chunk_state.transpose(1, 0, 2, 3, 4),
+         decay_tot.transpose(1, 0, 2),
+         ccc.astype(jnp.float32).transpose(1, 0, 2, 3),
+         decay_out.transpose(1, 0, 2, 3)),
+    )                                                        # (nc,B,c,nh,hd)
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    y = y.reshape(b, s, nh, hd).astype(x.dtype)
+    # D skip uses the raw (conv'd) x, not the dt-scaled xbar
+    y = y + xin.reshape(b, s, nh, hd) * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["wo"]
+    if return_state:
+        return out, {"ssm": state_fin, "conv": conv_tail}
+    return out
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32):
+    d_in = cfg.ssm_expand * cfg.d_model
+    st = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * st
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, st), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode_step(p, x, state, cfg):
+    """x: (B, 1, d) -> (y (B,1,d), new state). O(1) in context length."""
+    b, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    st = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    bb = x @ p["wB"]
+    cc = x @ p["wC"]
+    dt = jax.nn.softplus(x @ p["wdt"] + p["dt_bias"])       # (B,1,nh)
+
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)        # (B,1,C)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+    xin = conv_out[..., :d_in]
+    bb = conv_out[..., d_in:d_in + st]
+    cc = conv_out[..., d_in + st:]
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0].astype(jnp.float32) * a)        # (B,nh)
+    xh = (xin.reshape(b, nh, hd) * dt[:, 0, :, None]).astype(jnp.float32)
+    kv = jnp.einsum("bhp,bs->bhps", xh, bb[:, 0].astype(jnp.float32))
+    ssm = state["ssm"] * decay[..., None, None] + kv
+    y = jnp.einsum("bhps,bs->bhp", ssm, cc[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + xin.reshape(b, nh, hd) * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["wo"], {"ssm": ssm, "conv": new_conv}
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+
+def rwkv_layer_init(mk: Maker, cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    lora = 64
+    return {
+        "ln1": mk.make((d,), P(None), init="ones"),
+        "ln2": mk.make((d,), P(None), init="ones"),
+        # time-mix
+        "mu": mk.make((5, d), P(None, None), scale=0.1),     # r,k,v,g,w shifts
+        "wr": mk.make((d, d), P(mk.ax("data", d), None)),
+        "wk": mk.make((d, d), P(mk.ax("data", d), None)),
+        "wv": mk.make((d, d), P(mk.ax("data", d), None)),
+        "wgate": mk.make((d, d), P(mk.ax("data", d), None)),
+        "wo": mk.make((d, d), P(None, mk.ax("data", d))),
+        "w0": mk.make((d,), P(None), init="zeros"),
+        "w_lora_a": mk.make((d, lora), P(mk.ax("data", d), None)),
+        "w_lora_b": mk.make((lora, d), P(None, None), scale=0.01),
+        "u": mk.make((nh, hd), P(None, None), scale=0.1),    # bonus
+        "gn": mk.make((d,), P(None), init="ones"),           # per-head norm
+        # channel-mix
+        "mu_ck": mk.make((d,), P(None), scale=0.1),
+        "mu_cr": mk.make((d,), P(None), scale=0.1),
+        "wck": mk.make((d, cfg.d_ff), P(mk.ax("data", d), mk.ax("model", cfg.d_ff))),
+        "wcv": mk.make((cfg.d_ff, d), P(mk.ax("model", cfg.d_ff), mk.ax("data", d))),
+        "wcr": mk.make((d, d), P(mk.ax("data", d), None)),
+    }
+
+
+def _token_shift(x, x_prev):
+    """shift right by one; x_prev is the last token of the previous call
+    (zeros at sequence start). x: (B,S,d), x_prev: (B,1,d)."""
+    return jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+
+
+def _rwkv_decay(p, xw):
+    w_raw = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    # data-dependent decay in (0, 1): w = exp(-exp(w_raw)), clamped
+    return jnp.exp(-jnp.exp(jnp.clip(w_raw.astype(jnp.float32), -8.0, 4.0)))
+
+
+def rwkv_time_mix(p, x, cfg, state, x_prev, *, time_chunk: int = 256):
+    """WKV6: two-level time scan. x: (B,S,d); state: (B,H,K,V) f32.
+
+    The recurrence is scanned over time in CHECKPOINTED chunks: the outer
+    scan saves only the per-chunk state carry; per-step residuals inside a
+    chunk are rematerialized during backward. Without this the backward
+    pass keeps every step's (B,H,K,V) state alive (measured 270 GiB/dev on
+    the train_4k cell — EXPERIMENTS.md §Perf iteration rwkv-1).
+    """
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    xs = _token_shift(x, x_prev)
+    mix = [x + (xs - x) * p["mu"][i] for i in range(5)]
+    xr, xk, xv, xg, xw = mix
+    r = (xr @ p["wr"]).reshape(b, s, nh, hd)
+    k = (xk @ p["wk"]).reshape(b, s, nh, hd)
+    v = (xv @ p["wv"]).reshape(b, s, nh, hd)
+    g = jax.nn.silu(xg @ p["wgate"])
+    w = _rwkv_decay(p, xw).reshape(b, s, nh, hd)            # (B,S,H,K)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp                                # (B,H,K/V)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, st + p["u"][..., None] * kv)
+        st = wt[..., None] * st + kv
+        return st, y
+
+    seq = (
+        r.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        w.transpose(1, 0, 2, 3),
+    )
+    if s % time_chunk == 0 and s > time_chunk:
+        nc = s // time_chunk
+        seq_c = jax.tree.map(
+            lambda a: a.reshape((nc, time_chunk) + a.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_step(st, chunk_inp):
+            return jax.lax.scan(step, st, chunk_inp)
+
+        state, ys = jax.lax.scan(chunk_step, state, seq_c)
+        ys = ys.reshape((s,) + ys.shape[2:])
+    else:
+        state, ys = jax.lax.scan(step, state, seq)          # ys: (S,B,H,V)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y.reshape(b, s, nh, hd), p["gn"].reshape(nh, hd)).reshape(b, s, d)
+    out = (y * g) @ p["wo"]
+    return out, state, x[:, -1:, :]
+
+
+def rwkv_channel_mix(p, x, x_prev):
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * p["mu_ck"]
+    xr = x + (xs - x) * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    return (k @ p["wcv"]) * jax.nn.sigmoid(xr @ p["wcr"]), x[:, -1:, :]
+
+
+def rwkv_layer_fwd(p, x, cfg, state):
+    """state: dict(wkv (B,H,K,V), tm_prev (B,1,d), cm_prev (B,1,d))."""
+    h, wkv, tm_prev = rwkv_time_mix(
+        p, rms_norm(x, p["ln1"]), cfg, state["wkv"], state["tm_prev"]
+    )
+    x = x + h
+    h2, cm_prev = rwkv_channel_mix(p, rms_norm(x, p["ln2"]), state["cm_prev"])
+    x = x + h2
+    return x, {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+
+def rwkv_init_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    return {
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "tm_prev": jnp.zeros((batch, 1, d), dtype),
+        "cm_prev": jnp.zeros((batch, 1, d), dtype),
+    }

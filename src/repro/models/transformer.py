@@ -1,0 +1,316 @@
+"""Decoder-only transformer LM (dense + MoE): train / prefill / decode.
+
+Covers llama3, gemma (GeGLU), qwen3 (qk_norm), qwen1.5 (qkv bias),
+phi3.5-moe, deepseek-moe, qwen2-vl (M-RoPE via (B,S,3) positions).
+
+Layer stacking: parameters carry a leading L axis; the forward runs
+``lax.scan`` over layers with jax.checkpoint (remat) by default. NOTE for
+roofline readers: XLA cost_analysis counts a scan body ONCE — the
+benchmark/roofline code multiplies by the trip count (benchmarks/roofline
+"analytic" column) or lowers with unroll=True where compile cost permits.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import LMConfig
+from .layers import (
+    Maker,
+    cast_floats,
+    constrain_batch,
+    constrain_logits,
+    embed_lookup,
+    attention_chunked,
+    attention_full,
+    attn_init,
+    attn_qkv,
+    gated_mlp_apply,
+    gated_mlp_init,
+    rms_norm,
+)
+from .moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(mk: Maker, cfg: LMConfig):
+    d = cfg.d_model
+    p = {
+        "ln1": mk.make((d,), P(None), init="ones"),
+        "ln2": mk.make((d,), P(None), init="ones"),
+        "attn": attn_init(
+            mk, d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        ),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_init(mk, cfg)
+    else:
+        p["mlp"] = gated_mlp_init(mk, d, cfg.d_ff)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _prepend_none(spec_tree):
+    return jax.tree.map(
+        lambda s: P(None, *s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def decoder_init(cfg: LMConfig, key, mesh_sizes: dict | None = None):
+    """key=None -> PartitionSpec tree (same structure as params)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    mk = Maker(key, mesh_sizes, dtype)
+    d, v = cfg.d_model, cfg.padded_vocab
+    if mk.abstract:
+        layer = _prepend_none(_layer_init(mk, cfg))
+    else:
+        layers = []
+        for _ in range(cfg.num_layers):
+            layers.append(_layer_init(mk, cfg))
+        layer = _stack(layers)
+    # V shards over 'model' ONLY where it feeds the logits matmul: a
+    # ('data','model') V-sharding conflicts with batch-over-'data' logits
+    # and XLA replicates the whole CE chain (gemma: +8 GiB/dev, §Perf
+    # vocab-2). The input-side gather table keeps 2D sharding (untied).
+    logit_vax = mk.ax("model", v) or mk.first_ax(v)
+    embed_spec = (P(logit_vax, None) if cfg.tie_embeddings
+                  else P(mk.first_ax(v), None))
+    params = {
+        "embed": mk.make((v, d), embed_spec, scale=0.02),
+        "final_norm": mk.make((d,), P(None), init="ones"),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = mk.make(
+            (d, v), P(None, logit_vax), scale=d**-0.5
+        )
+    return params
+
+
+def decoder_specs(cfg: LMConfig, mesh_sizes: dict):
+    return decoder_init(cfg, None, mesh_sizes)
+
+
+# ---------------------------------------------------------------------------
+# layer forward
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: LMConfig, p, x, positions, *, attn_mode: str,
+               chunk: int, cache=None, use_pallas: bool = False,
+               moe_axes=None):
+    """cache: None (train/prefill-no-cache) or dict(k, v, pos) for decode.
+
+    Returns (x, new_kv) where new_kv is (k, v) in prefill mode, the
+    updated cache tensors in decode mode, or None.
+    """
+    h = rms_norm(x, p["ln1"])
+    q, k, v = attn_qkv(p["attn"], h, cfg, positions)
+    new_kv = None
+    if cache is not None and attn_mode == "decode":
+        # insert this step's k/v at position cache["pos"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache["pos"], axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache["pos"], axis=1
+        )
+        kv_len = jnp.full((x.shape[0],), cache["pos"] + 1, jnp.int32)
+        out = attention_full(
+            q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+            causal=False, kv_len=kv_len,
+        )
+        new_kv = (k_cache, v_cache)
+    elif attn_mode == "chunked":
+        out = attention_chunked(q, k, v, causal=True, chunk=chunk)
+        new_kv = (k, v)
+    else:
+        out = attention_full(q, k, v, causal=True)
+        new_kv = (k, v)
+    b, s, _, _ = out.shape
+    x = x + out.reshape(b, s, -1) @ p["attn"]["wo"]
+
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.is_moe:
+        x = x + moe_apply(p["moe"], h2, cfg, use_pallas=use_pallas,
+                          moe_axes=moe_axes)
+    else:
+        x = x + gated_mlp_apply(p["mlp"], h2, cfg.activation, use_pallas)
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# public forwards
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    x = params["embed"][tokens]
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def _unembed(cfg, params, x):
+    x = rms_norm(x, params["final_norm"])
+    table = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return x @ table.astype(x.dtype)
+
+
+def forward_train(cfg: LMConfig, params, tokens, positions, *,
+                  attn_mode: str = "full", chunk: int = 1024,
+                  remat: bool = True, unroll: bool = False,
+                  use_pallas: bool = False, batch_axes=None,
+                  layer_block: int | None = None, moe_axes=None):
+    """tokens (B, S) -> logits (B, S, V).
+
+    layer_block: nested-scan remat — group layers into blocks of this size
+    and checkpoint per BLOCK (sqrt-style memory policy: saved carries go
+    from L to L/block + block at one extra recompute). Used for the
+    80-layer 110B train cell.
+    """
+    params = cast_floats(params, cfg.compute_dtype)
+    x = constrain_batch(_embed(cfg, params, tokens), batch_axes)
+
+    def body(x, lp):
+        y, _ = _layer_fwd(cfg, lp, x, positions, attn_mode=attn_mode,
+                          chunk=chunk, use_pallas=use_pallas,
+                          moe_axes=moe_axes)
+        return constrain_batch(y, batch_axes), None
+
+    if unroll:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+    elif layer_block and cfg.num_layers % layer_block == 0:
+        grouped = jax.tree.map(
+            lambda a: a.reshape(
+                (cfg.num_layers // layer_block, layer_block) + a.shape[1:]),
+            params["layers"])
+
+        @jax.checkpoint
+        def block_fn(x, gp):
+            # inner layers ALSO checkpointed: during block recompute the
+            # backward holds one layer's internals, not all `layer_block`
+            y, _ = jax.lax.scan(jax.checkpoint(body), x, gp)
+            return y, None
+
+        x, _ = jax.lax.scan(block_fn, x, grouped)
+    else:
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+    return _unembed(cfg, params, x)
+
+
+def lm_loss(cfg: LMConfig, params, tokens, labels, positions, **fw_kw):
+    """Next-token cross-entropy (labels = tokens shifted by caller)."""
+    vocab_axis = fw_kw.pop("vocab_axis", None)
+    logits = forward_train(cfg, params, tokens, positions, **fw_kw)
+    logits = constrain_logits(logits.astype(jnp.float32),
+                              fw_kw.get("batch_axes"), vocab_axis)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # vocab-parallel CE: one-hot dot stays sharded over V (take_along_axis
+    # would all-gather the full logits on vocab-sharded meshes)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_len, hkv, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: LMConfig, mesh_sizes: dict, *, batch_axes,
+                seq_axis: str | None):
+    """PartitionSpecs for the KV cache: batch over DP axes; seq over
+    ``seq_axis`` (sequence-parallel KV) when kv-heads can't shard."""
+    mk = Maker(None, mesh_sizes)
+    head_ax = mk.head_ax(cfg.num_kv_heads)
+    seq = seq_axis if head_ax is None else None
+    kv_spec = P(None, batch_axes, seq, head_ax, None)
+    return {"k": kv_spec, "v": kv_spec, "pos": P()}
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache, positions, *,
+                use_pallas: bool = False):
+    """One-token decode. tokens (B, 1) -> (logits (B, 1, V), new cache).
+
+    Merge-softmax decode (§Perf decode-1): the layer scan reads the stale
+    cache and returns only the new token's (B,1,Hkv,D) KV per layer; the
+    full cache is then updated ONCE with a donation-aliased
+    dynamic-update-slice, instead of materializing a second full cache as
+    the scan's stacked ys.
+    """
+    from .layers import attention_decode_merge
+
+    params = cast_floats(params, cfg.compute_dtype)
+    x = _embed(cfg, params, tokens)
+    pos = cache["pos"]
+
+    def body(x, inputs):
+        lp, k_cache, v_cache = inputs
+        h = rms_norm(x, lp["ln1"])
+        q, k_new, v_new = attn_qkv(lp["attn"], h, cfg, positions)
+        out = attention_decode_merge(
+            q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+            k_new.astype(q.dtype), v_new.astype(q.dtype), pos)
+        b, s, _, _ = out.shape
+        x = x + out.reshape(b, s, -1) @ lp["attn"]["wo"]
+        h2 = rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            x = x + moe_apply(lp["moe"], h2, cfg, use_pallas=use_pallas)
+        else:
+            x = x + gated_mlp_apply(lp["mlp"], h2, cfg.activation,
+                                    use_pallas)
+        return x, (k_new.astype(cache["k"].dtype),
+                   v_new.astype(cache["v"].dtype))
+
+    x, (k_news, v_news) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    logits = _unembed(cfg, params, x)
+    # one aliased update of the whole stacked cache at [:, :, pos, :, :]
+    z = jnp.zeros((), jnp.int32)
+    k_all = jax.lax.dynamic_update_slice(
+        cache["k"], k_news, (z, z, pos, z, z))
+    v_all = jax.lax.dynamic_update_slice(
+        cache["v"], v_news, (z, z, pos, z, z))
+    new_cache = {"k": k_all, "v": v_all, "pos": pos + 1}
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params, tokens, positions, max_len: int, *,
+            chunk: int = 1024, use_pallas: bool = False,
+            cache_dtype=jnp.bfloat16, batch_axes=None, moe_axes=None):
+    """Prefill: forward over the prompt, build the KV cache."""
+    params = cast_floats(params, cfg.compute_dtype)
+    x = constrain_batch(_embed(cfg, params, tokens), batch_axes)
+    b, s = tokens.shape
+
+    def body(x, lp):
+        y, (k, v) = _layer_fwd(cfg, lp, x, positions,
+                               attn_mode="chunked", chunk=chunk,
+                               use_pallas=use_pallas, moe_axes=moe_axes)
+        return (constrain_batch(y, batch_axes),
+                (k.astype(cache_dtype), v.astype(cache_dtype)))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    pad = max_len - s
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    logits = _unembed(cfg, params, x[:, -1:, :])
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}

@@ -1,0 +1,10 @@
+"""Optimizer substrate: Adam/AdamW, schedules (Eq. 14), grad transforms."""
+from .adam import AdamConfig, adam_init, adam_update
+from .grad import clip_by_global_norm, compress, decompress, ef_init, global_norm
+from .schedule import cosine_annealing, scaled_init_lr
+
+__all__ = [
+    "AdamConfig", "adam_init", "adam_update", "clip_by_global_norm",
+    "compress", "decompress", "ef_init", "global_norm",
+    "cosine_annealing", "scaled_init_lr",
+]

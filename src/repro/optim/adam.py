@@ -1,0 +1,55 @@
+"""Adam / AdamW in pure JAX (paper §IV uses Adam).
+
+Functional API mirroring optax: ``init(params) -> state``,
+``update(grads, state, params, lr) -> (new_params, new_state)``.
+State is a plain pytree -> checkpointable with runtime.checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # 0 => plain Adam
+
+
+def adam_init(params: Any) -> dict:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {
+        "mu": zeros,
+        "nu": jax.tree.map(jnp.zeros_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(
+    grads: Any,
+    state: dict,
+    params: Any,
+    lr: jnp.ndarray | float,
+    cfg: AdamConfig = AdamConfig(),
+) -> tuple[Any, dict]:
+    count = state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def step(p, m, v):
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * p
+        return p - lr * upd
+
+    new_params = jax.tree.map(step, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (paper §III-C 'Learning Rate Schedule', Eq. 14).
+
+- ``scaled_init_lr``: the paper's large-batch rule
+      init_LR = batchsize / k * 0.0003,  k = 128.
+- ``cosine_annealing``: the paper's scheduler, with optional linear warmup
+  (warmup is the standard large-batch stabilizer; 0 disables it to match
+  the paper exactly).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scaled_init_lr(batch_size: int, k: int = 128, base_lr: float = 3e-4) -> float:
+    """Eq. 14: LR grows linearly with the global batch size."""
+    return batch_size / k * base_lr
+
+
+def cosine_annealing(
+    step: jnp.ndarray,
+    total_steps: int,
+    init_lr: float,
+    *,
+    warmup_steps: int = 0,
+    min_lr_ratio: float = 0.0,
+):
+    step_f = jnp.asarray(step, jnp.float32)
+    warm = init_lr * step_f / jnp.maximum(warmup_steps, 1)
+    prog = (step_f - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = init_lr * (
+        min_lr_ratio + (1 - min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    )
+    return jnp.where(step_f < warmup_steps, warm, cos)

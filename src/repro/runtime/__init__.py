@@ -1,0 +1,10 @@
+"""Distributed runtime: checkpointing, elasticity, fault tolerance."""
+from .checkpoint import latest_step, list_checkpoints, restore_checkpoint, save_checkpoint
+from .elastic import elastic_restore, per_device_batch, reshard
+from .fault import FaultInjector, StragglerWatch, run_with_restarts
+
+__all__ = [
+    "latest_step", "list_checkpoints", "restore_checkpoint", "save_checkpoint",
+    "elastic_restore", "per_device_batch", "reshard",
+    "FaultInjector", "StragglerWatch", "run_with_restarts",
+]

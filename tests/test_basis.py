@@ -1,0 +1,87 @@
+"""Basis functions: envelope equivalence (paper Eq. 12 vs 13), sRBF, Fourier."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import basis
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(st.lists(st.floats(0.0, 1.0, width=32), min_size=1, max_size=64),
+       st.sampled_from([4, 6, 8, 12]))
+@settings(max_examples=200, deadline=None)
+def test_envelope_factored_equals_reference(xs, p):
+    """Paper C5: Eq. 13 (factored, corrected sign) == Eq. 12 exactly."""
+    xi = jnp.asarray(xs, jnp.float32)
+    ref = basis.envelope_reference(xi, p)
+    fac = basis.envelope_factored(xi, p)
+    # f32 pow() reassociation noise scales with the O(p^2) coefficients
+    # (p=12 -> ~182 * f32-eps ~ 2e-5); forms are algebraically identical
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(fac),
+                               rtol=1e-4, atol=2e-4)
+
+
+def test_envelope_smooth_cutoff():
+    """u(1) = u'(1) = 0 (smooth cutoff at r_cut)."""
+    for p in (6, 8):
+        u = basis.envelope_factored(jnp.asarray(1.0), p)
+        du = jax.grad(lambda x: basis.envelope_factored(x, p))(jnp.asarray(1.0))
+        assert abs(float(u)) < 1e-5
+        assert abs(float(du)) < 1e-4
+    assert abs(float(basis.envelope_factored(jnp.asarray(0.0), 8)) - 1.0) < 1e-6
+
+
+@pytest.mark.parametrize("n", [1, 31, 64])
+def test_smooth_rbf_shapes_and_finiteness(n):
+    r = jnp.linspace(0.1, 6.0, 57)
+    freqs = basis.rbf_frequencies(n)
+    out = basis.smooth_rbf(r, freqs, 6.0, 8)
+    assert out.shape == (57, n)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # vanishes at the cutoff
+    edge = basis.smooth_rbf(jnp.asarray([6.0]), freqs, 6.0, 8)
+    assert float(jnp.abs(edge).max()) < 1e-5
+
+
+def test_smooth_rbf_padded_zero_distance_safe():
+    out = basis.smooth_rbf(jnp.asarray([0.0, 3.0]), basis.rbf_frequencies(8), 6.0)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_fourier_basis_values():
+    th = jnp.asarray([0.3, 1.2])
+    out = basis.fourier_basis(th, 31)
+    assert out.shape == (2, 31)
+    # DC term
+    np.testing.assert_allclose(
+        np.asarray(out[:, 0]), 1 / np.sqrt(2) / np.sqrt(np.pi), rtol=1e-6)
+    # first cosine / sine harmonics
+    np.testing.assert_allclose(
+        np.asarray(out[:, 1]), np.cos(np.asarray(th)) / np.sqrt(np.pi), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(out[:, 16]), np.sin(np.asarray(th)) / np.sqrt(np.pi), rtol=1e-5)
+
+
+def test_geometry_differentiable_and_consistent():
+    from repro.core import BatchCapacities, Crystal, batch_crystals, build_graph
+
+    rng = np.random.default_rng(3)
+    c = Crystal(lattice=np.eye(3) * 4.5, frac_coords=rng.random((4, 3)),
+                atomic_numbers=rng.integers(1, 10, 4))
+    g = build_graph(c)
+    batch = batch_crystals([c], [g], BatchCapacities(8, 512, 2048))
+    vec, dist, cos_t, theta = basis.compute_geometry(batch)
+    # distances match numpy recomputation
+    cart = c.cart_coords()
+    v0 = (cart[g.bond_nbr] + g.bond_image @ c.lattice - cart[g.bond_center])
+    np.testing.assert_allclose(
+        np.asarray(dist[:g.num_bonds]), np.linalg.norm(v0, axis=-1), rtol=1e-4)
+    # strain derivative exists
+    def e(strain):
+        _, d, _, _ = basis.compute_geometry(batch, strain=strain)
+        return jnp.sum(d)
+    gs = jax.grad(e)(jnp.zeros((1, 3, 3), jnp.float32))
+    assert bool(jnp.all(jnp.isfinite(gs)))

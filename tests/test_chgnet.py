@@ -1,0 +1,149 @@
+"""CHGNet model: variants, physics properties, paper claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchCapacities, Crystal, LossWeights, batch_crystals, build_graph,
+    chgnet_apply, chgnet_init, chgnet_loss, param_count,
+)
+from repro.core.chgnet import CHGNetConfig
+
+
+def _batch(seed=0, ns=(5, 7), caps=None):
+    rng = np.random.default_rng(seed)
+    cs = [Crystal(lattice=np.eye(3) * 4.3 + rng.normal(0, .05, (3, 3)),
+                  frac_coords=rng.random((n, 3)),
+                  atomic_numbers=rng.integers(1, 90, n),
+                  energy=float(rng.normal()), forces=rng.normal(0, .1, (n, 3)),
+                  stress=rng.normal(0, .1, (3, 3)),
+                  magmoms=np.abs(rng.normal(0, 1, n)))
+          for n in ns]
+    gs = [build_graph(c) for c in cs]
+    caps = caps or BatchCapacities(
+        atoms=sum(ns) + 4, bonds=sum(g.num_bonds for g in gs) + 8,
+        angles=sum(g.num_angles for g in gs) + 8)
+    return batch_crystals(cs, gs, caps), cs, gs
+
+
+@pytest.mark.parametrize("readout", ["direct", "autodiff"])
+@pytest.mark.parametrize("variant", ["fast", "reference"])
+def test_forward_shapes_no_nan(readout, variant):
+    batch, _, _ = _batch()
+    cfg = CHGNetConfig(readout=readout, block_variant=variant)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    out = chgnet_apply(params, cfg, batch)
+    assert out["energy"].shape == (2,)
+    assert out["forces"].shape == (batch.atom_cap, 3)
+    assert out["stress"].shape == (2, 3, 3)
+    assert out["magmom"].shape == (batch.atom_cap,)
+    for v in out.values():
+        assert bool(jnp.all(jnp.isfinite(v)))
+
+
+def test_param_count_near_paper():
+    """Paper Table I: 429.1K (F/S head) / 412.5K (reference)."""
+    direct = param_count(chgnet_init(jax.random.PRNGKey(0),
+                                     CHGNetConfig(readout="direct")))
+    auto = param_count(chgnet_init(jax.random.PRNGKey(0),
+                                   CHGNetConfig(readout="autodiff")))
+    assert abs(direct - 429_100) / 429_100 < 0.05
+    assert abs(auto - 412_500) / 412_500 < 0.05
+    assert direct > auto  # heads add parameters, as in the paper
+
+
+def test_fast_and_reference_blocks_differ_but_are_close_at_init():
+    """Dependency elimination changes the function (different inputs per
+    Eq. 10 vs 11) — outputs must differ; both finite."""
+    batch, _, _ = _batch()
+    cfg_f = CHGNetConfig(block_variant="fast")
+    cfg_r = CHGNetConfig(block_variant="reference")
+    params = chgnet_init(jax.random.PRNGKey(0), cfg_f)
+    e_f = chgnet_apply(params, cfg_f, batch)["energy"]
+    e_r = chgnet_apply(params, cfg_r, batch)["energy"]
+    assert not bool(jnp.allclose(e_f, e_r))
+
+
+def test_mlp_impls_agree():
+    batch, _, _ = _batch()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    outs = {}
+    for impl in ("ref", "packed", "pallas"):
+        cfg = CHGNetConfig(mlp_impl=impl)
+        outs[impl] = chgnet_apply(params, cfg, batch)
+    for k in outs["ref"]:
+        np.testing.assert_allclose(
+            np.asarray(outs["ref"][k]), np.asarray(outs["packed"][k]),
+            atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(outs["packed"][k]), np.asarray(outs["pallas"][k]),
+            atol=2e-4)
+
+
+def test_agg_impls_agree():
+    batch, _, _ = _batch()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    a = chgnet_apply(params, CHGNetConfig(agg_impl="scatter"), batch)
+    b = chgnet_apply(params, CHGNetConfig(agg_impl="matmul"), batch)
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   atol=1e-4)
+
+
+def test_energy_extensive_under_padding():
+    """Extra padding capacity must not change any prediction."""
+    batch1, cs, gs = _batch()
+    caps2 = BatchCapacities(batch1.atom_cap + 32, batch1.bond_cap + 64,
+                            batch1.angle_cap + 64)
+    batch2 = batch_crystals(cs, gs, caps2)
+    cfg = CHGNetConfig()
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    o1 = chgnet_apply(params, cfg, batch1)
+    o2 = chgnet_apply(params, cfg, batch2)
+    np.testing.assert_allclose(np.asarray(o1["energy"]),
+                               np.asarray(o2["energy"]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o1["stress"]),
+                               np.asarray(o2["stress"]), atol=1e-4)
+
+
+def test_autodiff_force_matches_finite_difference():
+    """Reference readout: F = -dE/dx (centered finite differences)."""
+    rng = np.random.default_rng(7)
+    c = Crystal(lattice=np.eye(3) * 4.5, frac_coords=rng.random((4, 3)),
+                atomic_numbers=rng.integers(1, 20, 4))
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout="autodiff", num_blocks=1)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+
+    def energy_at(cart_shift):
+        c2 = Crystal(lattice=c.lattice,
+                     frac_coords=(c.cart_coords() + cart_shift)
+                     @ np.linalg.inv(c.lattice),
+                     atomic_numbers=c.atomic_numbers)
+        batch = batch_crystals([c2], [g], caps)  # same topology, moved atoms
+        return float(chgnet_apply(params, cfg, batch)["energy"][0])
+
+    batch = batch_crystals([c], [g], caps)
+    forces = np.asarray(chgnet_apply(params, cfg, batch)["forces"])
+    eps = 1e-3
+    for (i, k) in [(0, 0), (1, 2), (3, 1)]:
+        dx = np.zeros((4, 3))
+        dx[i, k] = eps
+        f_num = -(energy_at(dx) - energy_at(-dx)) / (2 * eps)
+        assert abs(f_num - forces[i, k]) < 5e-3 * max(1, abs(f_num)) + 1e-3
+
+
+def test_loss_and_grads_finite_all_variants():
+    batch, _, _ = _batch()
+    for readout in ("direct", "autodiff"):
+        cfg = CHGNetConfig(readout=readout)
+        params = chgnet_init(jax.random.PRNGKey(1), cfg)
+
+        def loss_fn(p):
+            pred = chgnet_apply(p, cfg, batch)
+            return chgnet_loss(pred, batch, LossWeights())[0]
+
+        g = jax.grad(loss_fn)(params)
+        assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))

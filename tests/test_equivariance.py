@@ -1,0 +1,125 @@
+"""Paper §III-B claims: Force-head rotation equivariance (Eq. 8), energy
+rotation invariance, and synthetic-label physical consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BatchCapacities, Crystal, batch_crystals, build_graph, chgnet_apply, chgnet_init
+from repro.core.chgnet import CHGNetConfig
+
+
+def random_rotation(rng) -> np.ndarray:
+    a = rng.normal(size=(3, 3))
+    q, r = np.linalg.qr(a)
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def _crystal(rng, n=5):
+    return Crystal(lattice=np.eye(3) * 4.4 + rng.normal(0, .05, (3, 3)),
+                   frac_coords=rng.random((n, 3)),
+                   atomic_numbers=rng.integers(1, 60, n))
+
+
+def _rotate(c: Crystal, rot: np.ndarray) -> Crystal:
+    # rotate the lattice; frac coords unchanged -> cart coords rotate
+    return Crystal(lattice=c.lattice @ rot.T, frac_coords=c.frac_coords,
+                   atomic_numbers=c.atomic_numbers)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_force_head_rotation_equivariance(seed):
+    """F(R x) = R F(x) — the paper's Eq. 8, exact up to float error."""
+    rng = np.random.default_rng(seed)
+    c = _crystal(rng)
+    rot = random_rotation(rng)
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout="direct")
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+
+    f1 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c], [g], caps))["forces"])
+    c_rot = _rotate(c, rot)
+    g_rot = build_graph(c_rot)
+    assert g_rot.num_bonds == g.num_bonds  # rotation preserves topology
+    f2 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c_rot], [g_rot], caps))["forces"])
+    n = c.num_atoms
+    np.testing.assert_allclose(f2[:n], f1[:n] @ rot.T, atol=2e-4)
+
+
+@pytest.mark.parametrize("readout", ["direct", "autodiff"])
+def test_energy_rotation_invariance(readout):
+    rng = np.random.default_rng(4)
+    c = _crystal(rng)
+    rot = random_rotation(rng)
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout=readout)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    e1 = chgnet_apply(params, cfg, batch_crystals([c], [g], caps))["energy"]
+    c2 = _rotate(c, rot)
+    e2 = chgnet_apply(params, cfg,
+                      batch_crystals([c2], [build_graph(c2)], caps))["energy"]
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=5e-4)
+
+
+def test_autodiff_forces_rotation_equivariant():
+    """The conservative readout is equivariant by construction — check."""
+    rng = np.random.default_rng(5)
+    c = _crystal(rng, n=4)
+    rot = random_rotation(rng)
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout="autodiff", num_blocks=1)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    f1 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c], [g], caps))["forces"])
+    c2 = _rotate(c, rot)
+    f2 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c2], [build_graph(c2)], caps))["forces"])
+    n = c.num_atoms
+    np.testing.assert_allclose(f2[:n], f1[:n] @ rot.T, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# synthetic label physics (the training target is physically consistent)
+# ---------------------------------------------------------------------------
+
+def test_synthetic_forces_are_exact_gradients():
+    from repro.data.synthetic import SyntheticConfig, make_dataset, _morse
+
+    ds = make_dataset(SyntheticConfig(num_crystals=2, max_atoms=10, seed=0))
+    c, g = ds.crystals[0], ds.graphs[0]
+    cart = c.cart_coords()
+    inv = np.linalg.inv(c.lattice)
+    eps = 1e-5
+
+    def pair_energy(cart_pos):
+        c2 = Crystal(lattice=c.lattice, frac_coords=cart_pos @ inv,
+                     atomic_numbers=c.atomic_numbers)
+        g2 = build_graph(c2)
+        cart2 = c2.cart_coords()
+        v = cart2[g2.bond_nbr] + g2.bond_image @ c.lattice - cart2[g2.bond_center]
+        return 0.5 * np.sum(_morse(np.linalg.norm(v, axis=-1)))
+
+    for i in range(min(3, c.num_atoms)):
+        for k in range(3):
+            dp = cart.copy(); dp[i, k] += eps
+            dm = cart.copy(); dm[i, k] -= eps
+            f_num = -(pair_energy(dp) - pair_energy(dm)) / (2 * eps)
+            assert abs(f_num - c.forces[i, k]) < 1e-5 * max(1.0, abs(f_num))
+
+
+def test_synthetic_magmoms_nonnegative_and_finite():
+    from repro.data.synthetic import SyntheticConfig, make_dataset
+
+    ds = make_dataset(SyntheticConfig(num_crystals=4, seed=1))
+    for c in ds.crystals:
+        assert np.all(np.isfinite(c.magmoms))
+        assert np.all(c.magmoms >= 0)

@@ -1,0 +1,100 @@
+"""Molecular graph extraction: PBC neighbor lists, bond graph, batching."""
+import numpy as np
+import pytest
+
+from repro.core import BatchCapacities, Crystal, batch_crystals, build_graph
+
+
+def brute_force_neighbors(c: Crystal, r_cut: float):
+    """O(N^2 * images) reference neighbor count."""
+    cart = c.cart_coords()
+    n = c.num_atoms
+    count = 0
+    rng = range(-3, 4)
+    for i in range(n):
+        for j in range(n):
+            for a in rng:
+                for b in rng:
+                    for cc in rng:
+                        off = np.array([a, b, cc]) @ c.lattice
+                        d = np.linalg.norm(cart[j] + off - cart[i])
+                        if 1e-8 < d <= r_cut:
+                            count += 1
+    return count
+
+
+def test_neighbor_list_matches_brute_force():
+    rng = np.random.default_rng(0)
+    c = Crystal(lattice=np.eye(3) * 5.0 + rng.normal(0, 0.1, (3, 3)),
+                frac_coords=rng.random((5, 3)),
+                atomic_numbers=rng.integers(1, 10, 5))
+    g = build_graph(c, r_cut_atom=6.0)
+    assert g.num_bonds == brute_force_neighbors(c, 6.0)
+
+
+def test_bonds_are_directed_pairs():
+    """Every (i, j, image) edge has its (j, i, -image) mirror."""
+    rng = np.random.default_rng(1)
+    c = Crystal(lattice=np.eye(3) * 4.0, frac_coords=rng.random((6, 3)),
+                atomic_numbers=rng.integers(1, 10, 6))
+    g = build_graph(c)
+    edges = set(zip(g.bond_center.tolist(), g.bond_nbr.tolist(),
+                    map(tuple, g.bond_image.tolist())))
+    for (i, j, im) in edges:
+        assert (j, i, tuple(-np.asarray(im))) in edges
+
+
+def test_angles_share_center_and_short_cutoff():
+    rng = np.random.default_rng(2)
+    c = Crystal(lattice=np.eye(3) * 4.0, frac_coords=rng.random((8, 3)),
+                atomic_numbers=rng.integers(1, 10, 8))
+    g = build_graph(c, r_cut_atom=6.0, r_cut_bond=3.0)
+    cart = c.cart_coords()
+    vec = cart[g.bond_nbr] + g.bond_image @ c.lattice - cart[g.bond_center]
+    dist = np.linalg.norm(vec, axis=-1)
+    assert g.num_angles > 0
+    # both bonds of every angle share the center atom and are <= 3 A
+    assert (g.bond_center[g.angle_ij] == g.bond_center[g.angle_ik]).all()
+    assert (dist[g.angle_ij] <= 3.0 + 1e-9).all()
+    assert (dist[g.angle_ik] <= 3.0 + 1e-9).all()
+    assert (g.angle_ij != g.angle_ik).all()
+
+
+def test_translation_invariance_of_graph():
+    """Shifting all frac coords (mod 1) preserves the distance multiset."""
+    rng = np.random.default_rng(3)
+    c1 = Crystal(lattice=np.eye(3) * 4.2, frac_coords=rng.random((6, 3)),
+                 atomic_numbers=np.arange(1, 7))
+    shift = rng.random(3)
+    c2 = Crystal(lattice=c1.lattice,
+                 frac_coords=(c1.frac_coords + shift) % 1.0,
+                 atomic_numbers=c1.atomic_numbers)
+    g1, g2 = build_graph(c1), build_graph(c2)
+    assert g1.num_bonds == g2.num_bonds
+
+    def dists(c, g):
+        cart = c.cart_coords()
+        v = cart[g.bond_nbr] + g.bond_image @ c.lattice - cart[g.bond_center]
+        return np.sort(np.linalg.norm(v, axis=-1))
+
+    np.testing.assert_allclose(dists(c1, g1), dists(c2, g2), rtol=1e-6)
+
+
+def test_batching_masks_and_offsets():
+    rng = np.random.default_rng(4)
+    cs = [Crystal(lattice=np.eye(3) * 4.0, frac_coords=rng.random((n, 3)),
+                  atomic_numbers=rng.integers(1, 10, n)) for n in (3, 5)]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(atoms=16,
+                           bonds=sum(g.num_bonds for g in gs) + 7,
+                           angles=sum(g.num_angles for g in gs) + 5)
+    b = batch_crystals(cs, gs, caps)
+    assert float(b.atom_mask.sum()) == 8
+    assert float(b.bond_mask.sum()) == sum(g.num_bonds for g in gs)
+    assert float(b.angle_mask.sum()) == sum(g.num_angles for g in gs)
+    # second crystal's bonds index into its own atom range
+    nb0 = gs[0].num_bonds
+    assert int(b.bond_center[nb0]) >= 3
+    # capacity overflow raises
+    with pytest.raises(ValueError):
+        batch_crystals(cs, gs, BatchCapacities(4, 8, 8))

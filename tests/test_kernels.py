@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n", [1, 7, 512, 1333])
+@pytest.mark.parametrize("k", [8, 31])
+def test_fused_rbf_matches_oracle(n, k):
+    d = jnp.asarray(RNG.uniform(0.2, 6.0, (n,)), jnp.float32)
+    freqs = jnp.arange(1, k + 1, dtype=jnp.float32) * jnp.pi
+    out = ops.fused_rbf(d, freqs, 6.0, 8)
+    want = ref.fused_rbf_ref(d, freqs, 6.0, 8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [3, 600, 1024])
+@pytest.mark.parametrize("k", [9, 31])
+def test_fused_fourier_matches_oracle(n, k):
+    th = jnp.asarray(RNG.uniform(0, np.pi, (n,)), jnp.float32)
+    out = ops.fused_fourier(th, k)
+    want = ref.fused_fourier_ref(th, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,d_in,d_out", [(64, 192, 64), (300, 256, 64),
+                                          (17, 128, 32)])
+def test_fused_gated_mlp_matches_oracle(m, d_in, d_out):
+    x = jnp.asarray(RNG.normal(0, 1, (m, d_in)), jnp.float32)
+    wc = jnp.asarray(RNG.normal(0, .1, (d_in, d_out)), jnp.float32)
+    wg = jnp.asarray(RNG.normal(0, .1, (d_in, d_out)), jnp.float32)
+    bc = jnp.asarray(RNG.normal(0, .1, (d_out,)), jnp.float32)
+    bg = jnp.asarray(RNG.normal(0, .1, (d_out,)), jnp.float32)
+    sc = jnp.asarray(RNG.uniform(.5, 1.5, (d_out,)), jnp.float32)
+    sg = jnp.asarray(RNG.uniform(.5, 1.5, (d_out,)), jnp.float32)
+    oc = jnp.asarray(RNG.normal(0, .1, (d_out,)), jnp.float32)
+    og = jnp.asarray(RNG.normal(0, .1, (d_out,)), jnp.float32)
+    out = ops.fused_gated_mlp(x, wc, bc, wg, bg, sc, oc, sg, og)
+    want = ref.fused_gated_mlp_ref(x, wc, bc, wg, bg, sc, oc, sg, og)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+@pytest.mark.parametrize("m,d,f", [(128, 128, 512), (256, 64, 256)])
+def test_fused_swiglu_matches_oracle(act, m, d, f):
+    x = jnp.asarray(RNG.normal(0, 1, (m, d)), jnp.float32)
+    w1 = jnp.asarray(RNG.normal(0, .05, (d, f)), jnp.float32)
+    w2 = jnp.asarray(RNG.normal(0, .05, (d, f)), jnp.float32)
+    w3 = jnp.asarray(RNG.normal(0, .05, (f, d)), jnp.float32)
+    out = ops.fused_swiglu(x, w1, w2, w3, activation=act)
+    if act == "silu":
+        want = ref.fused_swiglu_ref(x, w1, w2, w3)
+    else:
+        want = (jax.nn.gelu(x @ w1, approximate=True) * (x @ w2)) @ w3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 256, 64), (2, 4, 128, 128)])
+def test_flash_attention_matches_oracle(causal, b, h, s, d):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(0, 1, (1, 2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(0, 1, (1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(0, 1, (1, 2, 128, 64)), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_kernels_are_jittable():
+    d = jnp.asarray(RNG.uniform(0.2, 6.0, (128,)), jnp.float32)
+    freqs = jnp.arange(1, 32, dtype=jnp.float32) * jnp.pi
+    out = jax.jit(lambda dd: ops.fused_rbf(dd, freqs, 6.0, 8))(d)
+    assert out.shape == (128, 31)

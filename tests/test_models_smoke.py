@@ -1,0 +1,173 @@
+"""Per-arch REDUCED smoke tests (assignment requirement (f)): instantiate a
+reduced config of the same family, run one forward/train step on CPU,
+assert output shapes + no NaNs. Plus decode-vs-train consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models import encdec, hybrid, rwkv, transformer
+from repro.models.api import family_fns
+
+
+def _inputs(cfg, fns, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    if fns.token_input:
+        x = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    else:
+        x = jnp.asarray(rng.normal(0, 1, (B, S, cfg.d_model)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    args = [x, labels]
+    if fns.has_positions:
+        if fns.positions_3d:
+            pos = jnp.broadcast_to(
+                jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(
+                jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+        args.append(pos)
+    return args
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    assert cfg.family == get_config(arch).family  # same family as full
+    fns = family_fns(cfg)
+    params = fns.init(cfg, jax.random.PRNGKey(0))
+    args = _inputs(cfg, fns)
+    kw = dict(ssd_chunk=8) if cfg.family == "hybrid" else {}
+    loss, grads = jax.value_and_grad(
+        lambda p: fns.loss(cfg, p, *args, **kw))(params)
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+    # one SGD step moves the loss
+    params2 = jax.tree.map(lambda p, g: p - 1e-2 * g, params, grads)
+    loss2 = fns.loss(cfg, params2, *args, **kw)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The CONFIG files carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    }[arch]
+    layers, d, h, kv, ff, vocab = expected
+    assert cfg.num_layers == layers
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    ff_actual = cfg.moe.d_ff_expert if cfg.is_moe else cfg.d_ff
+    assert ff_actual == ff
+    assert cfg.vocab_size == vocab
+
+
+def test_transformer_decode_matches_forward():
+    cfg = get_smoke("qwen3-8b")
+    fns = family_fns(cfg)
+    params = fns.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tok = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (B, S)))
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+    full = transformer.forward_train(cfg, params, tok, pos)
+    _, cache = transformer.prefill(cfg, params, tok[:, :6], pos[:, :6],
+                                   max_len=S, chunk=3,
+                                   cache_dtype=jnp.float32)
+    errs = []
+    for i in range(6, S):
+        lg, cache = transformer.decode_step(cfg, params, tok[:, i:i + 1],
+                                            cache, pos[:, i:i + 1])
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    assert max(errs) < 1e-4
+
+
+def test_rwkv_decode_matches_forward():
+    cfg = get_smoke("rwkv6-3b")
+    params = rwkv.rwkv_init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 10
+    tok = jnp.asarray(np.random.default_rng(1).integers(0, cfg.vocab_size, (B, S)))
+    full = rwkv.forward_train(cfg, params, tok)
+    st = rwkv.rwkv_init_states(cfg, B)
+    errs = []
+    for i in range(S):
+        lg, st = rwkv.decode_step(cfg, params, tok[:, i:i + 1], st)
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    assert max(errs) < 1e-4
+
+
+def test_zamba_decode_matches_forward():
+    cfg = get_smoke("zamba2-1.2b")
+    params = hybrid.zamba_init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    tok = jnp.asarray(np.random.default_rng(2).integers(0, cfg.vocab_size, (B, S)))
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+    full = hybrid.forward_train(cfg, params, tok, pos, ssd_chunk=8)
+    st = hybrid.init_state(cfg, B, S, dtype=jnp.float32)
+    errs = []
+    for i in range(S):
+        lg, st = hybrid.decode_step(cfg, params, tok[:, i:i + 1], st,
+                                    pos[:, i:i + 1])
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    assert max(errs) < 1e-3
+
+
+def test_zamba_prefill_matches_decode_path():
+    cfg = get_smoke("zamba2-1.2b")
+    params = hybrid.zamba_init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    tok = jnp.asarray(np.random.default_rng(3).integers(0, cfg.vocab_size, (B, S)))
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+    full = hybrid.forward_train(cfg, params, tok, pos, ssd_chunk=8)
+    logits, st = hybrid.prefill(cfg, params, tok[:, :8], pos[:, :8],
+                                max_len=S, chunk=4, ssd_chunk=4,
+                                cache_dtype=jnp.float32)
+    assert float(jnp.abs(logits[:, 0] - full[:, 7]).max()) < 1e-3
+    lg, st = hybrid.decode_step(cfg, params, tok[:, 8:9], st, pos[:, 8:9])
+    assert float(jnp.abs(lg[:, 0] - full[:, 8]).max()) < 1e-3
+
+
+def test_whisper_decode_matches_forward():
+    cfg = get_smoke("whisper-medium")
+    params = encdec.whisper_init(cfg, jax.random.PRNGKey(0))
+    B, Se, Sd = 2, 20, 8
+    rng = np.random.default_rng(4)
+    frames = jnp.asarray(rng.normal(0, 1, (B, Se, cfg.d_model)), jnp.float32)
+    dtok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, Sd)))
+    full = encdec.forward_train(cfg, params, frames, dtok)
+    enc_out = encdec.encode(cfg, params, frames)
+    cache = encdec.init_cache(cfg, params, enc_out, max_len=Sd,
+                              dtype=jnp.float32)
+    errs = []
+    for i in range(Sd):
+        lg, cache = encdec.decode_step(cfg, params, dtok[:, i:i + 1], cache)
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    assert max(errs) < 1e-4
+
+
+def test_mrope_norm_preserving():
+    from repro.models.layers import apply_mrope, apply_rope
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 1, (2, 8, 4, 16)), jnp.float32)
+    pos3 = jnp.asarray(rng.integers(0, 50, (2, 8, 3)), jnp.int32)
+    y = apply_mrope(x, pos3, (4, 2, 2), 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+    pos = jnp.asarray(rng.integers(0, 50, (2, 8)), jnp.int32)
+    y2 = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y2), axis=-1), rtol=1e-4)

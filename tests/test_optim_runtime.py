@@ -1,0 +1,163 @@
+"""Optimizer, schedules (Eq. 14), checkpointing, elasticity, fault runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamConfig, adam_init, adam_update, clip_by_global_norm,
+    compress, cosine_annealing, decompress, ef_init, global_norm,
+    scaled_init_lr,
+)
+from repro.runtime import (
+    FaultInjector, StragglerWatch, latest_step, restore_checkpoint,
+    run_with_restarts, save_checkpoint,
+)
+
+
+# ------------------------------- optim -------------------------------------
+
+def test_adam_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adam_init(params)
+    for _ in range(400):
+        grads = jax.tree.map(lambda w: 2 * w, params)
+        params, state = adam_update(grads, state, params, 0.05)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_decays_weights():
+    params = {"w": jnp.ones((4,))}
+    cfg = AdamConfig(weight_decay=0.1)
+    state = adam_init(params)
+    grads = {"w": jnp.zeros((4,))}
+    p2, _ = adam_update(grads, state, params, 0.1, cfg)
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_scaled_lr_eq14():
+    """Paper Eq. 14: init_LR = batch/k * 3e-4, k = 128."""
+    assert scaled_init_lr(128) == pytest.approx(3e-4)
+    assert scaled_init_lr(2048) == pytest.approx(2048 / 128 * 3e-4)
+
+
+def test_cosine_annealing_shape():
+    lr0 = float(cosine_annealing(0, 100, 1.0))
+    lr_mid = float(cosine_annealing(50, 100, 1.0))
+    lr_end = float(cosine_annealing(100, 100, 1.0))
+    assert lr0 == pytest.approx(1.0)
+    assert lr_mid == pytest.approx(0.5, abs=1e-6)
+    assert lr_end == pytest.approx(0.0, abs=1e-6)
+    # warmup ramps from 0
+    lw = float(cosine_annealing(1, 100, 1.0, warmup_steps=10))
+    assert lw == pytest.approx(0.1, abs=1e-6)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 10}
+    clipped = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.ones((4,)) * 1e-3}
+    same = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 1e-3, rtol=1e-5)
+
+
+def test_compression_error_feedback_reduces_bias():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1e-3, 1000),
+                          jnp.float32)}
+    ef = ef_init(g)
+    total_q = jnp.zeros_like(g["w"])
+    total = jnp.zeros_like(g["w"])
+    for _ in range(50):
+        q, ef = compress(g, ef)
+        total_q = total_q + decompress(q)["w"]
+        total = total + g["w"]
+    # with error feedback, accumulated quantized sum tracks the true sum
+    assert float(jnp.abs(total_q - total).max()) < 2e-5
+
+
+# ----------------------------- checkpoint ----------------------------------
+
+def test_checkpoint_roundtrip_and_keep(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray(3, jnp.int32)}}
+    for step in (10, 20, 30, 40):
+        save_checkpoint(d, step, tree, keep=2)
+    assert latest_step(d) == 40
+    got, step, _meta = restore_checkpoint(d, tree)
+    assert step == 40
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    # keep=2 pruning
+    from repro.runtime import list_checkpoints
+    assert list_checkpoints(d) == [30, 40]
+    # no stray tmp files (atomicity)
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"a": jnp.zeros((3, 3))})
+
+
+def test_elastic_reshard_single_device(tmp_path):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime import elastic_restore
+
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(d, 5, tree)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    got, step, _ = elastic_restore(d, tree, mesh, lambda path, leaf: P())
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+# ------------------------------- fault -------------------------------------
+
+def test_straggler_watch_flags_slow_steps():
+    w = StragglerWatch(window=16, threshold=2.0)
+    for _ in range(10):
+        w.record(0.1)
+    assert w.record(0.5) is True
+    assert w.flags == 1
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0, "resume": 0}
+
+    def loop(start):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return f"done from {start}"
+
+    def resume():
+        calls["resume"] += 1
+        return calls["n"] * 100
+
+    out = run_with_restarts(loop, resume_step_fn=resume, max_restarts=5)
+    assert out.startswith("done")
+    assert calls["n"] == 3
+
+
+def test_run_with_restarts_gives_up():
+    def loop(start):
+        raise RuntimeError("always")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(loop, resume_step_fn=lambda: 0, max_restarts=2)
+
+
+def test_fault_injector_fires_once():
+    fi = FaultInjector({3})
+    fi.maybe_fail(2)
+    with pytest.raises(RuntimeError):
+        fi.maybe_fail(3)
+    fi.maybe_fail(3)  # second time: no fire

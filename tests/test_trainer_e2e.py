@@ -1,0 +1,126 @@
+"""End-to-end behaviour: CHGNet training converges, checkpoint/restart
+under injected faults, DP parity, serve step."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chgnet import CHGNetConfig
+from repro.data import BatchIterator, SyntheticConfig, capacity_for, make_dataset
+from repro.runtime import FaultInjector
+from repro.train import TrainConfig, Trainer
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset(SyntheticConfig(num_crystals=96, max_atoms=20, seed=0))
+
+
+@pytest.fixture(scope="module")
+def caps(ds):
+    return capacity_for(ds, 8)
+
+
+def _batches(ds, caps, n_epochs=50, **kw):
+    def gen():
+        for _ in range(n_epochs):
+            yield from BatchIterator(ds, global_batch=8, num_devices=1,
+                                     caps=caps, **kw)
+    return gen()
+
+
+def test_training_reduces_loss(ds, caps):
+    """Held-out-batch loss drops substantially after 60 steps.
+
+    (Running-loss comparisons are too noisy: the synthetic element-offset
+    energies put early training in Huber's linear regime. A fixed eval
+    batch with lr_k=1 — LR=2.4e-3 — shows a >2x improvement.)"""
+    from repro.train.trainer import make_chgnet_step_fns
+
+    cfg = CHGNetConfig(readout="direct")
+    tcfg = TrainConfig(global_batch=8, total_steps=300, lr_k=1,
+                       warmup_steps=5)
+    tr = Trainer(cfg, tcfg)
+    _, eval_step, _ = make_chgnet_step_fns(cfg, tcfg)
+    eval_batch = next(iter(BatchIterator(ds, 8, 1, caps, seed=99)))
+    before = float(eval_step(tr.params, eval_batch)["loss"])
+    tr.train(itertools.islice(_batches(ds, caps), 60))
+    after = float(eval_step(tr.params, eval_batch)["loss"])
+    assert after < 0.6 * before, (before, after)
+
+
+def test_fault_injection_restart_resumes(tmp_path, ds, caps):
+    """Injected fault at step 5 -> restart resumes from the checkpoint."""
+    ckpt = str(tmp_path / "ckpt")
+    cfg = CHGNetConfig(readout="direct")
+    tcfg = TrainConfig(global_batch=8, total_steps=100)
+
+    def run_loop(start_step):
+        tr = Trainer(cfg, tcfg, ckpt_dir=ckpt, ckpt_every=2)
+        tr.maybe_restore()
+        assert tr.step == start_step
+        fi = FaultInjector({5}) if start_step == 0 else None
+        tr.train(itertools.islice(_batches(ds, caps), 10 - tr.step),
+                 fault_injector=fi)
+        tr.save()
+        return tr.step
+
+    from repro.runtime import latest_step, run_with_restarts
+
+    def resume():
+        return latest_step(ckpt) or 0
+
+    final = run_with_restarts(run_loop, resume_step_fn=resume,
+                              max_restarts=2)
+    assert final >= 9  # completed despite the injected fault
+    assert latest_step(ckpt) is not None
+
+
+def test_dp_shard_map_matches_single_device(ds, caps):
+    """1-device shard_map DP step == plain step (same data, same seed)."""
+    import repro.data.pipeline as pl
+
+    cfg = CHGNetConfig(readout="direct")
+    tcfg = TrainConfig(global_batch=8, total_steps=100, grad_reduce="plain")
+    tr_a = Trainer(cfg, tcfg, seed=3)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tr_b = Trainer(cfg, tcfg, seed=3, mesh=mesh)
+
+    it_a = BatchIterator(ds, 8, 1, caps, seed=7)
+    it_b = BatchIterator(ds, 8, 1, caps, seed=7, stack=True)
+    h_a = tr_a.train(itertools.islice(iter(it_a), 3))
+    h_b = tr_b.train(itertools.islice(iter(it_b), 3))
+    for a, b in zip(h_a, h_b):
+        assert a["loss"] == pytest.approx(b["loss"], rel=1e-4)
+
+
+def test_serve_step_md_inference(ds, caps):
+    """Table II scenario: one-step MD inference returns all properties."""
+    from repro.train.trainer import make_chgnet_step_fns
+
+    cfg = CHGNetConfig(readout="direct")
+    tcfg = TrainConfig(global_batch=8)
+    _, _, serve = make_chgnet_step_fns(cfg, tcfg)
+    tr = Trainer(cfg, tcfg)
+    batch = next(iter(BatchIterator(ds, 8, 1, caps)))
+    out = serve(tr.params, batch)
+    assert set(out) == {"energy", "forces", "stress", "magmom"}
+    assert all(bool(jnp.all(jnp.isfinite(v))) for v in out.values())
+
+
+def test_checkpoint_restore_trainer_roundtrip(tmp_path, ds, caps):
+    ckpt = str(tmp_path / "c2")
+    cfg = CHGNetConfig()
+    tr = Trainer(cfg, TrainConfig(global_batch=8), ckpt_dir=ckpt,
+                 ckpt_every=1)
+    tr.train(itertools.islice(_batches(ds, caps), 2))
+    tr.save()
+    tr2 = Trainer(cfg, TrainConfig(global_batch=8), ckpt_dir=ckpt)
+    assert tr2.maybe_restore()
+    assert tr2.step == tr.step
+    a = jax.tree.leaves(tr.params)[0]
+    b = jax.tree.leaves(tr2.params)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
