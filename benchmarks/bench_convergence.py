@@ -12,7 +12,8 @@ import time
 import numpy as np
 
 from repro.configs import chgnet_mptrj as C
-from repro.data import BatchIterator, SyntheticConfig, capacity_for, make_dataset
+from repro.batching import capacity_for
+from repro.data import BatchIterator, SyntheticConfig, make_dataset
 from repro.train import TrainConfig, Trainer
 
 

@@ -16,8 +16,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.batching import BatchCapacities, batch_crystals
 from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
-from repro.core.graph import BatchCapacities, batch_crystals
 from repro.core.losses import LossWeights, chgnet_loss
 from repro.data import SyntheticConfig, make_dataset
 from repro.train.trainer import chgnet_loss_fn

@@ -9,8 +9,8 @@ import time
 import jax
 import numpy as np
 
+from repro.batching import BatchCapacities, batch_crystals
 from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
-from repro.core.graph import BatchCapacities, batch_crystals
 from repro.core.neighbors import Crystal, build_graph
 
 

@@ -16,7 +16,8 @@ _WORKER = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     import jax
     from repro.core.chgnet import CHGNetConfig
-    from repro.data import BatchIterator, SyntheticConfig, capacity_for, make_dataset
+    from repro.batching import capacity_for
+    from repro.data import BatchIterator, SyntheticConfig, make_dataset
     from repro.train import TrainConfig, Trainer
 
     ds = make_dataset(SyntheticConfig(num_crystals=128, max_atoms=20, seed=0))

@@ -13,8 +13,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: iteration,sampler,md,convergence,"
-                         "scaling,roofline,kernels")
+                    help="comma list: iteration,sampler,md,serve,"
+                         "convergence,scaling,roofline,kernels")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer iters")
     args = ap.parse_args()
@@ -22,13 +22,14 @@ def main() -> None:
 
     from benchmarks import (
         bench_convergence, bench_iteration, bench_kernels, bench_md,
-        bench_sampler, bench_scaling, roofline,
+        bench_sampler, bench_scaling, bench_serve, roofline,
     )
 
     suites = {
         "sampler": lambda: bench_sampler.run(),
         "kernels": lambda: bench_kernels.run(quick=args.quick),
         "md": lambda: bench_md.run(iters=3 if args.quick else 5),
+        "serve": lambda: bench_serve.run(steps=10 if args.quick else 25),
         "iteration": lambda: bench_iteration.run(
             batch_size=8 if args.quick else 16),
         "convergence": lambda: bench_convergence.run(

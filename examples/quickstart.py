@@ -7,9 +7,10 @@ import itertools
 
 import jax
 
+from repro.batching import capacity_for
 from repro.configs import chgnet_mptrj as C
 from repro.core.chgnet import chgnet_apply, chgnet_init, param_count
-from repro.data import BatchIterator, SyntheticConfig, capacity_for, make_dataset
+from repro.data import BatchIterator, SyntheticConfig, make_dataset
 from repro.train import TrainConfig, Trainer
 
 

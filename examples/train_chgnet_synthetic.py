@@ -9,9 +9,10 @@ substrate: load-balance sampler, prefetch, checkpoints, fault tolerance.
 import argparse
 import itertools
 
+from repro.batching import capacity_for
 from repro.configs import chgnet_mptrj as C
 from repro.data import (
-    BatchIterator, Prefetcher, SyntheticConfig, capacity_for, make_dataset,
+    BatchIterator, Prefetcher, SyntheticConfig, make_dataset,
 )
 from repro.runtime import FaultInjector, latest_step, run_with_restarts
 from repro.train import TrainConfig, Trainer

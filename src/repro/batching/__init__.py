@@ -1,0 +1,32 @@
+"""Unified graph-batching engine (host side).
+
+All host-side packing/capacity logic lives here — bucketed capacity
+ladders sized from dataset statistics, padded-batch packing, and a jit
+compile cache keyed on ``(bucket, batch_size, config)`` — shared by the
+training data pipeline (``repro.data``) and the MD serving engine
+(``repro.serve``).  The device-side ``CrystalGraphBatch`` pytree stays in
+``repro.core.graph``.
+"""
+from .capacity import (
+    BatchCapacities,
+    CapacityLadder,
+    capacity_for,
+    capacity_from_stats,
+    ladder_for,
+    ladder_from_stats,
+)
+from .engine import BatchingEngine, CompileCache, global_compile_cache
+from .pack import (
+    atom_offsets,
+    batch_crystals,
+    padding_waste,
+    stack_device_batches,
+)
+
+__all__ = [
+    "BatchCapacities", "CapacityLadder", "capacity_for",
+    "capacity_from_stats", "ladder_for", "ladder_from_stats",
+    "BatchingEngine", "CompileCache", "global_compile_cache",
+    "atom_offsets", "batch_crystals", "padding_waste",
+    "stack_device_batches",
+]

@@ -1,0 +1,155 @@
+"""Host-side packing of crystals into padded ``CrystalGraphBatch``es.
+
+Moved out of ``repro.core.graph`` (which keeps only the device-side pytree):
+packing is a host/data-plane concern and is shared by training (via
+``repro.data.pipeline``) and serving (via ``repro.serve``).
+
+Padding convention (unchanged from the seed): real entries are packed at
+the front, masks mark validity, padded bonds/angles point at slot 0 with
+zeroed payloads so segment-sums are unaffected.  ``num_crystal_slots``
+additionally pads the *crystal* axis, so shards with unequal numbers of
+structures (non-divisible global batches) still stack to one fixed shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CrystalGraphBatch
+from repro.core.neighbors import Crystal, GraphIndices
+
+from .capacity import BatchCapacities
+
+
+def batch_crystals(
+    crystals: list[Crystal],
+    graphs: list[GraphIndices],
+    caps: BatchCapacities,
+    *,
+    num_crystal_slots: int | None = None,
+    dtype=np.float32,
+) -> CrystalGraphBatch:
+    """Pack crystals + pre-built graph indices into one padded batch.
+
+    Raises ValueError if the batch exceeds the capacities (callers should
+    size capacities from dataset statistics / the bucketing policy).
+    Padded crystal slots (``num_crystal_slots > len(crystals)``) get
+    identity lattices and zero ``crystal_mask``.
+    """
+    b = num_crystal_slots if num_crystal_slots is not None else len(crystals)
+    if len(crystals) > b:
+        raise ValueError(
+            f"{len(crystals)} crystals exceed {b} crystal slots"
+        )
+    tot_atoms = sum(c.num_atoms for c in crystals)
+    tot_bonds = sum(g.num_bonds for g in graphs)
+    tot_angles = sum(g.num_angles for g in graphs)
+    if not caps.fits(tot_atoms, tot_bonds, tot_angles):
+        raise ValueError(
+            f"batch ({tot_atoms} atoms, {tot_bonds} bonds, {tot_angles} angles)"
+            f" exceeds capacities {caps}"
+        )
+
+    atom_z = np.zeros((caps.atoms,), np.int32)
+    atom_mask = np.zeros((caps.atoms,), dtype)
+    atom_crystal = np.zeros((caps.atoms,), np.int32)
+    frac = np.zeros((caps.atoms, 3), dtype)
+    # identity lattices on padded slots keep det/inverse well-defined
+    lattice = np.tile(np.eye(3, dtype=dtype)[None], (b, 1, 1))
+    crystal_mask = np.zeros((b,), dtype)
+    bond_center = np.zeros((caps.bonds,), np.int32)
+    bond_nbr = np.zeros((caps.bonds,), np.int32)
+    bond_image = np.zeros((caps.bonds, 3), dtype)
+    bond_crystal = np.zeros((caps.bonds,), np.int32)
+    bond_mask = np.zeros((caps.bonds,), dtype)
+    angle_ij = np.zeros((caps.angles,), np.int32)
+    angle_ik = np.zeros((caps.angles,), np.int32)
+    angle_mask = np.zeros((caps.angles,), dtype)
+    energy = np.zeros((b,), dtype)
+    forces = np.zeros((caps.atoms, 3), dtype)
+    stress = np.zeros((b, 3, 3), dtype)
+    magmoms = np.zeros((caps.atoms,), dtype)
+    n_atoms = np.zeros((b,), dtype)
+
+    a_off = 0
+    b_off = 0
+    g_off = 0
+    for ci, (c, g) in enumerate(zip(crystals, graphs)):
+        na, nb, ng = c.num_atoms, g.num_bonds, g.num_angles
+        atom_z[a_off:a_off + na] = c.atomic_numbers
+        atom_mask[a_off:a_off + na] = 1.0
+        atom_crystal[a_off:a_off + na] = ci
+        frac[a_off:a_off + na] = c.frac_coords
+        lattice[ci] = c.lattice
+        crystal_mask[ci] = 1.0
+        n_atoms[ci] = na
+        bond_center[b_off:b_off + nb] = g.bond_center + a_off
+        bond_nbr[b_off:b_off + nb] = g.bond_nbr + a_off
+        bond_image[b_off:b_off + nb] = g.bond_image.astype(dtype)
+        bond_crystal[b_off:b_off + nb] = ci
+        bond_mask[b_off:b_off + nb] = 1.0
+        angle_ij[g_off:g_off + ng] = g.angle_ij + b_off
+        angle_ik[g_off:g_off + ng] = g.angle_ik + b_off
+        angle_mask[g_off:g_off + ng] = 1.0
+        if c.energy is not None:
+            energy[ci] = c.energy
+        if c.forces is not None:
+            forces[a_off:a_off + na] = c.forces
+        if c.stress is not None:
+            stress[ci] = c.stress
+        if c.magmoms is not None:
+            magmoms[a_off:a_off + na] = c.magmoms
+        a_off += na
+        b_off += nb
+        g_off += ng
+
+    return CrystalGraphBatch(
+        atom_z=jnp.asarray(atom_z),
+        atom_mask=jnp.asarray(atom_mask),
+        atom_crystal=jnp.asarray(atom_crystal),
+        frac_coords=jnp.asarray(frac),
+        lattice=jnp.asarray(lattice),
+        crystal_mask=jnp.asarray(crystal_mask),
+        bond_center=jnp.asarray(bond_center),
+        bond_nbr=jnp.asarray(bond_nbr),
+        bond_image=jnp.asarray(bond_image),
+        bond_crystal=jnp.asarray(bond_crystal),
+        bond_mask=jnp.asarray(bond_mask),
+        angle_ij=jnp.asarray(angle_ij),
+        angle_ik=jnp.asarray(angle_ik),
+        angle_mask=jnp.asarray(angle_mask),
+        energy=jnp.asarray(energy),
+        forces=jnp.asarray(forces),
+        stress=jnp.asarray(stress),
+        magmoms=jnp.asarray(magmoms),
+        n_atoms_per_crystal=jnp.asarray(n_atoms),
+    )
+
+
+def atom_offsets(crystals: list[Crystal]) -> np.ndarray:
+    """Start offset of each crystal's atoms in the packed atom axis."""
+    return np.concatenate(
+        [[0], np.cumsum([c.num_atoms for c in crystals])[:-1]]
+    ).astype(np.int64)
+
+
+def stack_device_batches(batches: list[CrystalGraphBatch]) -> CrystalGraphBatch:
+    """Stack per-device batches along a new leading axis (for shard_map)."""
+    shapes = {
+        tuple(x.shape for x in jax.tree.leaves(b)) for b in batches
+    }
+    if len(shapes) > 1:
+        raise ValueError(
+            "per-device batches disagree on shapes; pack them with the same "
+            f"capacities and num_crystal_slots: {sorted(shapes)}"
+        )
+    return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *batches)
+
+
+def padding_waste(batch: CrystalGraphBatch) -> float:
+    """Fraction of padded feature slots (atoms+bonds+angles) that are waste."""
+    real = float(batch.atom_mask.sum() + batch.bond_mask.sum()
+                 + batch.angle_mask.sum())
+    cap = batch.atom_cap + batch.bond_cap + batch.angle_cap
+    return 1.0 - real / cap if cap else 0.0

@@ -1,12 +1,26 @@
 """Core CHGNet / FastCHGNet implementation (the paper's contribution)."""
 from .chgnet import CHGNetConfig, chgnet_apply, chgnet_init, param_count
-from .graph import BatchCapacities, CrystalGraphBatch, batch_crystals, batch_input_specs
+from .graph import CrystalGraphBatch, batch_input_specs
 from .losses import LossWeights, chgnet_loss
-from .neighbors import Crystal, GraphIndices, build_graph
+from .neighbors import Crystal, GraphIndices, VerletNeighborList, build_graph
 
 __all__ = [
     "CHGNetConfig", "chgnet_apply", "chgnet_init", "param_count",
     "BatchCapacities", "CrystalGraphBatch", "batch_crystals",
     "batch_input_specs", "LossWeights", "chgnet_loss",
-    "Crystal", "GraphIndices", "build_graph",
+    "Crystal", "GraphIndices", "VerletNeighborList", "build_graph",
 ]
+
+# Host-side packing moved to repro.batching; keep `from repro.core import
+# BatchCapacities, batch_crystals` working via lazy re-export (PEP 562) —
+# an eager import here would be circular (repro.batching imports
+# repro.core.graph / repro.core.neighbors).
+_MOVED_TO_BATCHING = ("BatchCapacities", "batch_crystals")
+
+
+def __getattr__(name):
+    if name in _MOVED_TO_BATCHING:
+        from repro import batching
+
+        return getattr(batching, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -12,17 +12,23 @@ variable-size concat batching (paper Alg. 1/2) is replaced by
 This is the TPU-native analogue of the paper's "Parallel Computation of
 Basis" (Alg. 2): all crystals in the batch are processed by one fused
 program, with zero host-side per-sample Python during the step.
+
+This module holds only the *device-side* pytree (and its ShapeDtypeStruct
+stand-in); all host-side packing/capacity policy lives in
+``repro.batching`` (``BatchCapacities``, ``batch_crystals``,
+``CapacityLadder``, the compile cache).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .neighbors import Crystal, GraphIndices
+if TYPE_CHECKING:  # host-side capacity policy, see repro.batching
+    from repro.batching.capacity import BatchCapacities
 
 
 @partial(
@@ -81,119 +87,8 @@ class CrystalGraphBatch:
         return self.angle_ij.shape[0]
 
 
-@dataclasses.dataclass(frozen=True)
-class BatchCapacities:
-    atoms: int
-    bonds: int
-    angles: int
-
-    def fits(self, n_atoms: int, n_bonds: int, n_angles: int) -> bool:
-        return (
-            n_atoms <= self.atoms
-            and n_bonds <= self.bonds
-            and n_angles <= self.angles
-        )
-
-
-def batch_crystals(
-    crystals: list[Crystal],
-    graphs: list[GraphIndices],
-    caps: BatchCapacities,
-    *,
-    dtype=np.float32,
-) -> CrystalGraphBatch:
-    """Pack crystals + pre-built graph indices into one padded batch.
-
-    Raises ValueError if the batch exceeds the capacities (callers should
-    size capacities from dataset statistics / the bucketing policy).
-    """
-    b = len(crystals)
-    tot_atoms = sum(c.num_atoms for c in crystals)
-    tot_bonds = sum(g.num_bonds for g in graphs)
-    tot_angles = sum(g.num_angles for g in graphs)
-    if not caps.fits(tot_atoms, tot_bonds, tot_angles):
-        raise ValueError(
-            f"batch ({tot_atoms} atoms, {tot_bonds} bonds, {tot_angles} angles)"
-            f" exceeds capacities {caps}"
-        )
-
-    atom_z = np.zeros((caps.atoms,), np.int32)
-    atom_mask = np.zeros((caps.atoms,), dtype)
-    atom_crystal = np.zeros((caps.atoms,), np.int32)
-    frac = np.zeros((caps.atoms, 3), dtype)
-    lattice = np.zeros((b, 3, 3), dtype)
-    crystal_mask = np.zeros((b,), dtype)
-    bond_center = np.zeros((caps.bonds,), np.int32)
-    bond_nbr = np.zeros((caps.bonds,), np.int32)
-    bond_image = np.zeros((caps.bonds, 3), dtype)
-    bond_crystal = np.zeros((caps.bonds,), np.int32)
-    bond_mask = np.zeros((caps.bonds,), dtype)
-    angle_ij = np.zeros((caps.angles,), np.int32)
-    angle_ik = np.zeros((caps.angles,), np.int32)
-    angle_mask = np.zeros((caps.angles,), dtype)
-    energy = np.zeros((b,), dtype)
-    forces = np.zeros((caps.atoms, 3), dtype)
-    stress = np.zeros((b, 3, 3), dtype)
-    magmoms = np.zeros((caps.atoms,), dtype)
-    n_atoms = np.zeros((b,), dtype)
-
-    a_off = 0
-    b_off = 0
-    g_off = 0
-    for ci, (c, g) in enumerate(zip(crystals, graphs)):
-        na, nb, ng = c.num_atoms, g.num_bonds, g.num_angles
-        atom_z[a_off:a_off + na] = c.atomic_numbers
-        atom_mask[a_off:a_off + na] = 1.0
-        atom_crystal[a_off:a_off + na] = ci
-        frac[a_off:a_off + na] = c.frac_coords
-        lattice[ci] = c.lattice
-        crystal_mask[ci] = 1.0
-        n_atoms[ci] = na
-        bond_center[b_off:b_off + nb] = g.bond_center + a_off
-        bond_nbr[b_off:b_off + nb] = g.bond_nbr + a_off
-        bond_image[b_off:b_off + nb] = g.bond_image.astype(dtype)
-        bond_crystal[b_off:b_off + nb] = ci
-        bond_mask[b_off:b_off + nb] = 1.0
-        angle_ij[g_off:g_off + ng] = g.angle_ij + b_off
-        angle_ik[g_off:g_off + ng] = g.angle_ik + b_off
-        angle_mask[g_off:g_off + ng] = 1.0
-        if c.energy is not None:
-            energy[ci] = c.energy
-        if c.forces is not None:
-            forces[a_off:a_off + na] = c.forces
-        if c.stress is not None:
-            stress[ci] = c.stress
-        if c.magmoms is not None:
-            magmoms[a_off:a_off + na] = c.magmoms
-        a_off += na
-        b_off += nb
-        g_off += ng
-
-    return CrystalGraphBatch(
-        atom_z=jnp.asarray(atom_z),
-        atom_mask=jnp.asarray(atom_mask),
-        atom_crystal=jnp.asarray(atom_crystal),
-        frac_coords=jnp.asarray(frac),
-        lattice=jnp.asarray(lattice),
-        crystal_mask=jnp.asarray(crystal_mask),
-        bond_center=jnp.asarray(bond_center),
-        bond_nbr=jnp.asarray(bond_nbr),
-        bond_image=jnp.asarray(bond_image),
-        bond_crystal=jnp.asarray(bond_crystal),
-        bond_mask=jnp.asarray(bond_mask),
-        angle_ij=jnp.asarray(angle_ij),
-        angle_ik=jnp.asarray(angle_ik),
-        angle_mask=jnp.asarray(angle_mask),
-        energy=jnp.asarray(energy),
-        forces=jnp.asarray(forces),
-        stress=jnp.asarray(stress),
-        magmoms=jnp.asarray(magmoms),
-        n_atoms_per_crystal=jnp.asarray(n_atoms),
-    )
-
-
 def batch_input_specs(
-    batch_size: int, caps: BatchCapacities, dtype=jnp.float32
+    batch_size: int, caps: "BatchCapacities", dtype=jnp.float32
 ) -> CrystalGraphBatch:
     """ShapeDtypeStruct stand-in batch for dry-run lowering (no allocation)."""
     s = jax.ShapeDtypeStruct

@@ -74,19 +74,19 @@ def _image_bounds(lattice: np.ndarray, r_cut: float) -> np.ndarray:
     return np.ceil(r_cut / heights).astype(np.int64)
 
 
-def build_graph(
-    crystal: Crystal,
-    r_cut_atom: float = 6.0,
-    r_cut_bond: float = 3.0,
-    max_nbr_per_atom: int | None = None,
-) -> GraphIndices:
-    """Build G^a / G^b index arrays for one crystal (vectorized numpy)."""
-    lat = np.asarray(crystal.lattice, dtype=np.float64)
-    frac = np.asarray(crystal.frac_coords, dtype=np.float64)
+def _candidate_pairs(
+    lat: np.ndarray, frac: np.ndarray, r_cut: float
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """All (center, neighbor, image) pairs with distance in (0, r_cut].
+
+    The O(N^2 * images) distance tensor here is the expensive part of graph
+    construction — the Verlet skin list amortizes it across MD steps.
+    Returns (ci, nj, images[int], dist).
+    """
     n = frac.shape[0]
     cart = frac @ lat
 
-    nmax = _image_bounds(lat, r_cut_atom)
+    nmax = _image_bounds(lat, r_cut)
     rng = [np.arange(-m, m + 1) for m in nmax]
     images = np.stack(np.meshgrid(*rng, indexing="ij"), axis=-1).reshape(-1, 3)
     shifts = images @ lat  # (M, 3)
@@ -95,27 +95,15 @@ def build_graph(
     diff = cart[None, :, None, :] + shifts[None, None, :, :] - cart[:, None, None, :]
     dist = np.linalg.norm(diff, axis=-1)  # (N, N, M)
 
-    mask = (dist <= r_cut_atom) & (dist > 1e-8)
+    mask = (dist <= r_cut) & (dist > 1e-8)
     ci, nj, mi = np.nonzero(mask)
+    return ci, nj, images[mi], dist[ci, nj, mi]
 
-    if max_nbr_per_atom is not None and ci.size > 0:
-        # keep the closest max_nbr_per_atom neighbors per center (cap blowup)
-        order = np.lexsort((dist[ci, nj, mi], ci))
-        ci, nj, mi = ci[order], nj[order], mi[order]
-        counts = np.zeros(n, dtype=np.int64)
-        keep = np.zeros(ci.shape[0], dtype=bool)
-        for idx, c in enumerate(ci):
-            if counts[c] < max_nbr_per_atom:
-                keep[idx] = True
-                counts[c] += 1
-        ci, nj, mi = ci[keep], nj[keep], mi[keep]
 
-    bond_center = ci.astype(np.int32)
-    bond_nbr = nj.astype(np.int32)
-    bond_image = images[mi].astype(np.int32)
-    bond_dist = dist[ci, nj, mi]
-
-    # ---- bond graph: ordered pairs of short bonds sharing the center ----
+def _build_angles(
+    bond_center: np.ndarray, bond_dist: np.ndarray, r_cut_bond: float, n: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Ordered pairs of *short* bonds sharing a center (G^b edges)."""
     short = np.nonzero(bond_dist <= r_cut_bond)[0]  # indices into bonds
     angle_ij_list: list[np.ndarray] = []
     angle_ik_list: list[np.ndarray] = []
@@ -142,6 +130,37 @@ def build_graph(
     else:
         angle_ij = np.zeros((0,), dtype=np.int32)
         angle_ik = np.zeros((0,), dtype=np.int32)
+    return angle_ij, angle_ik
+
+
+def _graph_from_pairs(
+    ci: np.ndarray,
+    nj: np.ndarray,
+    images: np.ndarray,
+    dist: np.ndarray,
+    *,
+    n: int,
+    r_cut_bond: float,
+    max_nbr_per_atom: int | None = None,
+) -> GraphIndices:
+    """Assemble GraphIndices from pairs already filtered to r_cut_atom."""
+    if max_nbr_per_atom is not None and ci.size > 0:
+        # keep the closest max_nbr_per_atom neighbors per center (cap blowup)
+        order = np.lexsort((dist, ci))
+        ci, nj, images, dist = ci[order], nj[order], images[order], dist[order]
+        counts = np.zeros(n, dtype=np.int64)
+        keep = np.zeros(ci.shape[0], dtype=bool)
+        for idx, c in enumerate(ci):
+            if counts[c] < max_nbr_per_atom:
+                keep[idx] = True
+                counts[c] += 1
+        ci, nj, images, dist = ci[keep], nj[keep], images[keep], dist[keep]
+
+    bond_center = ci.astype(np.int32)
+    bond_nbr = nj.astype(np.int32)
+    bond_image = images.astype(np.int32)
+
+    angle_ij, angle_ik = _build_angles(bond_center, dist, r_cut_bond, n)
 
     return GraphIndices(
         bond_center=bond_center,
@@ -150,3 +169,100 @@ def build_graph(
         angle_ij=angle_ij,
         angle_ik=angle_ik,
     )
+
+
+def build_graph(
+    crystal: Crystal,
+    r_cut_atom: float = 6.0,
+    r_cut_bond: float = 3.0,
+    max_nbr_per_atom: int | None = None,
+) -> GraphIndices:
+    """Build G^a / G^b index arrays for one crystal (vectorized numpy)."""
+    lat = np.asarray(crystal.lattice, dtype=np.float64)
+    frac = np.asarray(crystal.frac_coords, dtype=np.float64)
+    ci, nj, images, dist = _candidate_pairs(lat, frac, r_cut_atom)
+    return _graph_from_pairs(
+        ci, nj, images, dist,
+        n=frac.shape[0], r_cut_bond=r_cut_bond,
+        max_nbr_per_atom=max_nbr_per_atom,
+    )
+
+
+class VerletNeighborList:
+    """Skin-radius neighbor-list reuse for MD serving.
+
+    Candidate pairs are built once with ``r_cut_atom + skin``; each step
+    only re-measures the candidates' distances (O(Nb) instead of the
+    O(N^2 * images) full image search) and re-filters them to
+    ``r_cut_atom``.  A full rebuild happens only when some atom has moved
+    more than ``skin / 2`` (minimum-image displacement) since the last
+    rebuild — the classical Verlet-list guarantee that no pair can enter
+    the cutoff unseen.  The per-step refilter keeps the result *exactly*
+    equal to a from-scratch ``build_graph`` at the current positions.
+    """
+
+    def __init__(
+        self,
+        crystal: Crystal,
+        r_cut_atom: float = 6.0,
+        r_cut_bond: float = 3.0,
+        skin: float = 0.5,
+    ):
+        if skin < 0.0:
+            raise ValueError(f"skin must be >= 0, got {skin}")
+        self.r_cut_atom = r_cut_atom
+        self.r_cut_bond = r_cut_bond
+        self.skin = skin
+        self.rebuilds = 0
+        self.updates = 0
+        self._rebuild(crystal)
+
+    def _rebuild(self, crystal: Crystal) -> None:
+        lat = np.asarray(crystal.lattice, dtype=np.float64)
+        frac = np.asarray(crystal.frac_coords, dtype=np.float64)
+        ci, nj, images, _ = _candidate_pairs(
+            lat, frac, self.r_cut_atom + self.skin
+        )
+        self._ci, self._nj, self._images = ci, nj, images
+        self._ref_lat = lat.copy()
+        self._ref_frac = frac.copy()
+        self.rebuilds += 1
+
+    def max_displacement(self, crystal: Crystal) -> float:
+        """Max minimum-image displacement (A) since the last rebuild."""
+        dfrac = np.asarray(crystal.frac_coords, np.float64) - self._ref_frac
+        dfrac -= np.round(dfrac)  # wrap-safe: minimum-image convention
+        disp = np.linalg.norm(dfrac @ self._ref_lat, axis=-1)
+        return float(disp.max()) if disp.size else 0.0
+
+    def needs_rebuild(self, crystal: Crystal) -> bool:
+        if not np.allclose(crystal.lattice, self._ref_lat):
+            return True
+        return self.max_displacement(crystal) > 0.5 * self.skin
+
+    def update(self, crystal: Crystal) -> GraphIndices:
+        """Neighbor graph at the crystal's current positions."""
+        self.updates += 1
+        if self.needs_rebuild(crystal):
+            self._rebuild(crystal)
+        lat = np.asarray(crystal.lattice, dtype=np.float64)
+        frac = np.asarray(crystal.frac_coords, np.float64)
+        # MD drivers wrap frac coords into [0, 1) every step; the stored
+        # candidate images refer to the *continuous* trajectory.  Recover
+        # the integer wrap offsets (exact while displacement < cell/2,
+        # guaranteed by the skin/2 rebuild trigger) and shift the images so
+        # they stay consistent with the wrapped coordinates the model sees.
+        wrap = np.round(frac - self._ref_frac)
+        cart = (frac - wrap) @ lat  # continuous (unwrapped) positions
+        vec = (cart[self._nj] + self._images @ lat - cart[self._ci])
+        dist = np.linalg.norm(vec, axis=-1)
+        keep = (dist <= self.r_cut_atom) & (dist > 1e-8)
+        images = (
+            self._images[keep]
+            - wrap[self._nj[keep]].astype(np.int64)
+            + wrap[self._ci[keep]].astype(np.int64)
+        )
+        return _graph_from_pairs(
+            self._ci[keep], self._nj[keep], images, dist[keep],
+            n=crystal.num_atoms, r_cut_bond=self.r_cut_bond,
+        )

@@ -1,10 +1,18 @@
-"""Data substrate: synthetic MPtrj-like dataset, samplers, prefetch."""
-from .pipeline import BatchIterator, Prefetcher, capacity_for
+"""Data substrate: synthetic MPtrj-like dataset, samplers, prefetch.
+
+Capacity sizing / packing policy lives in ``repro.batching``;
+``capacity_for`` / ``ladder_for`` are re-exported here for convenience.
+"""
+from .pipeline import (
+    BatchIterator, Prefetcher, build_device_batch, capacity_for, ladder_for,
+    stack_device_batches,
+)
 from .sampler import DefaultSampler, LoadBalanceSampler, cov_of_device_loads, device_loads
 from .synthetic import SyntheticConfig, SyntheticDataset, make_dataset
 
 __all__ = [
-    "BatchIterator", "Prefetcher", "capacity_for", "DefaultSampler",
+    "BatchIterator", "Prefetcher", "build_device_batch", "capacity_for",
+    "ladder_for", "stack_device_batches", "DefaultSampler",
     "LoadBalanceSampler", "cov_of_device_loads", "device_loads",
     "SyntheticConfig", "SyntheticDataset", "make_dataset",
 ]

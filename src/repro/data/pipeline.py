@@ -1,62 +1,63 @@
-"""Batching + capacity sizing + asynchronous prefetch (paper C8).
+"""Training-side batch iteration + asynchronous prefetch (paper C8).
 
-Capacities: XLA needs static shapes, so per-device graph batches are padded
-to fixed (atom, bond, angle) capacities derived from dataset statistics —
-``capacity_for`` sizes them at quantile + safety margin of the *per-shard*
-totals, which the LoadBalanceSampler keeps tight (low CoV -> low padding
-waste; the paper's C6 doubles as our padding-efficiency lever).
+All capacity/packing policy lives in ``repro.batching`` (bucketed capacity
+ladders, padded packing, compile cache); this module is the glue between a
+dataset, the samplers (paper C6) and that engine:
+
+  - ``BatchIterator`` accepts either one fixed ``BatchCapacities`` or a
+    ``CapacityLadder`` — with a ladder each global batch is packed into the
+    smallest bucket that fits its largest shard, so typical batches stop
+    paying the worst-case pad (the LoadBalanceSampler keeps shard totals
+    tight, which is what makes small buckets hit often);
+  - non-divisible global batches (``batch_size % num_devices != 0``) are
+    handled by padding every shard to a fixed number of *crystal slots*,
+    so per-device batches always stack to one shape.
 
 Prefetch: a background thread builds + device_puts the next batch while the
 current step runs (JAX dispatch is async) — the JAX analogue of the paper's
-separate CUDA copy stream.
+separate CUDA copy stream.  Worker exceptions are captured and re-raised in
+the consumer, not swallowed.
 """
 from __future__ import annotations
 
+import math
 import queue
 import threading
 
 import jax
 import numpy as np
 
-from repro.core.graph import BatchCapacities, CrystalGraphBatch, batch_crystals
+from repro.batching import (
+    BatchCapacities,
+    CapacityLadder,
+    batch_crystals,
+    capacity_for,
+    ladder_for,
+    stack_device_batches,
+)
+from repro.core.graph import CrystalGraphBatch
 from .sampler import DefaultSampler, LoadBalanceSampler
 from .synthetic import SyntheticDataset
 
-
-def capacity_for(
-    ds: SyntheticDataset,
-    per_device_batch: int,
-    *,
-    quantile: float = 0.99,
-    margin: float = 1.3,
-    align: int = 256,
-) -> BatchCapacities:
-    """Size per-device capacities from dataset statistics."""
-    atoms = np.array([c.num_atoms for c in ds.crystals])
-    bonds = np.array([g.num_bonds for g in ds.graphs])
-    angles = np.array([g.num_angles for g in ds.graphs])
-
-    def cap(x):
-        q = float(np.quantile(x, quantile))
-        raw = int(q * per_device_batch * margin)
-        return max(align, ((raw + align - 1) // align) * align)
-
-    return BatchCapacities(atoms=cap(atoms), bonds=cap(bonds), angles=cap(angles))
+__all__ = [
+    "BatchIterator", "Prefetcher", "build_device_batch",
+    "stack_device_batches", "capacity_for", "ladder_for",
+]
 
 
 def build_device_batch(
-    ds: SyntheticDataset, indices: np.ndarray, caps: BatchCapacities
+    ds: SyntheticDataset,
+    indices: np.ndarray,
+    caps: BatchCapacities,
+    *,
+    num_crystal_slots: int | None = None,
 ) -> CrystalGraphBatch:
     return batch_crystals(
         [ds.crystals[i] for i in indices],
         [ds.graphs[i] for i in indices],
         caps,
+        num_crystal_slots=num_crystal_slots,
     )
-
-
-def stack_device_batches(batches: list[CrystalGraphBatch]) -> CrystalGraphBatch:
-    """Stack per-device batches along a new leading axis (for shard_map)."""
-    return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *batches)
 
 
 class BatchIterator:
@@ -67,16 +68,25 @@ class BatchIterator:
         ds: SyntheticDataset,
         global_batch: int,
         num_devices: int,
-        caps: BatchCapacities,
+        caps: BatchCapacities | CapacityLadder,
         *,
         load_balance: bool = True,
         seed: int = 0,
         stack: bool | None = None,
     ):
+        if num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+        if global_batch < num_devices:
+            raise ValueError(
+                f"global_batch {global_batch} < num_devices {num_devices}"
+            )
         self.ds = ds
         self.global_batch = global_batch
         self.num_devices = num_devices
         self.caps = caps
+        # every shard is padded to this many crystal slots so that shards of
+        # unequal length (non-divisible global batch) stack to one shape
+        self.crystal_slots = math.ceil(global_batch / num_devices)
         # stacked (num_devices, ...) leaves for shard_map; plain batch else
         self.stack = (num_devices > 1) if stack is None else stack
         counts = ds.feature_counts()
@@ -86,9 +96,26 @@ class BatchIterator:
             else DefaultSampler(counts, seed)
         )
 
+    def _caps_for(self, shards: list[np.ndarray]) -> BatchCapacities:
+        """One capacity for all shards of this step (shapes must match)."""
+        if isinstance(self.caps, BatchCapacities):
+            return self.caps
+        na = nb = ng = 0
+        for s in shards:
+            na = max(na, sum(self.ds.crystals[i].num_atoms for i in s))
+            nb = max(nb, sum(self.ds.graphs[i].num_bonds for i in s))
+            ng = max(ng, sum(self.ds.graphs[i].num_angles for i in s))
+        return self.caps.bucket_for(na, nb, ng)
+
     def __iter__(self):
         for _idx, shards in self.sampler.epoch(self.global_batch, self.num_devices):
-            batches = [build_device_batch(self.ds, s, self.caps) for s in shards]
+            caps = self._caps_for(shards)
+            batches = [
+                build_device_batch(
+                    self.ds, s, caps, num_crystal_slots=self.crystal_slots
+                )
+                for s in shards
+            ]
             if self.stack:
                 yield stack_device_batches(batches)
             else:
@@ -97,13 +124,19 @@ class BatchIterator:
 
 
 class Prefetcher:
-    """Background-thread prefetch of up to ``depth`` device-put batches."""
+    """Background-thread prefetch of up to ``depth`` device-put batches.
+
+    A worker-thread exception is captured and re-raised in the consumer at
+    the point of failure — a bad batch must fail the epoch loudly, not
+    silently truncate it.
+    """
 
     _STOP = object()
 
     def __init__(self, iterator, depth: int = 2, device=None):
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.device = device
+        self._error: BaseException | None = None
 
         def worker():
             try:
@@ -111,6 +144,8 @@ class Prefetcher:
                     if self.device is not None:
                         item = jax.device_put(item, self.device)
                     self.q.put(item)
+            except BaseException as e:  # re-raised in the consumer
+                self._error = e
             finally:
                 self.q.put(self._STOP)
 
@@ -121,5 +156,7 @@ class Prefetcher:
         while True:
             item = self.q.get()
             if item is self._STOP:
+                if self._error is not None:
+                    raise self._error
                 return
             yield item

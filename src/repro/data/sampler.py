@@ -16,6 +16,16 @@ from __future__ import annotations
 import numpy as np
 
 
+def _validate_batch(batch_size: int, num_devices: int) -> None:
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    if batch_size < num_devices:
+        raise ValueError(
+            f"batch_size {batch_size} < num_devices {num_devices}: "
+            "every device needs at least one sample"
+        )
+
+
 def cov_of_device_loads(loads: np.ndarray) -> float:
     """Coefficient of variation of per-device load totals."""
     mu = float(np.mean(loads))
@@ -32,16 +42,19 @@ class DefaultSampler:
         self.rng = np.random.default_rng(seed)
 
     def epoch(self, batch_size: int, num_devices: int):
-        """Yields (global_indices, per_device_index_lists)."""
+        """Yields (global_indices, per_device_index_lists).
+
+        When ``batch_size % num_devices != 0`` the remainder is distributed
+        so shard lengths differ by at most one (no sample is dropped);
+        downstream packing pads every shard to a fixed number of crystal
+        slots so the shards still stack.
+        """
+        _validate_batch(batch_size, num_devices)
         n = self.counts.shape[0]
         perm = self.rng.permutation(n)
-        per_dev = batch_size // num_devices
         for s in range(0, n - batch_size + 1, batch_size):
             idx = perm[s:s + batch_size]
-            shards = [
-                idx[d * per_dev:(d + 1) * per_dev] for d in range(num_devices)
-            ]
-            yield idx, shards
+            yield idx, np.array_split(idx, num_devices)
 
 
 class LoadBalanceSampler:
@@ -52,22 +65,33 @@ class LoadBalanceSampler:
         self.rng = np.random.default_rng(seed)
 
     def assign(self, idx: np.ndarray, num_devices: int) -> list[np.ndarray]:
-        """Split one global batch's indices across devices, balanced."""
+        """Split one global batch's indices across devices, balanced.
+
+        Every shard gets exactly ``floor`` or ``ceil`` of
+        ``len(idx) / num_devices`` samples (never empty, never more than
+        ceil), so downstream packing can pad every shard to a fixed slot
+        count and no device trains on an all-padding batch.
+        """
         order = np.argsort(self.counts[idx], kind="stable")
         sorted_idx = idx[order]
+        base, rem = divmod(len(sorted_idx), num_devices)
+        targets = [base + (1 if d < rem else 0) for d in range(num_devices)]
         lo, hi = 0, len(sorted_idx) - 1
         shards: list[list[int]] = [[] for _ in range(num_devices)]
         d = 0
         while lo <= hi:
+            while len(shards[d]) >= targets[d]:
+                d = (d + 1) % num_devices
             shards[d].append(sorted_idx[lo])
             lo += 1
-            if lo <= hi:
+            if lo <= hi and len(shards[d]) < targets[d]:
                 shards[d].append(sorted_idx[hi])
                 hi -= 1
             d = (d + 1) % num_devices
         return [np.asarray(s, dtype=np.int64) for s in shards]
 
     def epoch(self, batch_size: int, num_devices: int):
+        _validate_batch(batch_size, num_devices)
         n = self.counts.shape[0]
         perm = self.rng.permutation(n)
         for s in range(0, n - batch_size + 1, batch_size):

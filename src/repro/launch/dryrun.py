@@ -104,7 +104,8 @@ def run_chgnet_cell(multi_pod: bool, global_batch: int = 2048) -> dict:
     import jax.numpy as jnp
 
     from repro.configs import chgnet_mptrj as C
-    from repro.core.graph import BatchCapacities, batch_input_specs
+    from repro.batching import BatchCapacities
+    from repro.core.graph import batch_input_specs
     from repro.train.trainer import TrainConfig, make_dp_train_step
     from repro.core.chgnet import chgnet_init
     from repro.optim.adam import adam_init

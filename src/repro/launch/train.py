@@ -22,10 +22,10 @@ import jax
 
 
 def train_chgnet(args):
+    from repro.batching import capacity_for, ladder_for
     from repro.configs import chgnet_mptrj as C
     from repro.data import (
-        BatchIterator, Prefetcher, SyntheticConfig, capacity_for,
-        make_dataset,
+        BatchIterator, Prefetcher, SyntheticConfig, make_dataset,
     )
     from repro.launch.mesh import make_host_mesh
     from repro.runtime import latest_step, run_with_restarts
@@ -33,7 +33,13 @@ def train_chgnet(args):
 
     n_dev = jax.device_count()
     ds = make_dataset(SyntheticConfig(num_crystals=args.crystals, seed=0))
-    caps = capacity_for(ds, max(1, args.batch // n_dev))
+    # ceil: non-divisible batches put up to ceil(batch/n_dev) samples on a
+    # shard, so capacities must be sized for that, not the floor
+    per_dev = -(-args.batch // n_dev)
+    # one worst-case capacity (single compiled step) or a bucket ladder
+    # (less padding waste, <= args.buckets compiled step shapes)
+    caps = (capacity_for(ds, per_dev) if args.buckets <= 1
+            else ladder_for(ds, per_dev, num_buckets=args.buckets))
     mesh = make_host_mesh() if n_dev > 1 else None
     model_cfg = C.FAST_FS_HEAD if args.readout == "direct" else C.FAST_WO_HEAD
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
@@ -118,6 +124,8 @@ def main():
                     choices=["plain", "bucketed", "compressed"])
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--buckets", type=int, default=2,
+                    help="capacity buckets (1 = single worst-case pad)")
     args = ap.parse_args()
     if args.arch == "chgnet":
         train_chgnet(args)

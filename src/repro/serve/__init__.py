@@ -1,0 +1,7 @@
+"""MD serving subsystem: bucketed batched inference + Verlet-skin reuse.
+
+Built on the shared ``repro.batching`` engine; see ``engine.py``.
+"""
+from .engine import BatchedMD, ServeEngine, structure_ladder
+
+__all__ = ["BatchedMD", "ServeEngine", "structure_ladder"]

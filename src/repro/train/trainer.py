@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.batching import CompileCache, global_compile_cache
 from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
 from repro.core.graph import CrystalGraphBatch
 from repro.core.losses import LossWeights, chgnet_loss
@@ -57,8 +58,16 @@ def chgnet_loss_fn(params, cfg: CHGNetConfig, batch: CrystalGraphBatch,
 # Single-device steps
 # ---------------------------------------------------------------------------
 
-def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig):
-    """Returns (train_step, eval_step, serve_step), all jitted."""
+def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
+                         *, cache: CompileCache | None = None):
+    """Returns (train_step, eval_step, serve_step), all jitted.
+
+    With ``cache`` (a ``repro.batching.CompileCache``), the jitted wrappers
+    are memoized per ``(kind, model_cfg, train_cfg)`` — a new Trainer after
+    a fault restart reuses the already-traced step instead of starting
+    from an empty jit cache.  (Per-shape/bucket specialisation below the
+    wrapper is jit's own cache; the ladder bounds how many shapes exist.)
+    """
 
     def lr_at(step):
         return cosine_annealing(
@@ -66,28 +75,45 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig):
             warmup_steps=train_cfg.warmup_steps,
         )
 
-    @jax.jit
-    def train_step(params, opt_state, batch, step):
-        (_, metrics), grads = jax.value_and_grad(
-            chgnet_loss_fn, has_aux=True
-        )(params, model_cfg, batch, train_cfg.loss)
-        grads = clip_by_global_norm(grads, train_cfg.grad_clip)
-        params, opt_state = adam_update(
-            grads, opt_state, params, lr_at(step), train_cfg.adam
-        )
-        return params, opt_state, metrics
+    def build_train():
+        @jax.jit
+        def train_step(params, opt_state, batch, step):
+            (_, metrics), grads = jax.value_and_grad(
+                chgnet_loss_fn, has_aux=True
+            )(params, model_cfg, batch, train_cfg.loss)
+            grads = clip_by_global_norm(grads, train_cfg.grad_clip)
+            params, opt_state = adam_update(
+                grads, opt_state, params, lr_at(step), train_cfg.adam
+            )
+            return params, opt_state, metrics
 
-    @jax.jit
-    def eval_step(params, batch):
-        _, metrics = chgnet_loss_fn(params, model_cfg, batch, train_cfg.loss)
-        return metrics
+        return train_step
 
-    @jax.jit
-    def serve_step(params, batch):
-        """One MD step's worth of inference (Table II)."""
-        return chgnet_apply(params, model_cfg, batch)
+    def build_eval():
+        @jax.jit
+        def eval_step(params, batch):
+            _, metrics = chgnet_loss_fn(params, model_cfg, batch,
+                                        train_cfg.loss)
+            return metrics
 
-    return train_step, eval_step, serve_step
+        return eval_step
+
+    def build_serve():
+        @jax.jit
+        def serve_step(params, batch):
+            """One MD step's worth of inference (Table II)."""
+            return chgnet_apply(params, model_cfg, batch)
+
+        return serve_step
+
+    if cache is None:
+        return build_train(), build_eval(), build_serve()
+    key = (model_cfg, train_cfg)
+    return (
+        cache.get(("chgnet_train",) + key, build_train),
+        cache.get(("chgnet_eval",) + key, build_eval),
+        cache.get(("chgnet_serve",) + key, build_serve),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -95,11 +121,17 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig):
 # ---------------------------------------------------------------------------
 
 def make_dp_train_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
-                       mesh: Mesh, axis: str = "data"):
+                       mesh: Mesh, axis: str = "data",
+                       *, cache: CompileCache | None = None):
     """Train step over per-device graph shards (leading axis = devices).
 
     batch leaves: (num_devices, ...) sharded P(axis); params replicated.
     """
+    if cache is not None:
+        return cache.get(
+            ("chgnet_dp_train", model_cfg, train_cfg, mesh, axis),
+            lambda: make_dp_train_step(model_cfg, train_cfg, mesh, axis),
+        )
 
     def lr_at(step):
         return cosine_annealing(
@@ -155,6 +187,7 @@ class Trainer:
         ckpt_dir: str | None = None,
         ckpt_every: int = 100,
         keep: int = 3,
+        compile_cache: CompileCache | None = None,
     ):
         self.model_cfg = model_cfg
         self.train_cfg = train_cfg
@@ -165,11 +198,17 @@ class Trainer:
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.keep = keep
+        # step functions go through the shared repro.batching compile cache
+        # so a restarted Trainer (fault tolerance path) reuses traced steps
+        cache = compile_cache if compile_cache is not None \
+            else global_compile_cache()
+        self.compile_cache = cache
         if mesh is not None:
-            self._train_step = make_dp_train_step(model_cfg, train_cfg, mesh)
+            self._train_step = make_dp_train_step(model_cfg, train_cfg, mesh,
+                                                  cache=cache)
         else:
             self._train_step, self._eval_step, self._serve_step = (
-                make_chgnet_step_fns(model_cfg, train_cfg)
+                make_chgnet_step_fns(model_cfg, train_cfg, cache=cache)
             )
         from repro.runtime.fault import StragglerWatch
 

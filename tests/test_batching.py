@@ -1,0 +1,209 @@
+"""Unified batching engine: capacity ladders, bucketed packing, compile
+cache, non-divisible global batches, prefetcher error propagation."""
+import numpy as np
+import pytest
+
+from repro.batching import (
+    BatchCapacities,
+    BatchingEngine,
+    CapacityLadder,
+    CompileCache,
+    batch_crystals,
+    capacity_for,
+    ladder_for,
+    ladder_from_stats,
+    padding_waste,
+    stack_device_batches,
+)
+from repro.core.neighbors import Crystal, build_graph
+from repro.data import (
+    BatchIterator, LoadBalanceSampler, Prefetcher, SyntheticConfig,
+    make_dataset,
+)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset(SyntheticConfig(num_crystals=64, max_atoms=32, seed=0))
+
+
+# ---------------------------------------------------------------------------
+# capacity ladder
+# ---------------------------------------------------------------------------
+
+def test_ladder_ascends_and_top_fits_dataset(ds):
+    lad = ladder_for(ds, per_device_batch=4, num_buckets=4)
+    totals = [b.total for b in lad.buckets]
+    assert totals == sorted(totals) and len(set(totals)) == len(totals)
+    # top bucket fits any 4 samples drawn from the dataset
+    worst = sorted(ds.feature_counts())[-4:]
+    na = 4 * max(c.num_atoms for c in ds.crystals)
+    nb = 4 * max(g.num_bonds for g in ds.graphs)
+    ng = 4 * max(g.num_angles for g in ds.graphs)
+    assert lad.top.fits(na, nb, ng), (lad.top, worst)
+
+
+def test_bucket_selection_never_truncates():
+    """Property-style: any random size gets a bucket that fits (overflow
+    buckets are synthesized for giants beyond the ladder top)."""
+    rng = np.random.default_rng(0)
+    lad = ladder_from_stats(
+        rng.integers(2, 40, 200), rng.integers(10, 900, 200),
+        rng.integers(0, 2000, 200), per_device_batch=4, num_buckets=3,
+    )
+    for _ in range(300):
+        na = int(rng.integers(1, 10_000))
+        nb = int(rng.integers(0, 100_000))
+        ng = int(rng.integers(0, 200_000))
+        b = lad.bucket_for(na, nb, ng)
+        assert b.fits(na, nb, ng), (na, nb, ng, b)
+
+
+def test_smallest_fitting_bucket_is_chosen():
+    lad = CapacityLadder(buckets=(
+        BatchCapacities(8, 64, 64),
+        BatchCapacities(16, 128, 128),
+        BatchCapacities(64, 512, 512),
+    ))
+    assert lad.bucket_for(4, 32, 10) == lad.buckets[0]
+    assert lad.bucket_for(9, 32, 10) == lad.buckets[1]
+    assert lad.bucket_for(60, 500, 500) == lad.buckets[2]
+
+
+def test_capacity_for_is_aligned_and_sufficient(ds):
+    caps = capacity_for(ds, per_device_batch=8)
+    assert caps.atoms % 256 == 0 and caps.bonds % 256 == 0
+    assert caps.atoms >= 8 and caps.bonds > 0
+
+
+# ---------------------------------------------------------------------------
+# packing with crystal slots
+# ---------------------------------------------------------------------------
+
+def _toy_crystals(ns, seed=0):
+    rng = np.random.default_rng(seed)
+    cs = [Crystal(lattice=np.eye(3) * 4.0, frac_coords=rng.random((n, 3)),
+                  atomic_numbers=rng.integers(1, 10, n)) for n in ns]
+    return cs, [build_graph(c) for c in cs]
+
+
+def test_crystal_slot_padding_and_stacking():
+    cs, gs = _toy_crystals([3, 5, 4])
+    caps = BatchCapacities(
+        atoms=32, bonds=sum(g.num_bonds for g in gs) + 8,
+        angles=sum(g.num_angles for g in gs) + 8)
+    # shards of unequal length pack to the same shapes via crystal slots
+    b1 = batch_crystals(cs[:2], gs[:2], caps, num_crystal_slots=3)
+    b2 = batch_crystals(cs[2:], gs[2:], caps, num_crystal_slots=3)
+    stacked = stack_device_batches([b1, b2])
+    assert stacked.lattice.shape == (2, 3, 3, 3)
+    assert float(np.asarray(stacked.crystal_mask).sum()) == 3
+    # padded crystal slots keep identity lattices (det != 0)
+    assert np.allclose(np.asarray(b2.lattice)[1:], np.eye(3))
+    with pytest.raises(ValueError):
+        batch_crystals(cs, gs, caps, num_crystal_slots=2)
+
+
+def test_stack_rejects_mismatched_shapes():
+    cs, gs = _toy_crystals([3, 3])
+    caps = BatchCapacities(16, 512, 2048)
+    b1 = batch_crystals(cs[:1], gs[:1], caps, num_crystal_slots=1)
+    b2 = batch_crystals(cs[1:], gs[1:], caps, num_crystal_slots=2)
+    with pytest.raises(ValueError, match="disagree"):
+        stack_device_batches([b1, b2])
+
+
+# ---------------------------------------------------------------------------
+# non-divisible global batches (regression)
+# ---------------------------------------------------------------------------
+
+def test_load_balance_sampler_distributes_remainder(ds):
+    counts = ds.feature_counts()
+    lb = LoadBalanceSampler(counts, 0)
+    idx = np.arange(10)
+    shards = lb.assign(idx, num_devices=4)
+    assert sorted(len(s) for s in shards) == [2, 2, 3, 3]
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(shards)), idx)
+    # regression: no device may end up with an all-padding (empty) shard
+    for b, d in [(5, 4), (7, 3), (9, 8), (6, 6)]:
+        lens = sorted(len(s) for s in lb.assign(np.arange(b), d))
+        assert lens[0] >= 1 and lens[-1] - lens[0] <= 1, (b, d, lens)
+
+
+def test_batch_iterator_non_divisible_batch_stacks(ds):
+    caps = capacity_for(ds, per_device_batch=3)
+    it = BatchIterator(ds, global_batch=10, num_devices=4, caps=caps)
+    batch = next(iter(it))
+    assert batch.lattice.shape == (4, 3, 3, 3)  # ceil(10/4) = 3 slots each
+    # no sample dropped: 10 real crystals across the 4 shards
+    assert float(np.asarray(batch.crystal_mask).sum()) == 10
+
+
+def test_batch_iterator_with_ladder(ds):
+    lad = ladder_for(ds, per_device_batch=4, num_buckets=3)
+    it = BatchIterator(ds, global_batch=8, num_devices=2, caps=lad)
+    seen = set()
+    for i, batch in enumerate(it):
+        assert float(np.asarray(batch.crystal_mask).sum()) == 8
+        seen.add(batch.atom_z.shape)
+        if i >= 3:
+            break
+    assert len(seen) >= 1  # bucketed shapes, all packed without error
+
+
+def test_batch_iterator_validates_args(ds):
+    caps = capacity_for(ds, 4)
+    with pytest.raises(ValueError):
+        BatchIterator(ds, global_batch=2, num_devices=4, caps=caps)
+
+
+# ---------------------------------------------------------------------------
+# compile cache + engine stats
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_hits_and_misses():
+    cache = CompileCache()
+    calls = []
+
+    def build():
+        calls.append(1)
+        return lambda x: x + 1
+
+    key = ("step", BatchCapacities(8, 64, 64), 2, "cfg")
+    f1 = cache.get(key, build)
+    f2 = cache.get(key, build)
+    assert f1 is f2 and len(calls) == 1
+    assert cache.hits == 1 and cache.misses == 1
+    cache.get(("other",), build)
+    assert len(cache) == 2 and len(calls) == 2
+
+
+def test_engine_packs_and_tracks_waste():
+    cs, gs = _toy_crystals([4, 6])
+    lad = CapacityLadder(buckets=(
+        BatchCapacities(16, 1024, 4096), BatchCapacities(32, 4096, 16384)))
+    eng = BatchingEngine(lad, CompileCache())
+    batch, bucket = eng.pack(cs, gs)
+    assert bucket in lad.buckets
+    assert 0.0 < eng.mean_padding_waste < 1.0
+    assert eng.stats()["batches_packed"] == 1
+    assert abs(padding_waste(batch) - eng.mean_padding_waste) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# prefetcher error propagation (regression: was silently truncating)
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_reraises_worker_exception():
+    def gen():
+        yield 1
+        yield 2
+        raise RuntimeError("bad batch")
+
+    pf = Prefetcher(gen(), depth=1)
+    got = []
+    with pytest.raises(RuntimeError, match="bad batch"):
+        for x in pf:
+            got.append(x)
+    assert got == [1, 2]  # items before the failure still delivered

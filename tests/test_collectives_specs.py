@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die, on bare envs
 from hypothesis import given, settings, strategies as st
 
 from repro.launch.dryrun import collective_stats, _shape_bytes

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die, on bare envs
 from hypothesis import given, settings, strategies as st
 
 from repro.core import BatchCapacities, Crystal, batch_crystals, build_graph, chgnet_apply, chgnet_init

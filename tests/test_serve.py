@@ -1,0 +1,186 @@
+"""MD serving engine: Verlet-skin correctness over a toy MD run, bucket
+selection safety, multi-replica batched stepping."""
+import jax
+import numpy as np
+import pytest
+
+from repro.batching import batch_crystals
+from repro.configs import chgnet_mptrj as C
+from repro.core.chgnet import chgnet_apply, chgnet_init
+from repro.core.neighbors import Crystal, VerletNeighborList, build_graph
+from repro.serve import BatchedMD, ServeEngine, structure_ladder
+
+CFG = C.FAST_FS_HEAD
+
+
+def make_crystal(n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = (n * 14.0) ** (1 / 3)
+    return Crystal(lattice=np.eye(3) * a, frac_coords=rng.random((n, 3)),
+                   atomic_numbers=rng.integers(1, 60, n))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return chgnet_init(jax.random.PRNGKey(0), CFG)
+
+
+def _bond_set(g):
+    return set(zip(g.bond_center.tolist(), g.bond_nbr.tolist(),
+                   map(tuple, g.bond_image.tolist())))
+
+
+def test_verlet_skin_matches_full_rebuild_over_md_run(params):
+    """50-step toy MD: the skin-reused graph equals a from-scratch rebuild
+    every step, and the model forces agree within float tolerance."""
+    crystal = make_crystal(12, seed=3)
+    nlist = VerletNeighborList(crystal, CFG.r_cut_atom, CFG.r_cut_bond,
+                               skin=0.4)
+    serve = jax.jit(lambda p, b: chgnet_apply(p, CFG, b))
+    g0 = build_graph(crystal)
+    from repro.batching import BatchCapacities
+    caps = BatchCapacities(crystal.num_atoms + 4,
+                           int(g0.num_bonds * 1.5) + 64,
+                           int(g0.num_angles * 2.0) + 64)
+
+    vel = np.zeros((crystal.num_atoms, 3))
+    inv_lat = np.linalg.inv(crystal.lattice)
+    dt = 2e-3
+    checked_forces = 0
+    for step in range(50):
+        g_skin = nlist.update(crystal)
+        g_full = build_graph(crystal, CFG.r_cut_atom, CFG.r_cut_bond)
+        # graph topology identical every step
+        assert _bond_set(g_skin) == _bond_set(g_full), f"step {step}"
+        assert g_skin.num_angles == g_full.num_angles
+
+        out = serve(params, batch_crystals([crystal], [g_skin], caps))
+        f = np.asarray(out["forces"])[: crystal.num_atoms]
+        if step % 10 == 0:
+            out_full = serve(params, batch_crystals([crystal], [g_full], caps))
+            f_full = np.asarray(out_full["forces"])[: crystal.num_atoms]
+            np.testing.assert_allclose(f, f_full, rtol=1e-4, atol=1e-5)
+            checked_forces += 1
+        vel += f * dt
+        cart = crystal.cart_coords() + vel * dt
+        crystal.frac_coords = (cart @ inv_lat) % 1.0
+    assert checked_forces == 5
+    assert nlist.updates == 50
+    # the point of the skin: most steps reuse the candidate list
+    assert nlist.rebuilds < nlist.updates
+
+
+def test_verlet_rebuild_triggers_on_large_move():
+    crystal = make_crystal(8, seed=1)
+    nlist = VerletNeighborList(crystal, skin=0.5)
+    assert nlist.rebuilds == 1
+    # displace one atom by more than skin/2 (in cartesian A)
+    inv_lat = np.linalg.inv(crystal.lattice)
+    crystal.frac_coords = crystal.frac_coords.copy()
+    crystal.frac_coords[0] += (np.array([0.6, 0.0, 0.0]) @ inv_lat)
+    assert nlist.needs_rebuild(crystal)
+    nlist.update(crystal)
+    assert nlist.rebuilds == 2
+
+
+def test_verlet_wrap_safe_displacement():
+    """Wrapping frac coords across the boundary is not a large move."""
+    crystal = make_crystal(8, seed=2)
+    nlist = VerletNeighborList(crystal, skin=0.5)
+    crystal.frac_coords = (crystal.frac_coords + 0.999) % 1.0
+    # every atom moved by ~0.001 frac (minimum image), far below skin/2
+    assert nlist.max_displacement(crystal) < 0.05
+    assert not nlist.needs_rebuild(crystal)
+
+
+def test_verlet_graph_correct_after_boundary_wrap():
+    """Regression: an atom drifting across the periodic boundary (and
+    being wrapped by the MD driver) must not invalidate reused candidate
+    images — the returned graph must equal a from-scratch rebuild."""
+    n = 6
+    a = (n * 14.0) ** (1 / 3)
+    rng = np.random.default_rng(0)
+    frac = rng.random((n, 3)) * 0.5 + 0.25  # keep the rest interior
+    frac[0] = [0.995, 0.5, 0.5]
+    crystal = Crystal(lattice=np.eye(3) * a, frac_coords=frac,
+                      atomic_numbers=rng.integers(1, 60, n))
+    nlist = VerletNeighborList(crystal, skin=0.8)
+    nlist.update(crystal)
+    # tiny physical move that crosses the cell boundary -> wrapped coords
+    frac2 = frac.copy()
+    frac2[0, 0] = 1.004
+    crystal.frac_coords = frac2 % 1.0  # atom 0 now at 0.004
+    assert not nlist.needs_rebuild(crystal)  # ~0.04 A actual displacement
+    g_skin = nlist.update(crystal)
+    g_full = build_graph(crystal)
+    assert _bond_set(g_skin) == _bond_set(g_full)
+    assert g_skin.num_angles == g_full.num_angles
+
+
+def test_serve_engine_matches_direct_apply(params):
+    """Bucketed/padded engine prediction == direct single-structure apply."""
+    crystals = [make_crystal(n, seed=n) for n in (6, 9, 14)]
+    serve = ServeEngine.for_structures(params, CFG, crystals)
+    out = serve.predict(crystals)
+    for c, f_eng, e_eng in zip(crystals, out["forces"], out["energy"]):
+        g = build_graph(c, CFG.r_cut_atom, CFG.r_cut_bond)
+        from repro.batching import BatchCapacities
+        caps = BatchCapacities(c.num_atoms, g.num_bonds, g.num_angles)
+        ref = chgnet_apply(params, CFG, batch_crystals([c], [g], caps))
+        np.testing.assert_allclose(
+            f_eng, np.asarray(ref["forces"]), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            e_eng, float(ref["energy"][0]), rtol=1e-4, atol=1e-5)
+
+
+def test_bucket_selection_never_truncates_random_structures(params):
+    """Property-style: the engine packs random crystal sizes without ever
+    raising a capacity error, including sizes far beyond the ladder."""
+    rng = np.random.default_rng(0)
+    seed_crystals = [make_crystal(n, seed=n) for n in (6, 8, 10)]
+    serve = ServeEngine.for_structures(params, CFG, seed_crystals)
+    for trial in range(8):
+        n = int(rng.integers(2, 30))
+        c = make_crystal(n, seed=100 + trial)
+        out = serve.predict([c])
+        assert out["forces"][0].shape == (n, 3)
+        assert np.isfinite(out["energy"][0])
+
+
+def test_batched_md_replicas_are_independent(params):
+    """A replica stepped inside a batch evolves identically to the same
+    replica stepped alone (padding/batching leaks nothing)."""
+    import copy
+
+    mk = lambda: [make_crystal(10, seed=5), make_crystal(13, seed=6)]
+    serve = ServeEngine.for_structures(params, CFG, mk())
+
+    md_pair = BatchedMD(serve, mk(), dt=1e-3, skin=0.5)
+    out_pair = md_pair.step(5)
+
+    md_solo = BatchedMD(serve, [mk()[0]], dt=1e-3, skin=0.5)
+    out_solo = md_solo.step(5)
+
+    np.testing.assert_allclose(
+        out_pair["energy"][0], out_solo["energy"][0], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        out_pair["forces"][0], out_solo["forces"][0], rtol=1e-3, atol=1e-5)
+
+
+def test_structure_ladder_and_compile_cache_reuse(params):
+    crystals = [make_crystal(n, seed=n) for n in (6, 8, 10, 12)]
+    graphs = [build_graph(c) for c in crystals]
+    lad = structure_ladder(graphs, crystals)
+    for c, g in zip(crystals, graphs):
+        assert lad.bucket_for(
+            c.num_atoms, g.num_bonds, g.num_angles
+        ).fits(c.num_atoms, g.num_bonds, g.num_angles)
+
+    from repro.batching import CompileCache
+    serve = ServeEngine(params, CFG, lad, cache=CompileCache())
+    md = BatchedMD(serve, crystals, dt=1e-3, skin=0.5)
+    md.step(4)
+    stats = md.stats()
+    # compiled once per (bucket, slots); later steps are cache hits
+    assert stats["compile_cache_hits"] > 0
+    assert stats["compile_cache_entries"] <= len(lad.buckets) * 3
