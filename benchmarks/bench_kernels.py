@@ -3,9 +3,18 @@
 On CPU the *absolute* numbers reflect the interpreter, not Mosaic — the
 purpose here is regression coverage of wrapper overhead + the oracle
 path's wall time. HLO-level fusion quality is covered by the roofline.
+
+The aggregation sweep (scatter vs matmul vs sorted vs pallas) runs on a
+*realistic* bond/angle distribution — a packed synthetic-dataset batch, so
+segment sizes follow the long-tailed per-atom coordination / per-bond
+angle-count statistics the model actually sees, not uniform random ids.
+
+``--json PATH`` dumps the rows as JSON (uploaded as a CI artifact).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -48,9 +57,54 @@ def run(quick: bool = False):
     ref_two = jax.jit(lambda xx: ref.fused_gated_mlp_ref(
         xx, wc, z, wg, z, o, z, o, z))
     rows.append(("kern_gatedmlp_oracle_jit", _time(ref_two, x), f"m={m}"))
+
+    rows.extend(run_aggregation(quick=quick))
+    return rows
+
+
+def run_aggregation(quick: bool = False, dim: int = 64):
+    """scatter vs matmul vs sorted vs pallas on a packed real-graph batch."""
+    from repro.core.interaction import segment_aggregate
+    from repro.data import BatchIterator, SyntheticConfig, capacity_for, \
+        make_dataset
+
+    ds = make_dataset(SyntheticConfig(
+        num_crystals=16 if quick else 64,
+        max_atoms=24 if quick else 48, seed=0,
+    ))
+    per_batch = 4 if quick else 16
+    caps = capacity_for(ds, per_batch, align=64)
+    batch = next(iter(BatchIterator(ds, per_batch, 1, caps)))
+
+    rng = np.random.default_rng(1)
+    rows = []
+    for name, ids, n_seg, mask, offs in (
+        ("bond", batch.bond_center, batch.atom_cap, batch.bond_mask,
+         batch.bond_offsets),
+        ("angle", batch.angle_ij, batch.bond_cap, batch.angle_mask,
+         batch.angle_offsets),
+    ):
+        v = jnp.asarray(rng.normal(0, 1, (ids.shape[0], dim)), jnp.float32)
+        note = (f"E={int(mask.sum())}/{ids.shape[0]} S={n_seg} D={dim}")
+        for impl in ("scatter", "matmul", "sorted", "pallas"):
+            fn = jax.jit(lambda vv, impl=impl, ids=ids, n_seg=n_seg,
+                         mask=mask, offs=offs: segment_aggregate(
+                             vv, ids, n_seg, mask, impl, offsets=offs))
+            rows.append((f"agg_{name}_{impl}", _time(fn, v), note))
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    for r in rows:
         print(",".join(map(str, r)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                [{"name": n, "us_per_call": t, "note": note}
+                 for n, t, note in rows], f, indent=2)

@@ -21,6 +21,7 @@ from .pack import (
     batch_crystals,
     padding_waste,
     stack_device_batches,
+    validate_layout,
 )
 
 __all__ = [
@@ -28,5 +29,5 @@ __all__ = [
     "capacity_from_stats", "ladder_for", "ladder_from_stats",
     "BatchingEngine", "CompileCache", "global_compile_cache",
     "atom_offsets", "batch_crystals", "padding_waste",
-    "stack_device_batches",
+    "stack_device_batches", "validate_layout",
 ]

@@ -70,9 +70,14 @@ class BatchingEngine:
     """
 
     def __init__(self, ladder: CapacityLadder,
-                 cache: CompileCache | None = None):
+                 cache: CompileCache | None = None,
+                 *, validate_layout: bool = True):
         self.ladder = ladder
         self.cache = cache if cache is not None else global_compile_cache()
+        # sorted-segment layout check on every packed batch (DESIGN.md §1);
+        # a few O(E) numpy passes — serving loops that trust their graph
+        # producers can turn it off
+        self.validate_layout = validate_layout
         self.batches_packed = 0
         self._waste_sum = 0.0
 
@@ -98,7 +103,8 @@ class BatchingEngine:
         """Pack into the smallest fitting bucket; returns (batch, bucket)."""
         caps = caps if caps is not None else self.select(crystals, graphs)
         batch = batch_crystals(
-            crystals, graphs, caps, num_crystal_slots=num_crystal_slots
+            crystals, graphs, caps, num_crystal_slots=num_crystal_slots,
+            validate=self.validate_layout,
         )
         self.batches_packed += 1
         self._waste_sum += padding_waste(batch)

@@ -9,6 +9,22 @@ the front, masks mark validity, padded bonds/angles point at slot 0 with
 zeroed payloads so segment-sums are unaffected.  ``num_crystal_slots``
 additionally pads the *crystal* axis, so shards with unequal numbers of
 structures (non-divisible global batches) still stack to one fixed shape.
+
+Sorted-segment layout (DESIGN.md §1): on top of the padding convention,
+packing canonicalizes the graph indices so that
+
+  - real bonds are sorted by ``bond_center`` (stable, so per-center
+    neighbor order is preserved),
+  - real angles are sorted by ``angle_ij`` after remapping through the
+    bond permutation,
+  - CSR row pointers ``bond_offsets: (atom_cap+1,)`` and
+    ``angle_offsets: (bond_cap+1,)`` delimit each segment's contiguous run
+    (last entry == number of real entries, excluding the padded tail).
+
+``validate_layout`` checks the invariant cheaply (a few O(E) numpy
+passes); packing validates by default so every producer — the training
+pipeline, the serve engine's Verlet rebuild path — emits certified-sorted
+batches that the fused aggregation kernels can consume without atomics.
 """
 from __future__ import annotations
 
@@ -22,6 +38,13 @@ from repro.core.neighbors import Crystal, GraphIndices
 from .capacity import BatchCapacities
 
 
+def _csr_offsets(sorted_ids: np.ndarray, num_segments: int) -> np.ndarray:
+    """Row pointers for sorted segment ids: offsets[s] = first index of s."""
+    return np.searchsorted(
+        sorted_ids, np.arange(num_segments + 1)
+    ).astype(np.int32)
+
+
 def batch_crystals(
     crystals: list[Crystal],
     graphs: list[GraphIndices],
@@ -29,6 +52,7 @@ def batch_crystals(
     *,
     num_crystal_slots: int | None = None,
     dtype=np.float32,
+    validate: bool = True,
 ) -> CrystalGraphBatch:
     """Pack crystals + pre-built graph indices into one padded batch.
 
@@ -36,6 +60,10 @@ def batch_crystals(
     size capacities from dataset statistics / the bucketing policy).
     Padded crystal slots (``num_crystal_slots > len(crystals)``) get
     identity lattices and zero ``crystal_mask``.
+
+    The result satisfies the sorted-segment layout invariant (module
+    docstring / DESIGN.md §1); ``validate=False`` skips the final check
+    for hot loops that trust their graph producers.
     """
     b = num_crystal_slots if num_crystal_slots is not None else len(crystals)
     if len(crystals) > b:
@@ -104,6 +132,33 @@ def batch_crystals(
         b_off += nb
         g_off += ng
 
+    # Canonicalize to the sorted-segment layout. ``build_graph`` already
+    # emits per-crystal indices sorted by center, and crystals are packed
+    # in atom order, so these stable argsorts are near-identity — the cost
+    # is one O(E log E) pass that certifies the invariant regardless of
+    # where the graphs came from.
+    perm_b = np.argsort(bond_center[:b_off], kind="stable")
+    for arr in (bond_center, bond_nbr, bond_image, bond_crystal, bond_mask):
+        arr[:b_off] = arr[perm_b]
+    # angles index into bonds: remap through the bond permutation first
+    inv_b = np.empty_like(perm_b)
+    inv_b[perm_b] = np.arange(b_off)
+    if g_off:
+        angle_ij[:g_off] = inv_b[angle_ij[:g_off]]
+        angle_ik[:g_off] = inv_b[angle_ik[:g_off]]
+    perm_a = np.argsort(angle_ij[:g_off], kind="stable")
+    for arr in (angle_ij, angle_ik, angle_mask):
+        arr[:g_off] = arr[perm_a]
+    bond_offsets = _csr_offsets(bond_center[:b_off], caps.atoms)
+    angle_offsets = _csr_offsets(angle_ij[:g_off], caps.bonds)
+
+    if validate:
+        # validate the host arrays *before* jnp.asarray — same certification
+        # as validate_layout(batch) but with zero device-to-host transfers
+        _validate_arrays(bond_mask, angle_mask, bond_center, angle_ij,
+                         bond_offsets, angle_offsets,
+                         atom_cap=caps.atoms, bond_cap=caps.bonds)
+
     return CrystalGraphBatch(
         atom_z=jnp.asarray(atom_z),
         atom_mask=jnp.asarray(atom_mask),
@@ -119,12 +174,63 @@ def batch_crystals(
         angle_ij=jnp.asarray(angle_ij),
         angle_ik=jnp.asarray(angle_ik),
         angle_mask=jnp.asarray(angle_mask),
+        bond_offsets=jnp.asarray(bond_offsets),
+        angle_offsets=jnp.asarray(angle_offsets),
         energy=jnp.asarray(energy),
         forces=jnp.asarray(forces),
         stress=jnp.asarray(stress),
         magmoms=jnp.asarray(magmoms),
         n_atoms_per_crystal=jnp.asarray(n_atoms),
     )
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(f"sorted-segment layout violated: {msg}")
+
+
+def validate_layout(batch: CrystalGraphBatch) -> CrystalGraphBatch:
+    """Cheap host-side check of the sorted-segment layout invariant.
+
+    Verifies (a few O(E) numpy passes): masks are contiguous real-prefix
+    indicators, real bonds/angles are sorted by their segment key, and the
+    CSR row pointers exactly describe the segment runs.  Pulls the
+    index/mask leaves to host, so use it on externally produced batches;
+    the pack path validates its numpy arrays pre-upload instead.  Returns
+    the batch for chaining; raises ValueError with the broken condition.
+    """
+    _validate_arrays(
+        np.asarray(batch.bond_mask), np.asarray(batch.angle_mask),
+        np.asarray(batch.bond_center), np.asarray(batch.angle_ij),
+        np.asarray(batch.bond_offsets), np.asarray(batch.angle_offsets),
+        atom_cap=batch.atom_cap, bond_cap=batch.bond_cap,
+    )
+    return batch
+
+
+def _validate_arrays(bond_mask, angle_mask, bond_center, angle_ij,
+                     bond_offsets, angle_offsets, *,
+                     atom_cap: int, bond_cap: int) -> None:
+    _check(bond_offsets.shape == (atom_cap + 1,),
+           f"bond_offsets shape {bond_offsets.shape}")
+    _check(angle_offsets.shape == (bond_cap + 1,),
+           f"angle_offsets shape {angle_offsets.shape}")
+    for name, mask, ids, offs in (
+        ("bond", bond_mask, bond_center, bond_offsets),
+        ("angle", angle_mask, angle_ij, angle_offsets),
+    ):
+        n_real = int(mask.sum())
+        _check(np.all(mask[:n_real] == 1.0) and np.all(mask[n_real:] == 0.0),
+               f"{name}_mask is not a real-prefix indicator")
+        _check(np.all(np.diff(ids[:n_real]) >= 0),
+               f"real {name}s not sorted by segment id")
+        _check(offs[0] == 0 and offs[-1] == n_real,
+               f"{name}_offsets endpoints != (0, {n_real})")
+        _check(np.all(np.diff(offs) >= 0),
+               f"{name}_offsets not monotone")
+        expect = np.searchsorted(ids[:n_real], np.arange(offs.shape[0]))
+        _check(np.array_equal(offs, expect),
+               f"{name}_offsets disagree with sorted {name} segment ids")
 
 
 def atom_offsets(crystals: list[Crystal]) -> np.ndarray:

@@ -46,7 +46,7 @@ class CHGNetConfig:
     readout: str = "direct"      # "direct" (F/S heads) | "autodiff" (reference)
     block_variant: str = "fast"  # "fast" (dep. elimination) | "reference"
     mlp_impl: str = "packed"     # "ref" | "packed" | "pallas"
-    agg_impl: str = "scatter"    # "scatter" | "matmul"
+    agg_impl: str = "scatter"    # "scatter" | "matmul" | "sorted" | "pallas"
     envelope_impl: str = "factored"  # "factored" | "reference"
     stress_scale: float = 0.1
 
@@ -158,7 +158,8 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
         v, e, a, vec, dist = _trunk(params, cfg, graph)
         energy = heads.energy_head_apply(params["energy_head"], graph, v)
         magmom = heads.magmom_head_apply(params["magmom_head"], graph, v)
-        forces = heads.force_head_apply(params["force_head"], graph, e, vec, dist)
+        forces = heads.force_head_apply(params["force_head"], graph, e, vec,
+                                        dist, agg_impl=cfg.agg_impl)
         stress = heads.stress_head_apply(params["stress_head"], graph, v)
         return {"energy": energy, "forces": forces, "stress": stress,
                 "magmom": magmom}

@@ -7,7 +7,12 @@ variable-size concat batching (paper Alg. 1/2) is replaced by
   - every batch has capacities (atom_cap, bond_cap, angle_cap);
   - real entries are packed at the front, masks mark validity;
   - padded bonds/angles point at slot 0 with zeroed (masked) payloads, so
-    segment-sums are unaffected.
+    segment-sums are unaffected;
+  - *sorted-segment layout* (DESIGN.md §1): real bonds are sorted by
+    ``bond_center`` and real angles by ``angle_ij``, with CSR row-pointer
+    arrays ``bond_offsets`` / ``angle_offsets`` delimiting each segment's
+    contiguous run — the invariant the deterministic tiled aggregation
+    kernels (``repro.kernels.fused_segment_sum``) rely on.
 
 This is the TPU-native analogue of the paper's "Parallel Computation of
 Basis" (Alg. 2): all crystals in the batch are processed by one fused
@@ -37,6 +42,7 @@ if TYPE_CHECKING:  # host-side capacity policy, see repro.batching
         "atom_z", "atom_mask", "atom_crystal", "frac_coords", "lattice",
         "crystal_mask", "bond_center", "bond_nbr", "bond_image",
         "bond_crystal", "bond_mask", "angle_ij", "angle_ik", "angle_mask",
+        "bond_offsets", "angle_offsets",
         "energy", "forces", "stress", "magmoms", "n_atoms_per_crystal",
     ],
     meta_fields=[],
@@ -63,6 +69,13 @@ class CrystalGraphBatch:
     angle_ij: jnp.ndarray       # (angle_cap,) int32
     angle_ik: jnp.ndarray       # (angle_cap,) int32
     angle_mask: jnp.ndarray     # (angle_cap,) f32
+    # CSR row pointers of the sorted-segment layout (DESIGN.md §1):
+    # real bonds [bond_offsets[i], bond_offsets[i+1]) have bond_center == i,
+    # real angles [angle_offsets[j], angle_offsets[j+1]) have angle_ij == j;
+    # the last entry is the real-entry count, so the padded tail is outside
+    # every row.
+    bond_offsets: jnp.ndarray   # (atom_cap + 1,) int32
+    angle_offsets: jnp.ndarray  # (bond_cap + 1,) int32
     # labels
     energy: jnp.ndarray         # (B,) f32 total energy (eV)
     forces: jnp.ndarray         # (atom_cap, 3) f32
@@ -108,6 +121,8 @@ def batch_input_specs(
         angle_ij=s((caps.angles,), i),
         angle_ik=s((caps.angles,), i),
         angle_mask=s((caps.angles,), f),
+        bond_offsets=s((caps.atoms + 1,), i),
+        angle_offsets=s((caps.bonds + 1,), i),
         energy=s((batch_size,), f),
         forces=s((caps.atoms, 3), f),
         stress=s((batch_size, 3, 3), f),

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from .graph import CrystalGraphBatch
-from .interaction import _glorot, linear_apply, linear_init
+from .interaction import _glorot, linear_apply, linear_init, segment_aggregate
 
 
 def mlp_init(key, dims, dtype=jnp.float32):
@@ -62,17 +62,21 @@ def force_head_init(key, dim=64, dtype=jnp.float32):
     return {"mlp": mlp_init(key, (dim, dim, 1), dtype)}
 
 
-def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist):
+def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
+                     *, agg_impl: str = "scatter"):
     """Eq. 7: F_i = sum_j n_ij * x_hat_ij (rotation equivariant).
 
     e: (bond_cap, D) final bond features (invariant); bond_vec/bond_dist
-    from compute_geometry.
+    from compute_geometry.  The per-atom reduction routes through the same
+    aggregation engine as the convolutions (DESIGN.md §2), so the sorted /
+    pallas layouts accelerate the force readout too.
     """
-    n_ij = mlp_apply(p["mlp"], e)[..., 0] * graph.bond_mask  # (Nb,)
+    n_ij = mlp_apply(p["mlp"], e)[..., 0]  # (Nb,); masked by the aggregate
     x_hat = bond_vec / (bond_dist[..., None] + 1e-12)
     contrib = n_ij[..., None] * x_hat  # (Nb, 3)
-    return jax.ops.segment_sum(
-        contrib, graph.bond_center, num_segments=graph.atom_cap
+    return segment_aggregate(
+        contrib, graph.bond_center, graph.atom_cap, graph.bond_mask,
+        agg_impl, offsets=graph.bond_offsets,
     ) * graph.atom_mask[..., None]
 
 

@@ -93,16 +93,28 @@ def gated_mlp_apply(p, x, impl: str = "packed"):
 
 
 # ---------------------------------------------------------------------------
-# Aggregation: masked segment sum, scatter- or MXU(one-hot-matmul)-based
+# Aggregation engine: one masked segment sum, four implementations
 # ---------------------------------------------------------------------------
 
-def segment_aggregate(values, segment_ids, num_segments, mask, impl="scatter"):
+def segment_aggregate(values, segment_ids, num_segments, mask, impl="scatter",
+                      *, offsets=None):
     """sum_{e : seg(e)=s} values[e] * mask[e]  -> (num_segments, D).
+
+    The one aggregation engine every reduction in the model routes through
+    (atom_conv, bond_conv, the direct force head).  Implementation matrix
+    in DESIGN.md §2:
 
     impl="scatter": jax segment_sum (scatter-add; reference).
     impl="matmul" : one-hot matmul — O(E*S) FLOPs but runs on the MXU with
-        no scatter; wins for the small segment counts of CHGNet batches
-        (TPU adaptation, see DESIGN.md §2).
+        no scatter; wins for the small segment counts of CHGNet batches.
+    impl="sorted" : requires real ids sorted by segment (DESIGN.md §1, no
+        CSR arrays needed).  Pure-jnp: remaps the padded tail onto the
+        last segment so the whole id array is non-decreasing, then lets XLA
+        lower a sorted segment_sum (``indices_are_sorted=True`` — no
+        unsorted-scatter fallback).
+    impl="pallas" : the fused tiled reduction kernel
+        (``repro.kernels.fused_segment_sum``) — deterministic, atomics-free,
+        MXU-tiled over the CSR rows.
     """
     v = values * mask[..., None]
     if impl == "scatter":
@@ -110,6 +122,23 @@ def segment_aggregate(values, segment_ids, num_segments, mask, impl="scatter"):
     if impl == "matmul":
         onehot = jax.nn.one_hot(segment_ids, num_segments, dtype=values.dtype)
         return jnp.einsum("es,ed->sd", onehot, v)
+    if impl == "sorted":
+        # padded tail ids are 0 by the padding convention; point them at
+        # the last segment (their payload is masked to zero) so the full
+        # array really is sorted before asserting it to XLA
+        ids = jnp.where(mask > 0, segment_ids, num_segments - 1)
+        return jax.ops.segment_sum(
+            v, ids, num_segments=num_segments, indices_are_sorted=True
+        )
+    if impl == "pallas":
+        if offsets is None:
+            raise ValueError(
+                'impl="pallas" needs CSR offsets (sorted-segment layout); '
+                "pack batches through repro.batching to get them"
+            )
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        return kops.fused_segment_sum(v, segment_ids, offsets, num_segments)
     raise ValueError(f"unknown aggregate impl {impl!r}")
 
 
@@ -135,7 +164,8 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl):
     )
     msg = gated_mlp_apply(p["atom_mlp"], f_v, mlp_impl) * e_a
     agg = segment_aggregate(
-        msg, graph.bond_center, graph.atom_cap, graph.bond_mask, agg_impl
+        msg, graph.bond_center, graph.atom_cap, graph.bond_mask, agg_impl,
+        offsets=graph.bond_offsets,
     )
     return v + linear_apply(p["atom_out"], agg) * graph.atom_mask[..., None]
 
@@ -152,7 +182,8 @@ def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl, agg_imp
     msg = gated_mlp_apply(p["bond_mlp"], f_e, mlp_impl)
     msg = msg * e_b[graph.angle_ij] * e_b[graph.angle_ik]
     agg = segment_aggregate(
-        msg, graph.angle_ij, graph.bond_cap, graph.angle_mask, agg_impl
+        msg, graph.angle_ij, graph.bond_cap, graph.angle_mask, agg_impl,
+        offsets=graph.angle_offsets,
     )
     return e + linear_apply(p["bond_out"], agg) * graph.bond_mask[..., None]
 

@@ -51,12 +51,14 @@ def build_device_batch(
     caps: BatchCapacities,
     *,
     num_crystal_slots: int | None = None,
+    validate: bool = True,
 ) -> CrystalGraphBatch:
     return batch_crystals(
         [ds.crystals[i] for i in indices],
         [ds.graphs[i] for i in indices],
         caps,
         num_crystal_slots=num_crystal_slots,
+        validate=validate,
     )
 
 
@@ -73,6 +75,8 @@ class BatchIterator:
         load_balance: bool = True,
         seed: int = 0,
         stack: bool | None = None,
+        drop_last: bool = True,
+        validate_layout: bool = True,
     ):
         if num_devices < 1:
             raise ValueError(f"num_devices must be >= 1, got {num_devices}")
@@ -84,6 +88,11 @@ class BatchIterator:
         self.global_batch = global_batch
         self.num_devices = num_devices
         self.caps = caps
+        self.drop_last = drop_last
+        # per-batch sorted-segment layout check (DESIGN.md §1); steady-state
+        # epoch loops over a trusted dataset can turn it off — packing
+        # establishes the invariant either way
+        self.validate_layout = validate_layout
         # every shard is padded to this many crystal slots so that shards of
         # unequal length (non-divisible global batch) stack to one shape
         self.crystal_slots = math.ceil(global_batch / num_devices)
@@ -108,11 +117,14 @@ class BatchIterator:
         return self.caps.bucket_for(na, nb, ng)
 
     def __iter__(self):
-        for _idx, shards in self.sampler.epoch(self.global_batch, self.num_devices):
+        for _idx, shards in self.sampler.epoch(
+            self.global_batch, self.num_devices, drop_last=self.drop_last
+        ):
             caps = self._caps_for(shards)
             batches = [
                 build_device_batch(
-                    self.ds, s, caps, num_crystal_slots=self.crystal_slots
+                    self.ds, s, caps, num_crystal_slots=self.crystal_slots,
+                    validate=self.validate_layout,
                 )
                 for s in shards
             ]

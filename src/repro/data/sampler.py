@@ -26,6 +26,22 @@ def _validate_batch(batch_size: int, num_devices: int) -> None:
         )
 
 
+def _epoch_slices(n: int, batch_size: int, num_devices: int,
+                  drop_last: bool):
+    """Start/stop of each global batch; optionally the tail remainder.
+
+    The tail is only yielded when it can give every device at least one
+    sample (downstream packing pads every shard to a fixed number of
+    crystal slots, so the short batch still stacks); a tail smaller than
+    ``num_devices`` is dropped even with ``drop_last=False``.
+    """
+    full_end = (n // batch_size) * batch_size
+    for s in range(0, full_end, batch_size):
+        yield s, s + batch_size
+    if not drop_last and n - full_end >= num_devices:
+        yield full_end, n
+
+
 def cov_of_device_loads(loads: np.ndarray) -> float:
     """Coefficient of variation of per-device load totals."""
     mu = float(np.mean(loads))
@@ -41,19 +57,22 @@ class DefaultSampler:
         self.counts = np.asarray(feature_counts)
         self.rng = np.random.default_rng(seed)
 
-    def epoch(self, batch_size: int, num_devices: int):
+    def epoch(self, batch_size: int, num_devices: int, *,
+              drop_last: bool = True):
         """Yields (global_indices, per_device_index_lists).
 
         When ``batch_size % num_devices != 0`` the remainder is distributed
         so shard lengths differ by at most one (no sample is dropped);
         downstream packing pads every shard to a fixed number of crystal
-        slots so the shards still stack.
+        slots so the shards still stack.  With ``drop_last=False`` the tail
+        partial batch (``n % batch_size`` samples) is yielded too instead
+        of being silently dropped (see ``_epoch_slices``).
         """
         _validate_batch(batch_size, num_devices)
         n = self.counts.shape[0]
         perm = self.rng.permutation(n)
-        for s in range(0, n - batch_size + 1, batch_size):
-            idx = perm[s:s + batch_size]
+        for s, e in _epoch_slices(n, batch_size, num_devices, drop_last):
+            idx = perm[s:e]
             yield idx, np.array_split(idx, num_devices)
 
 
@@ -90,12 +109,14 @@ class LoadBalanceSampler:
             d = (d + 1) % num_devices
         return [np.asarray(s, dtype=np.int64) for s in shards]
 
-    def epoch(self, batch_size: int, num_devices: int):
+    def epoch(self, batch_size: int, num_devices: int, *,
+              drop_last: bool = True):
+        """Like ``DefaultSampler.epoch`` (incl. ``drop_last``), balanced."""
         _validate_batch(batch_size, num_devices)
         n = self.counts.shape[0]
         perm = self.rng.permutation(n)
-        for s in range(0, n - batch_size + 1, batch_size):
-            idx = perm[s:s + batch_size]
+        for s, e in _epoch_slices(n, batch_size, num_devices, drop_last):
+            idx = perm[s:e]
             yield idx, self.assign(idx, num_devices)
 
 

@@ -11,19 +11,26 @@ Responsibilities:
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .flash_attention import flash_attention_pallas
 from .fused_fourier import fused_fourier_pallas
 from .fused_gated_mlp import fused_gated_mlp_pallas
 from .fused_rbf import fused_rbf_pallas
+from .fused_segment_sum import fused_segment_sum_pallas
 from .fused_swiglu import fused_swiglu_pallas
 
 
 @functools.cache
 def _interpret() -> bool:
+    # REPRO_KERNELS_INTERPRET=1 forces interpret mode regardless of backend
+    # (CI sets it so the kernel paths are exercised without a TPU).
+    if os.environ.get("REPRO_KERNELS_INTERPRET", "") not in ("", "0"):
+        return True
     return jax.default_backend() != "tpu"
 
 
@@ -68,6 +75,59 @@ def fused_gated_mlp(x, wc, bc, wg, bg, sc, oc, sg, og, *, block_m: int = 256):
         block_m=block_m, interpret=_interpret(),
     )
     return out[:m]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fused_segment_sum(values, segment_ids, offsets, num_segments,
+                       block_rows, chunk):
+    e, d = values.shape
+    ep = e + (-e) % chunk
+    dp = d + (-d) % 128
+    sp = num_segments + (-num_segments) % block_rows
+    values_p = jnp.pad(values, ((0, ep - e), (0, dp - d)))
+    seg_p = jnp.pad(segment_ids.astype(jnp.int32), (0, ep - e))[:, None]
+    # padded rows are empty: their pointers repeat offsets[-1] (= real edges)
+    offs_p = jnp.pad(offsets.astype(jnp.int32), (0, sp - num_segments),
+                     mode="edge")
+    out = fused_segment_sum_pallas(
+        values_p, seg_p, offs_p,
+        block_rows=block_rows, chunk=chunk, interpret=_interpret(),
+    )
+    return out[:num_segments, :d].astype(values.dtype)
+
+
+def _fused_segment_sum_fwd(values, segment_ids, offsets, num_segments,
+                           block_rows, chunk):
+    out = _fused_segment_sum(values, segment_ids, offsets, num_segments,
+                             block_rows, chunk)
+    return out, (segment_ids, offsets)
+
+
+def _fused_segment_sum_bwd(num_segments, block_rows, chunk, res, g):
+    # d/dv[e] of sum-into-rows is a gather: g[seg[e]] on real edges, 0 on
+    # the padded tail — no scatter in the backward pass either.
+    segment_ids, offsets = res
+    valid = jnp.arange(segment_ids.shape[0]) < offsets[num_segments]
+    dv = jnp.where(valid[:, None], g[segment_ids], 0.0).astype(g.dtype)
+    f0 = jax.dtypes.float0  # integer primals take symbolic-zero cotangents
+    return (dv, np.zeros(segment_ids.shape, f0), np.zeros(offsets.shape, f0))
+
+
+_fused_segment_sum.defvjp(_fused_segment_sum_fwd, _fused_segment_sum_bwd)
+
+
+def fused_segment_sum(values, segment_ids, offsets, num_segments: int,
+                      *, block_rows: int = 8, chunk: int = 256):
+    """Sorted-segment reduction: (E, D) edges -> (num_segments, D) rows.
+
+    Requires the sorted-segment layout (DESIGN.md §1): real edges sorted by
+    ``segment_ids`` with CSR ``offsets`` of shape (num_segments + 1,),
+    ``offsets[-1]`` == number of real edges.  Pads edges to a ``chunk``
+    multiple, lanes to 128, and rows to a ``block_rows`` multiple, then
+    slices back.  Differentiable (custom VJP: the backward is a gather).
+    """
+    return _fused_segment_sum(values, segment_ids, offsets, num_segments,
+                              block_rows, chunk)
 
 
 def fused_swiglu(x, w_gate, w_up, w_down, *, activation: str = "silu",

@@ -35,6 +35,18 @@ def fused_fourier_ref(theta, num_basis: int):
     return out / jnp.sqrt(jnp.pi).astype(theta.dtype)
 
 
+def sorted_segment_sum_ref(values, seg_ids, offsets, num_segments):
+    """(E, D) x (E,) x (S+1,) -> (S, D) sorted-segment reduction oracle.
+
+    ``offsets[-1]`` delimits the real edges; the padded tail (whatever its
+    segment ids) must contribute nothing, which the oracle enforces by
+    zeroing it before the reference scatter-add.
+    """
+    valid = jnp.arange(values.shape[0]) < offsets[num_segments]
+    v = jnp.where(valid[:, None], values, 0.0)
+    return jax.ops.segment_sum(v, seg_ids, num_segments=num_segments)
+
+
 def _layer_norm(x, scale, bias, eps=1e-5):
     mu = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.var(x, axis=-1, keepdims=True)

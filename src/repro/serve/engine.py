@@ -15,6 +15,13 @@ predictions with a direct-force readout.  Three levers over the naive
      memoized in the shared ``repro.batching`` compile cache keyed on
      ``(bucket, slots, config)``, so group membership can change freely
      without re-tracing.
+
+Every batch leaving the pack path satisfies the sorted-segment layout
+(DESIGN.md §1) — the Verlet refilter preserves bond order and packing
+canonicalizes + validates — so the serve step can run any
+``CHGNetConfig.agg_impl`` ("scatter" | "matmul" | "sorted" | "pallas")
+unchanged; set ``validate_layout=False`` to skip the per-batch check in
+tight MD loops.
 """
 from __future__ import annotations
 
@@ -77,10 +84,12 @@ class ServeEngine:
         ladder: CapacityLadder,
         *,
         cache: CompileCache | None = None,
+        validate_layout: bool = True,
     ):
         self.params = params
         self.model_cfg = model_cfg
-        self.engine = BatchingEngine(ladder, cache)
+        self.engine = BatchingEngine(ladder, cache,
+                                     validate_layout=validate_layout)
 
     @classmethod
     def for_structures(

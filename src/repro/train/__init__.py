@@ -1,4 +1,14 @@
 """Training loops and step builders."""
-from .trainer import TrainConfig, Trainer, make_chgnet_step_fns, make_dp_train_step
+from .trainer import (
+    TrainConfig,
+    Trainer,
+    make_chgnet_step_fns,
+    make_dp_eval_step,
+    make_dp_serve_step,
+    make_dp_train_step,
+)
 
-__all__ = ["TrainConfig", "Trainer", "make_chgnet_step_fns", "make_dp_train_step"]
+__all__ = [
+    "TrainConfig", "Trainer", "make_chgnet_step_fns",
+    "make_dp_eval_step", "make_dp_serve_step", "make_dp_train_step",
+]

@@ -172,6 +172,49 @@ def make_dp_train_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
     return jax.jit(sharded)
 
 
+def make_dp_eval_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
+                      mesh: Mesh, axis: str = "data",
+                      *, cache: CompileCache | None = None):
+    """Replicated-params eval over per-device graph shards -> pmean metrics."""
+    if cache is not None:
+        return cache.get(
+            ("chgnet_dp_eval", model_cfg, train_cfg, mesh, axis),
+            lambda: make_dp_eval_step(model_cfg, train_cfg, mesh, axis),
+        )
+
+    def local_eval(params, batch):
+        local_batch = jax.tree.map(lambda x: x[0], batch)
+        _, metrics = chgnet_loss_fn(params, model_cfg, local_batch,
+                                    train_cfg.loss)
+        return jax.lax.pmean(metrics, axis)
+
+    return jax.jit(shard_map(
+        local_eval, mesh=mesh,
+        in_specs=(P(), P(axis)), out_specs=P(), check_rep=False,
+    ))
+
+
+def make_dp_serve_step(model_cfg: CHGNetConfig, mesh: Mesh,
+                       axis: str = "data",
+                       *, cache: CompileCache | None = None):
+    """Replicated-params inference; outputs keep the leading device axis."""
+    if cache is not None:
+        return cache.get(
+            ("chgnet_dp_serve", model_cfg, mesh, axis),
+            lambda: make_dp_serve_step(model_cfg, mesh, axis),
+        )
+
+    def local_serve(params, batch):
+        local_batch = jax.tree.map(lambda x: x[0], batch)
+        out = chgnet_apply(params, model_cfg, local_batch)
+        return jax.tree.map(lambda x: x[None], out)
+
+    return jax.jit(shard_map(
+        local_serve, mesh=mesh,
+        in_specs=(P(), P(axis)), out_specs=P(axis), check_rep=False,
+    ))
+
+
 # ---------------------------------------------------------------------------
 # Trainer loop with periodic checkpoint + straggler watch
 # ---------------------------------------------------------------------------
@@ -204,7 +247,14 @@ class Trainer:
             else global_compile_cache()
         self.compile_cache = cache
         if mesh is not None:
+            # build all three steps: a mesh-mode Trainer must be able to
+            # eval and serve too (previously only _train_step existed, so
+            # multi-device eval/serve hit undefined attributes)
             self._train_step = make_dp_train_step(model_cfg, train_cfg, mesh,
+                                                  cache=cache)
+            self._eval_step = make_dp_eval_step(model_cfg, train_cfg, mesh,
+                                                cache=cache)
+            self._serve_step = make_dp_serve_step(model_cfg, mesh,
                                                   cache=cache)
         else:
             self._train_step, self._eval_step, self._serve_step = (
@@ -239,6 +289,16 @@ class Trainer:
         self.params, self.opt_state = state["params"], state["opt_state"]
         self.step = step
         return True
+
+    # -- eval / serve -------------------------------------------------------
+    def evaluate(self, batch) -> dict:
+        """Loss metrics on one batch (stacked per-device leaves in mesh mode)."""
+        return {k: float(v)
+                for k, v in self._eval_step(self.params, batch).items()}
+
+    def serve(self, batch):
+        """One inference step (E/F/sigma/magmom); Table II's workload."""
+        return self._serve_step(self.params, batch)
 
     # -- loop -----------------------------------------------------------------
     def train(self, batches, max_steps: int | None = None,

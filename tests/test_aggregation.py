@@ -1,0 +1,194 @@
+"""Aggregation engine: the four ``segment_aggregate`` impls must agree on
+random masked graphs (scatter / matmul / sorted / pallas-in-interpret), the
+sorted-segment layout must hold everywhere batches are packed, and the
+force head must stay rotation-equivariant under the sorted layout."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batching import BatchCapacities, batch_crystals, validate_layout
+from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
+from repro.core.interaction import segment_aggregate
+from repro.core.neighbors import Crystal, build_graph
+
+IMPLS = ("scatter", "matmul", "sorted", "pallas")
+
+
+def _random_sorted_layout(rng, num_edges, num_segments, dim, n_real):
+    """Raw arrays in the sorted-segment layout (padding convention incl.)."""
+    ids = np.sort(rng.integers(0, num_segments, n_real)).astype(np.int32)
+    seg = np.zeros(num_edges, np.int32)
+    seg[:n_real] = ids
+    offsets = np.searchsorted(ids, np.arange(num_segments + 1)).astype(np.int32)
+    mask = np.zeros(num_edges, np.float32)
+    mask[:n_real] = 1.0
+    values = rng.normal(0, 1, (num_edges, dim)).astype(np.float32)
+    return (jnp.asarray(values), jnp.asarray(seg), jnp.asarray(mask),
+            jnp.asarray(offsets))
+
+
+@pytest.mark.parametrize("num_edges,num_segments,dim,n_real", [
+    (256, 32, 64, 200),
+    (100, 17, 8, 100),   # no padding
+    (64, 9, 33, 0),      # all padding
+    (513, 200, 64, 400),  # many empty segments
+])
+def test_impls_agree_on_random_layouts(num_edges, num_segments, dim, n_real):
+    rng = np.random.default_rng(num_edges + n_real)
+    v, seg, mask, offs = _random_sorted_layout(
+        rng, num_edges, num_segments, dim, n_real)
+    want = segment_aggregate(v, seg, num_segments, mask, "scatter")
+    for impl in IMPLS[1:]:
+        got = segment_aggregate(v, seg, num_segments, mask, impl,
+                                offsets=offs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5, err_msg=impl)
+
+
+def test_pallas_impl_requires_offsets():
+    v = jnp.zeros((8, 4))
+    seg = jnp.zeros((8,), jnp.int32)
+    mask = jnp.ones((8,))
+    with pytest.raises(ValueError, match="offsets"):
+        segment_aggregate(v, seg, 4, mask, "pallas")
+    # "sorted" only needs sorted ids, not the CSR arrays
+    assert segment_aggregate(v, seg, 4, mask, "sorted").shape == (4, 4)
+
+
+def test_pallas_gradient_matches_scatter():
+    rng = np.random.default_rng(3)
+    v, seg, mask, offs = _random_sorted_layout(rng, 128, 16, 32, 100)
+
+    def total(vv, impl):
+        out = segment_aggregate(vv, seg, 16, mask, impl, offsets=offs)
+        return jnp.sum(out * jnp.cos(out))
+
+    g_ref = jax.grad(lambda vv: total(vv, "scatter"))(v)
+    for impl in ("sorted", "pallas"):
+        g = jax.grad(lambda vv: total(vv, impl))(v)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                                   rtol=1e-5, atol=1e-5, err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# property-based sweep (optional dep, like the other hypothesis suites)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        num_segments=st.integers(1, 40),
+        dim=st.integers(1, 80),
+        n_real=st.integers(0, 120),
+        pad=st.integers(0, 50),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_impls_agree_property(num_segments, dim, n_real, pad, seed):
+        rng = np.random.default_rng(seed)
+        v, seg, mask, offs = _random_sorted_layout(
+            rng, n_real + pad + 1, num_segments, dim, n_real)
+        want = segment_aggregate(v, seg, num_segments, mask, "scatter")
+        for impl in IMPLS[1:]:
+            got = segment_aggregate(v, seg, num_segments, mask, impl,
+                                    offsets=offs)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5, err_msg=impl)
+except ImportError:  # pragma: no cover - bare envs skip the property sweep
+    pass
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: packed crystal batches
+# ---------------------------------------------------------------------------
+
+def _crystal(rng, n):
+    return Crystal(lattice=np.eye(3) * 4.4 + rng.normal(0, .05, (3, 3)),
+                   frac_coords=rng.random((n, 3)),
+                   atomic_numbers=rng.integers(1, 60, n))
+
+
+def _packed_batch(seed=0, sizes=(5, 7, 4), pad=(8, 32, 48)):
+    rng = np.random.default_rng(seed)
+    cs = [_crystal(rng, n) for n in sizes]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(sum(sizes) + pad[0],
+                           sum(g.num_bonds for g in gs) + pad[1],
+                           sum(g.num_angles for g in gs) + pad[2])
+    return batch_crystals(cs, gs, caps), cs, gs
+
+
+def test_packed_batch_satisfies_layout():
+    batch, _, _ = _packed_batch()
+    validate_layout(batch)  # raises on violation
+
+
+def test_validate_layout_rejects_unsorted():
+    batch, _, _ = _packed_batch()
+    bc = np.asarray(batch.bond_center).copy()
+    n_real = int(np.asarray(batch.bond_mask).sum())
+    # swap a first-crystal bond with a last-crystal bond: centers differ,
+    # so the real prefix is no longer non-decreasing
+    bc[0], bc[n_real - 1] = bc[n_real - 1], bc[0]
+    broken = dataclasses.replace(batch, bond_center=jnp.asarray(bc))
+    with pytest.raises(ValueError, match="layout"):
+        validate_layout(broken)
+
+
+def test_validate_layout_rejects_bad_offsets():
+    batch, _, _ = _packed_batch()
+    offs = np.asarray(batch.bond_offsets).copy()
+    offs[1] += 1
+    broken = dataclasses.replace(batch, bond_offsets=jnp.asarray(offs))
+    with pytest.raises(ValueError, match="offsets"):
+        validate_layout(broken)
+
+
+@pytest.mark.parametrize("impl", IMPLS[1:])
+def test_chgnet_apply_matches_across_agg_impls(impl):
+    """Acceptance: end-to-end outputs match scatter to <= 1e-5."""
+    batch, _, _ = _packed_batch()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    want = chgnet_apply(params, CHGNetConfig(agg_impl="scatter"), batch)
+    got = chgnet_apply(params, CHGNetConfig(agg_impl=impl), batch)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-5, err_msg=f"{impl}:{k}")
+
+
+# ---------------------------------------------------------------------------
+# force-head rotation equivariance under the sorted layout
+# ---------------------------------------------------------------------------
+
+def _random_rotation(rng):
+    q, r = np.linalg.qr(rng.normal(size=(3, 3)))
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+@pytest.mark.parametrize("impl", ["sorted", "pallas"])
+def test_force_rotation_equivariance_sorted_layout(impl):
+    """Eq. 8 must survive the layout refactor: F(Rx) = R F(x)."""
+    rng = np.random.default_rng(7)
+    c = _crystal(rng, 5)
+    rot = _random_rotation(rng)
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout="direct", agg_impl=impl)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+
+    f1 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c], [g], caps))["forces"])
+    c2 = Crystal(lattice=c.lattice @ rot.T, frac_coords=c.frac_coords,
+                 atomic_numbers=c.atomic_numbers)
+    g2 = build_graph(c2)
+    f2 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c2], [g2], caps))["forces"])
+    n = c.num_atoms
+    np.testing.assert_allclose(f2[:n], f1[:n] @ rot.T, atol=2e-4)

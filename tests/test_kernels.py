@@ -48,6 +48,27 @@ def test_fused_gated_mlp_matches_oracle(m, d_in, d_out):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("e,s,d,n_real", [
+    (256, 8, 64, 256),    # aligned, no padding
+    (1000, 37, 64, 850),  # unaligned everything + padded tail
+    (64, 5, 16, 0),       # all edges padded
+    (7, 3, 200, 5),       # tiny E, wide D
+])
+def test_fused_segment_sum_matches_oracle(e, s, d, n_real):
+    ids = np.sort(RNG.integers(0, s, n_real)).astype(np.int32)
+    seg = np.zeros(e, np.int32)
+    seg[:n_real] = ids
+    offs = np.searchsorted(ids, np.arange(s + 1)).astype(np.int32)
+    v = RNG.normal(0, 1, (e, d)).astype(np.float32)
+    v[n_real:] = 0.0  # padded payloads are zeroed by convention
+    out = ops.fused_segment_sum(jnp.asarray(v), jnp.asarray(seg),
+                                jnp.asarray(offs), s)
+    want = ref.sorted_segment_sum_ref(jnp.asarray(v), jnp.asarray(seg),
+                                      jnp.asarray(offs), s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("act", ["silu", "gelu"])
 @pytest.mark.parametrize("m,d,f", [(128, 128, 512), (256, 64, 256)])
 def test_fused_swiglu_matches_oracle(act, m, d, f):

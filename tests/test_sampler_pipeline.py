@@ -45,6 +45,42 @@ def test_sampler_partitions_batch_exactly(ds):
         break
 
 
+@pytest.mark.parametrize("sampler_cls", [DefaultSampler, LoadBalanceSampler])
+def test_drop_last_flag(ds, sampler_cls):
+    """drop_last=False yields the tail partial batch; True (default) drops it."""
+    counts = ds.feature_counts()[:10]  # n=10: 3 full batches of 3 + tail 1
+    sampler = sampler_cls(counts, seed=0)
+
+    dropped = list(sampler.epoch(3, 1))
+    assert [len(idx) for idx, _ in dropped] == [3, 3, 3]
+
+    kept = list(sampler_cls(counts, seed=0).epoch(3, 1, drop_last=False))
+    assert [len(idx) for idx, _ in kept] == [3, 3, 3, 1]
+    seen = np.sort(np.concatenate([idx for idx, _ in kept]))
+    np.testing.assert_array_equal(seen, np.arange(10))  # nothing dropped
+    for idx, shards in kept:
+        np.testing.assert_array_equal(np.sort(np.concatenate(shards)),
+                                      np.sort(idx))
+
+    # a tail smaller than num_devices still can't be dealt to every device
+    tail_2dev = list(sampler_cls(counts, seed=0).epoch(3, 3, drop_last=False))
+    assert [len(idx) for idx, _ in tail_2dev] == [3, 3, 3]
+
+
+def test_batch_iterator_drop_last(ds):
+    """BatchIterator passes drop_last through; shards still stack."""
+    counts_n = 10
+    sub = type(ds)(crystals=ds.crystals[:counts_n],
+                   graphs=ds.graphs[:counts_n], cfg=ds.cfg)
+    caps = capacity_for(sub, per_device_batch=4)
+    batches = list(BatchIterator(sub, global_batch=4, num_devices=2,
+                                 caps=caps, drop_last=False))
+    assert len(batches) == 3  # 4 + 4 + tail 2
+    tail = batches[-1]
+    assert tail.atom_z.shape[0] == 2  # stacked per-device leaves
+    assert float(tail.crystal_mask.sum()) == 2.0  # one real crystal per shard
+
+
 def test_capacity_and_batches(ds):
     caps = capacity_for(ds, per_device_batch=8)
     it = BatchIterator(ds, global_batch=16, num_devices=2, caps=caps)

@@ -97,6 +97,40 @@ def test_dp_shard_map_matches_single_device(ds, caps):
         assert a["loss"] == pytest.approx(b["loss"], rel=1e-4)
 
 
+def test_mesh_trainer_builds_eval_and_serve_steps(ds, caps):
+    """Mesh-mode Trainer must eval/serve too, through the compile cache.
+
+    (Regression: __init__ only built _train_step in mesh mode, so eval or
+    serve on a multi-device run raised AttributeError.)"""
+    from jax.sharding import Mesh
+
+    from repro.batching import CompileCache
+
+    cfg = CHGNetConfig(readout="direct")
+    tcfg = TrainConfig(global_batch=8)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    cache = CompileCache()
+    tr = Trainer(cfg, tcfg, mesh=mesh, compile_cache=cache)
+    batch = next(iter(BatchIterator(ds, 8, 1, caps, stack=True)))
+
+    metrics = tr.evaluate(batch)
+    assert np.isfinite(metrics["loss"])
+    out = tr.serve(batch)
+    assert set(out) == {"energy", "forces", "stress", "magmom"}
+    # leading device axis preserved on served outputs
+    assert out["forces"].shape[0] == 1
+
+    # plain (non-mesh) Trainer exposes the same API
+    tr2 = Trainer(cfg, tcfg)
+    batch2 = next(iter(BatchIterator(ds, 8, 1, caps)))
+    assert np.isfinite(tr2.evaluate(batch2)["loss"])
+
+    # a second mesh Trainer reuses all three cached step builders
+    misses = cache.misses
+    Trainer(cfg, tcfg, mesh=mesh, compile_cache=cache)
+    assert cache.misses == misses and cache.hits >= 3
+
+
 def test_serve_step_md_inference(ds, caps):
     """Table II scenario: one-step MD inference returns all properties."""
     from repro.train.trainer import make_chgnet_step_fns
