@@ -1,5 +1,7 @@
-"""Fig. 8 reproduction: iteration time & memory under step-by-step
-optimizations (CPU wall-clock; the RATIOS are the paper's claim).
+"""Fig. 8 reproduction + fused-conv memory trajectory.
+
+Part 1 (``run``): iteration time under step-by-step optimizations (CPU
+wall-clock; the RATIOS are the paper's claim).
 
 Stages (cumulative, mirroring the paper):
   ref          : serial per-crystal basis (Alg. 1 style: one jitted call
@@ -8,9 +10,24 @@ Stages (cumulative, mirroring the paper):
   par_basis    : + parallel batched basis (Alg. 2 == padded batch, 1 call)
   fusion       : + packed GatedMLP + factored envelope + dependency elim.
   decoupled    : + direct Force/Stress heads (no 2nd-order derivatives)
+
+Part 2 (``run_conv_sweep``): the paper's 3.59x memory-footprint claim as a
+*tracked trajectory* instead of prose — sweeps ``conv_impl`` x ``agg_impl``
+on one jitted train step at fixed batch capacities and records, per combo,
+
+  - compiled peak temp memory (``.lower().compile().memory_analysis()``,
+    ``temp_size_in_bytes`` — the activation/workspace footprint; argument
+    and output sizes are identical across combos by construction), and
+  - step wall time + atoms/s throughput (the tokens/s of this workload).
+
+``--json PATH`` dumps ``{"stages": [...], "sweep": [...]}``; CI uploads it
+as an artifact next to bench_kernels.json (``--sweep-only`` skips the slow
+Fig. 8 stage loop there).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -90,6 +107,115 @@ def run(batch_size: int = 16, iters: int = 3):
     return rows
 
 
+def run_conv_sweep(
+    batch_size: int = 16,
+    iters: int = 3,
+    conv_impls: tuple = ("unfused", "fused"),
+    agg_impls: tuple = ("scatter", "sorted", "pallas"),
+    fused_agg_impls: tuple | None = None,
+    check: bool = True,
+):
+    """conv_impl x agg_impl sweep of one train step at FIXED capacities.
+
+    Returns dict rows with step time, atoms/s, and compiled peak temp
+    memory.  The acceptance bar for DESIGN.md §3 is that every "fused" row
+    has strictly lower ``peak_temp_bytes`` than its "unfused" counterpart
+    (messages are recomputed in the backward instead of saved).  Off-TPU
+    the fused rows' *wall time* measures the Pallas interpreter, not
+    Mosaic — only the memory column is meaningful there (same caveat as
+    bench_kernels).
+
+    ``fused_agg_impls`` restricts the fused half of the sweep (with
+    conv_impl="fused" the conv reductions live inside the megakernels, so
+    agg_impl barely moves the row — CI trims the near-duplicate, expensive
+    interpret-mode rows to one).
+    """
+    ds = make_dataset(SyntheticConfig(num_crystals=batch_size, max_atoms=24,
+                                      seed=0))
+    crystals, graphs = ds.crystals, ds.graphs
+    caps = BatchCapacities(
+        atoms=sum(c.num_atoms for c in crystals) + 8,
+        bonds=sum(g.num_bonds for g in graphs) + 8,
+        angles=sum(g.num_angles for g in graphs) + 8)
+    batch = batch_crystals(crystals, graphs, caps)
+    real_atoms = int(sum(c.num_atoms for c in crystals))
+
+    w = LossWeights()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    rows = []
+    for conv in conv_impls:
+        aggs = agg_impls if conv != "fused" or fused_agg_impls is None \
+            else fused_agg_impls
+        for agg in aggs:
+            cfg = CHGNetConfig(readout="direct", conv_impl=conv,
+                               agg_impl=agg)
+            grad_fn = jax.jit(jax.grad(
+                lambda p, b, cfg=cfg: chgnet_loss_fn(p, cfg, b, w)[0]))
+            compiled = grad_fn.lower(params, batch).compile()
+            mem = compiled.memory_analysis()
+            step_s = _time(grad_fn, params, batch, iters=iters)
+            rows.append({
+                "name": f"iter_conv_{conv}_agg_{agg}",
+                "conv_impl": conv,
+                "agg_impl": agg,
+                "step_us": step_s * 1e6,
+                "atoms_per_s": real_atoms / step_s,
+                "peak_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                          None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "note": (f"B={batch_size} atoms={real_atoms} "
+                         f"caps=({caps.atoms},{caps.bonds},{caps.angles})"),
+            })
+    if check:
+        _check_memory_bar(rows)
+    return rows
+
+
+def _check_memory_bar(rows):
+    """Enforce the §3 bar so a regression FAILS the CI bench step instead
+    of silently landing in the artifact: every fused row must undercut its
+    unfused counterpart's peak temp memory at identical capacities."""
+    by = {(r["conv_impl"], r["agg_impl"]): r["peak_temp_bytes"]
+          for r in rows}
+    for (conv, agg), peak in by.items():
+        if conv != "fused":
+            continue
+        unfused = by.get(("unfused", agg))
+        if peak is None or unfused is None:
+            print(f"WARNING: no memory_analysis on this backend "
+                  f"(agg={agg}); §3 memory bar not checked")
+            continue
+        if peak >= unfused:
+            raise RuntimeError(
+                f"conv_impl='fused' peak temp memory regressed: "
+                f"{peak:,} >= {unfused:,} bytes (agg_impl={agg!r}) — "
+                f"DESIGN.md §3 requires strictly lower")
+
+
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="skip the Fig. 8 stage loop (CI artifact mode)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (CI artifact)")
+    args = ap.parse_args()
+    bs, iters = (8, 1) if args.quick else (16, 3)
+    stage_rows = [] if args.sweep_only else run(batch_size=bs, iters=iters)
+    sweep_rows = run_conv_sweep(
+        batch_size=bs, iters=iters,
+        fused_agg_impls=("scatter",) if args.quick else None)
+    for r in stage_rows:
         print(",".join(map(str, r)))
+    for r in sweep_rows:
+        print(f"{r['name']},{r['step_us']},peak_temp={r['peak_temp_bytes']}"
+              f",atoms_per_s={r['atoms_per_s']:.0f}")
+    if args.json:
+        payload = {
+            "stages": [{"name": n, "us_per_iter": t, "note": note}
+                       for n, t, note in stage_rows],
+            "sweep": sweep_rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)

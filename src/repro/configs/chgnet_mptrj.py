@@ -20,6 +20,12 @@ FAST_WO_HEAD = REFERENCE.with_(
 # FastCHGNet "F/S head": + decoupled Force/Stress heads (paper C1)
 FAST_FS_HEAD = FAST_WO_HEAD.with_(readout="direct")
 
+# beyond Table I: + fused message-passing megakernels (DESIGN.md §3) — the
+# conv/readout message paths never materialize concat or message tensors in
+# HBM and recompute them in the backward (requires the §1 sorted layout,
+# which every repro.batching / repro.serve batch provides)
+FAST_FUSED = FAST_FS_HEAD.with_(conv_impl="fused", agg_impl="pallas")
+
 LOSS = LossWeights(energy=2.0, force=1.5, stress=0.1, magmom=0.1,
                    huber_delta=0.1)
 

@@ -47,6 +47,13 @@ class CHGNetConfig:
     block_variant: str = "fast"  # "fast" (dep. elimination) | "reference"
     mlp_impl: str = "packed"     # "ref" | "packed" | "pallas"
     agg_impl: str = "scatter"    # "scatter" | "matmul" | "sorted" | "pallas"
+    # "fused": one Pallas megakernel per conv (gather -> GatedMLP ->
+    # envelope -> reduce over sorted CSR rows; also fuses the direct force
+    # readout).  Requires the DESIGN.md §1 sorted-segment layout (any batch
+    # from repro.batching / repro.serve); subsumes mlp_impl/agg_impl at the
+    # conv call sites (angle_update and per-crystal sums still honor them).
+    # See DESIGN.md §3.
+    conv_impl: str = "unfused"   # "unfused" | "fused"
     envelope_impl: str = "factored"  # "factored" | "reference"
     stress_scale: float = 0.1
 
@@ -128,13 +135,14 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
             variant=cfg.block_variant,
             mlp_impl=cfg.mlp_impl,
             agg_impl=cfg.agg_impl,
+            conv_impl=cfg.conv_impl,
         )
     # last block updates atoms only (matches CHGNet's final atom conv)
     from .interaction import atom_conv
 
     v = atom_conv(
         params["final_block"], graph, v, e, e_a,
-        mlp_impl=cfg.mlp_impl, agg_impl=cfg.agg_impl,
+        mlp_impl=cfg.mlp_impl, agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
     )
     return v, e, a, vec, dist
 
@@ -159,7 +167,8 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
         energy = heads.energy_head_apply(params["energy_head"], graph, v)
         magmom = heads.magmom_head_apply(params["magmom_head"], graph, v)
         forces = heads.force_head_apply(params["force_head"], graph, e, vec,
-                                        dist, agg_impl=cfg.agg_impl)
+                                        dist, agg_impl=cfg.agg_impl,
+                                        conv_impl=cfg.conv_impl)
         stress = heads.stress_head_apply(params["stress_head"], graph, v)
         return {"energy": energy, "forces": forces, "stress": stress,
                 "magmom": magmom}

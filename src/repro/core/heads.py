@@ -63,16 +63,28 @@ def force_head_init(key, dim=64, dtype=jnp.float32):
 
 
 def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
-                     *, agg_impl: str = "scatter"):
+                     *, agg_impl: str = "scatter",
+                     conv_impl: str = "unfused"):
     """Eq. 7: F_i = sum_j n_ij * x_hat_ij (rotation equivariant).
 
     e: (bond_cap, D) final bond features (invariant); bond_vec/bond_dist
     from compute_geometry.  The per-atom reduction routes through the same
     aggregation engine as the convolutions (DESIGN.md §2), so the sorted /
-    pallas layouts accelerate the force readout too.
+    pallas layouts accelerate the force readout too.  With
+    ``conv_impl="fused"`` the whole readout (scalar MLP -> x_hat weighting
+    -> reduce) is one megakernel over the sorted CSR rows (DESIGN.md §3)
+    and ``n_ij`` never reaches HBM.
     """
-    n_ij = mlp_apply(p["mlp"], e)[..., 0]  # (Nb,); masked by the aggregate
     x_hat = bond_vec / (bond_dist[..., None] + 1e-12)
+    if conv_impl == "fused":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        l0, l1 = p["mlp"]  # force head is fixed at (dim -> dim -> 1)
+        return kops.fused_force_readout(
+            e, x_hat, l0["w"], l0["b"], l1["w"], l1["b"],
+            graph.bond_center, graph.bond_offsets, graph.atom_cap,
+        ) * graph.atom_mask[..., None]
+    n_ij = mlp_apply(p["mlp"], e)[..., 0]  # (Nb,); masked by the aggregate
     contrib = n_ij[..., None] * x_hat  # (Nb, 3)
     return segment_aggregate(
         contrib, graph.bond_center, graph.atom_cap, graph.bond_mask,

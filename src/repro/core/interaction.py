@@ -14,6 +14,19 @@ with three implementations:
   - ``packed`` : one GEMM against [Wc ‖ Wg] (+ single fused epilogue),
                  the Fig. 3 packing in pure jnp — what XLA sees on TPU
   - ``pallas`` : the hand-fused Pallas kernel (repro.kernels.fused_gated_mlp)
+
+GatedMLP parameters are STORED pre-packed (``w = [Wc ‖ Wg]``,
+``b``/``ln_scale``/``ln_bias`` = ``[core ‖ gate]``): the Fig. 3(a) concat
+happens once at init (or once at checkpoint load, see
+``pack_gated_mlp_params``), never inside a jitted step.  ``impl="ref"``
+slices the halves back out; slicing is free under XLA, re-concatenating
+per step was not.
+
+On top of the per-call-site impl choices, ``conv_impl="fused"`` (DESIGN.md
+§3) replaces the whole gather -> GatedMLP -> envelope -> reduce message
+path of atom_conv / bond_conv with one Pallas megakernel over the sorted
+CSR rows (requires DESIGN.md §1), so the (E, 3D)/(A_ang, 4D) concats and
+(E, D) messages never reach HBM and are never saved for the backward.
 """
 from __future__ import annotations
 
@@ -51,44 +64,99 @@ def layer_norm(x, scale, bias, eps=1e-5):
 # ---------------------------------------------------------------------------
 
 def gated_mlp_init(key, d_in, d_out, dtype=jnp.float32):
+    """Packed storage layout: the Fig. 3(a) concat happens HERE, once.
+
+    Each half is glorot-initialized with its own fan-out (identical
+    statistics to the legacy separate-weight layout) and packed so no step
+    function ever re-concatenates parameters.
+    """
     kc, kg = jax.random.split(key)
     return {
-        "wc": _glorot(kc, (d_in, d_out), dtype),
-        "bc": jnp.zeros((d_out,), dtype),
-        "wg": _glorot(kg, (d_in, d_out), dtype),
-        "bg": jnp.zeros((d_out,), dtype),
-        "ln_c_scale": jnp.ones((d_out,), dtype),
-        "ln_c_bias": jnp.zeros((d_out,), dtype),
-        "ln_g_scale": jnp.ones((d_out,), dtype),
-        "ln_g_bias": jnp.zeros((d_out,), dtype),
+        "w": jnp.concatenate(
+            [_glorot(kc, (d_in, d_out), dtype),
+             _glorot(kg, (d_in, d_out), dtype)], axis=1),
+        "b": jnp.zeros((2 * d_out,), dtype),
+        "ln_scale": jnp.ones((2 * d_out,), dtype),
+        "ln_bias": jnp.zeros((2 * d_out,), dtype),
     }
 
 
+_LEGACY_GATED_KEYS = frozenset(
+    ("wc", "bc", "wg", "bg",
+     "ln_c_scale", "ln_c_bias", "ln_g_scale", "ln_g_bias"))
+
+
+def pack_gated_mlp_params(tree):
+    """Convert legacy separate-weight GatedMLP dicts into the packed layout.
+
+    Walks an arbitrary pytree (params, Adam moments, full Trainer state)
+    and packs every dict whose keys are exactly the legacy GatedMLP set —
+    the checkpoint-load half of the "pack once" policy.
+    """
+    if isinstance(tree, dict):
+        if set(tree.keys()) == _LEGACY_GATED_KEYS:
+            return {
+                "w": jnp.concatenate([tree["wc"], tree["wg"]], axis=1),
+                "b": jnp.concatenate([tree["bc"], tree["bg"]], axis=0),
+                "ln_scale": jnp.concatenate(
+                    [tree["ln_c_scale"], tree["ln_g_scale"]], axis=0),
+                "ln_bias": jnp.concatenate(
+                    [tree["ln_c_bias"], tree["ln_g_bias"]], axis=0),
+            }
+        return {k: pack_gated_mlp_params(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [pack_gated_mlp_params(v) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(pack_gated_mlp_params(v) for v in tree)
+    return tree
+
+
+def gated_mlp_legacy_template(tree):
+    """Packed pytree -> legacy-layout template (for restoring old
+    checkpoints: restore into this, then ``pack_gated_mlp_params``)."""
+    if isinstance(tree, dict):
+        if set(tree.keys()) == {"w", "b", "ln_scale", "ln_bias"}:
+            d = tree["w"].shape[1] // 2
+            return {
+                "wc": tree["w"][:, :d], "wg": tree["w"][:, d:],
+                "bc": tree["b"][:d], "bg": tree["b"][d:],
+                "ln_c_scale": tree["ln_scale"][:d],
+                "ln_g_scale": tree["ln_scale"][d:],
+                "ln_c_bias": tree["ln_bias"][:d],
+                "ln_g_bias": tree["ln_bias"][d:],
+            }
+        return {k: gated_mlp_legacy_template(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [gated_mlp_legacy_template(v) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(gated_mlp_legacy_template(v) for v in tree)
+    return tree
+
+
 def gated_mlp_apply(p, x, impl: str = "packed"):
+    d = p["w"].shape[1] // 2
     if impl == "ref":
-        core = layer_norm(x @ p["wc"] + p["bc"], p["ln_c_scale"], p["ln_c_bias"])
-        gate = layer_norm(x @ p["wg"] + p["bg"], p["ln_g_scale"], p["ln_g_bias"])
+        core = layer_norm(x @ p["w"][:, :d] + p["b"][:d],
+                          p["ln_scale"][:d], p["ln_bias"][:d])
+        gate = layer_norm(x @ p["w"][:, d:] + p["b"][d:],
+                          p["ln_scale"][d:], p["ln_bias"][d:])
         return jax.nn.silu(core) * jax.nn.sigmoid(gate)
     if impl == "packed":
-        # Fig. 3(a): one GEMM against packed weights; Fig. 3(b): shared
-        # epilogue, silu(x) = x * sigmoid(x) reuses the sigmoid.
-        d = p["wc"].shape[1]
-        w = jnp.concatenate([p["wc"], p["wg"]], axis=1)
-        b = jnp.concatenate([p["bc"], p["bg"]], axis=0)
-        y = x @ w + b
+        # Fig. 3(a): one GEMM against the pre-packed weights (packed at
+        # init, not here); Fig. 3(b): shared epilogue, silu(x) =
+        # x * sigmoid(x) reuses the sigmoid.
+        y = x @ p["w"] + p["b"]
         core, gate = y[..., :d], y[..., d:]
-        core = layer_norm(core, p["ln_c_scale"], p["ln_c_bias"])
-        gate = layer_norm(gate, p["ln_g_scale"], p["ln_g_bias"])
+        core = layer_norm(core, p["ln_scale"][:d], p["ln_bias"][:d])
+        gate = layer_norm(gate, p["ln_scale"][d:], p["ln_bias"][d:])
         sg_core = jax.nn.sigmoid(core)
         sg_gate = jax.nn.sigmoid(gate)
         return (core * sg_core) * sg_gate
     if impl == "pallas":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
-        return kops.fused_gated_mlp(
-            x, p["wc"], p["bc"], p["wg"], p["bg"],
-            p["ln_c_scale"], p["ln_c_bias"], p["ln_g_scale"], p["ln_g_bias"],
-        )
+        return kops.fused_gated_mlp_packed(
+            x, p["w"], p["b"], p["ln_scale"], p["ln_bias"])
     raise ValueError(f"unknown GatedMLP impl {impl!r}")
 
 
@@ -157,34 +225,66 @@ def interaction_block_init(key, dim=64, dtype=jnp.float32):
     }
 
 
-def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl):
-    """Eq. 4: v_i <- v_i + L_v[ sum_j e^a_ij * phi(v_i, v_j, e_ij) ]."""
-    f_v = jnp.concatenate(
-        [v[graph.bond_center], v[graph.bond_nbr], e], axis=-1
-    )
-    msg = gated_mlp_apply(p["atom_mlp"], f_v, mlp_impl) * e_a
-    agg = segment_aggregate(
-        msg, graph.bond_center, graph.atom_cap, graph.bond_mask, agg_impl,
-        offsets=graph.bond_offsets,
-    )
+def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
+              conv_impl: str = "unfused"):
+    """Eq. 4: v_i <- v_i + L_v[ sum_j e^a_ij * phi(v_i, v_j, e_ij) ].
+
+    ``conv_impl="fused"`` runs the whole message path (gather -> GatedMLP
+    -> envelope -> reduce) as one Pallas megakernel over the sorted CSR
+    rows (DESIGN.md §3; requires §1; ``mlp_impl``/``agg_impl`` are
+    subsumed).  ``"unfused"`` keeps the composable impl matrix below.
+    """
+    if conv_impl == "fused":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        mlp = p["atom_mlp"]
+        agg = kops.fused_atom_conv(
+            v, e, e_a, mlp["w"], mlp["b"], mlp["ln_scale"], mlp["ln_bias"],
+            graph.bond_center, graph.bond_nbr, graph.bond_offsets,
+        )
+    elif conv_impl == "unfused":
+        f_v = jnp.concatenate(
+            [v[graph.bond_center], v[graph.bond_nbr], e], axis=-1
+        )
+        msg = gated_mlp_apply(p["atom_mlp"], f_v, mlp_impl) * e_a
+        agg = segment_aggregate(
+            msg, graph.bond_center, graph.atom_cap, graph.bond_mask, agg_impl,
+            offsets=graph.bond_offsets,
+        )
+    else:
+        raise ValueError(f"unknown conv impl {conv_impl!r}")
     return v + linear_apply(p["atom_out"], agg) * graph.atom_mask[..., None]
 
 
-def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl, agg_impl):
+def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
+              agg_impl, conv_impl: str = "unfused"):
     """Eq. 5: e_ij <- e_ij + L_e[ sum_k e^b_ij * e^b_ik * phi(f_e) ].
 
     ``v_in`` is v^{t+1} in the reference variant, v^t in the fast variant.
+    ``conv_impl`` as in ``atom_conv`` (DESIGN.md §3).
     """
     center = graph.bond_center[graph.angle_ij]
-    f_e = jnp.concatenate(
-        [v_in[center], e[graph.angle_ij], e[graph.angle_ik], a], axis=-1
-    )
-    msg = gated_mlp_apply(p["bond_mlp"], f_e, mlp_impl)
-    msg = msg * e_b[graph.angle_ij] * e_b[graph.angle_ik]
-    agg = segment_aggregate(
-        msg, graph.angle_ij, graph.bond_cap, graph.angle_mask, agg_impl,
-        offsets=graph.angle_offsets,
-    )
+    if conv_impl == "fused":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        mlp = p["bond_mlp"]
+        agg = kops.fused_bond_conv(
+            v_in, e, a, e_b, mlp["w"], mlp["b"], mlp["ln_scale"],
+            mlp["ln_bias"], graph.angle_ij, graph.angle_ik, center,
+            graph.angle_offsets,
+        )
+    elif conv_impl == "unfused":
+        f_e = jnp.concatenate(
+            [v_in[center], e[graph.angle_ij], e[graph.angle_ik], a], axis=-1
+        )
+        msg = gated_mlp_apply(p["bond_mlp"], f_e, mlp_impl)
+        msg = msg * e_b[graph.angle_ij] * e_b[graph.angle_ik]
+        agg = segment_aggregate(
+            msg, graph.angle_ij, graph.bond_cap, graph.angle_mask, agg_impl,
+            offsets=graph.angle_offsets,
+        )
+    else:
+        raise ValueError(f"unknown conv impl {conv_impl!r}")
     return e + linear_apply(p["bond_out"], agg) * graph.bond_mask[..., None]
 
 
@@ -213,13 +313,16 @@ def interaction_block_apply(
     variant: str = "fast",
     mlp_impl: str = "packed",
     agg_impl: str = "scatter",
+    conv_impl: str = "unfused",
     update_angles: bool = True,
 ):
     """One interaction block IB^t (paper Eq. 3), either variant."""
-    v_new = atom_conv(p, graph, v, e, e_a, mlp_impl=mlp_impl, agg_impl=agg_impl)
+    v_new = atom_conv(p, graph, v, e, e_a, mlp_impl=mlp_impl,
+                      agg_impl=agg_impl, conv_impl=conv_impl)
     if variant == "reference":
         e_new = bond_conv(
-            p, graph, v_new, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl
+            p, graph, v_new, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
+            conv_impl=conv_impl,
         )
         if update_angles:
             a_new = angle_update(p, graph, v_new, e_new, a, mlp_impl=mlp_impl)
@@ -228,7 +331,8 @@ def interaction_block_apply(
     elif variant == "fast":
         # Dependency elimination (Eq. 11): all three read layer-t features.
         e_new = bond_conv(
-            p, graph, v, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl
+            p, graph, v, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
+            conv_impl=conv_impl,
         )
         if update_angles:
             a_new = angle_update(p, graph, v, e, a, mlp_impl=mlp_impl)

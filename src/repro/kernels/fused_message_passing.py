@@ -1,0 +1,375 @@
+"""Fused gather -> GatedMLP -> reduce message-passing megakernels (C2+C4).
+
+The unfused hot path materializes, per interaction block and per layer, the
+gathered concat tensors (``(E, 3D)`` for atom_conv, ``(A_ang, 4D)`` for
+bond_conv) and the ``(E, D)`` message tensors in HBM — and autodiff then
+*saves all of them* for the backward pass.  These kernels fuse the whole
+message path over the sorted-CSR rows (DESIGN.md §1, §3) so none of those
+intermediates ever exists outside VMEM:
+
+  - the grid walks *destination-row tiles* (``block_rows`` rows per
+    program); CSR row pointers arrive via scalar prefetch, so each program
+    knows its edge range before it runs (same ownership model as
+    ``fused_segment_sum``: every row belongs to exactly one program, the
+    reduction is deterministic, the padded tail is never touched);
+  - edges are consumed in ``chunk``-aligned slices.  Per slice, operand
+    rows are gathered on the MXU: the *destination-side* operand (``v`` of
+    the center atom for atom_conv; ``e``/``e_b`` of the center bond for
+    bond_conv) via a windowed one-hot against the row tile — bounded
+    because sorted edges of a tile only name segments inside it — and the
+    *remote* operands (``v[bond_nbr]``, ``v[center]``/``e[angle_ik]``) via
+    a full one-hot against the VMEM-resident feature table;
+  - the concat-GEMM is algebraically split per operand
+    (``concat(xs) @ W == sum_k xs[k] @ W_k``), so even in VMEM the packed
+    concat row is never built; the packed ``[Wc ‖ Wg]`` GEMM halves share
+    one masked-LayerNorm + sigmoid epilogue (paper Fig. 3);
+  - envelope weights are applied in-register and the weighted messages are
+    accumulated straight into the destination tile with the transposed
+    windowed one-hot (one more MXU contraction).
+
+Feature lanes are padded to 128 by the ``ops`` wrappers; LayerNorm masks
+the padded lanes (static ``d_real``), so padding never biases statistics.
+
+VMEM note: like ``fused_segment_sum``, the feature tables (``v``, ``e``,
+``e_b``, edge payloads) are whole-array VMEM-resident — fine for interpret
+mode (CI) and CHGNet-scale batches on TPU; an HBM + double-buffered DMA
+variant is the follow-up for tables that outgrow VMEM.
+
+The backward story (recompute-in-kernel, "redundancy bypass") lives in the
+``ops`` custom VJPs: the forward saves *only the operands*, never the
+messages, and the backward rematerializes the message path (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm(a, b):
+    """a @ b on the MXU in f32."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _mm_t(a, b):
+    """a.T @ b (contract rows) on the MXU in f32."""
+    return jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _masked_ln(x, scale, bias, d_real: int, eps=1e-5):
+    """LayerNorm over the first ``d_real`` lanes; padded lanes stay zero."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    m = (cols < d_real).astype(x.dtype)
+    cnt = jnp.float32(d_real)
+    mu = jnp.sum(x * m, axis=-1, keepdims=True) / cnt
+    var = jnp.sum(jnp.square(x - mu) * m, axis=-1, keepdims=True) / cnt
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias) * m
+
+
+def _gated_epilogue(y, lns, lnb, hp: int, d_real: int):
+    """Packed-GEMM epilogue: both LNs + silu/sigmoid gating (Fig. 3b)."""
+    core = _masked_ln(y[:, :hp], lns[0, :hp], lnb[0, :hp], d_real)
+    gate = _masked_ln(y[:, hp:], lns[0, hp:], lnb[0, hp:], d_real)
+    # silu(core) = core * sigmoid(core): one kind of sigmoid evaluation
+    return (core * jax.nn.sigmoid(core)) * jax.nn.sigmoid(gate)
+
+
+def _window_onehot(seg, r0, start, end, base, chunk: int, block_rows: int):
+    """(chunk, block_rows) one-hot of edge->tile-row, zero outside [start, end)."""
+    e_ids = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    valid = (e_ids >= start) & (e_ids < end)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, block_rows), 1)
+    return ((seg - r0 == rows) & valid).astype(jnp.float32)
+
+
+def _gather_rows(ids, table_refs, tile: int):
+    """MXU row gather: ``[table[ids] for table in table_refs]``.
+
+    Walks the table in ``tile``-row windows (table rows must be a ``tile``
+    multiple — the ops wrappers pad) so the one-hot never exceeds
+    ``(chunk, tile)`` — a full-table one-hot would put an O(chunk x rows)
+    temp in VMEM.  Tables sharing the same ids (e/e_b in bond_conv) reuse
+    one one-hot per window.  Flops are O(chunk x rows x D): the classic
+    TPU gather-by-matmul trade; the HBM-DMA row fetch is the follow-up for
+    tables that outgrow VMEM (module docstring).
+    """
+    n_rows = table_refs[0].shape[0]
+    n = ids.shape[0]
+
+    def body(t, accs):
+        t0 = t * tile
+        cols = t0 + jax.lax.broadcasted_iota(jnp.int32, (n, tile), 1)
+        oh = (ids == cols).astype(jnp.float32)
+        return tuple(
+            acc + _mm(oh, ref[pl.ds(t0, tile), :])
+            for acc, ref in zip(accs, table_refs)
+        )
+
+    init = tuple(
+        jnp.zeros((n, ref.shape[1]), jnp.float32) for ref in table_refs)
+    return jax.lax.fori_loop(0, n_rows // tile, body, init)
+
+
+# ---------------------------------------------------------------------------
+# atom_conv megakernel: bonds -> atoms (Eq. 4 message path)
+# ---------------------------------------------------------------------------
+
+def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, v_full_ref, v_tile_ref,
+                      e_ref, ea_ref, w1_ref, w2_ref, w3_ref, b_ref,
+                      lns_ref, lnb_ref, out_ref, *, block_rows: int,
+                      chunk: int, d_real: int, gather_tile: int):
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    hp = b_ref.shape[-1] // 2
+
+    def body(k, carry):
+        base = k * chunk  # chunk-aligned, so slices never straddle the cap
+        seg = seg_ref[pl.ds(base, chunk), :]                   # (chunk, 1)
+        oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
+        v_c = _mm(oh_w, v_tile_ref[...])          # gather v[bond_center]
+        (v_n,) = _gather_rows(                    # gather v[bond_nbr]
+            nbr_ref[pl.ds(base, chunk), :], (v_full_ref,), gather_tile)
+        e_c = e_ref[pl.ds(base, chunk), :]        # edge-contiguous slice
+        # split concat-GEMM: [v_c ‖ v_n ‖ e] @ [Wc ‖ Wg] without the concat
+        y = _mm(v_c, w1_ref[...]) + _mm(v_n, w2_ref[...]) \
+            + _mm(e_c, w3_ref[...]) + b_ref[...]
+        msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
+        msg = msg * ea_ref[pl.ds(base, chunk), :]  # envelope e^a_ij
+        out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
+
+
+def fused_atom_conv_pallas(
+    v: jnp.ndarray,        # (A, DP) f32, A % block_rows == 0, DP % 128 == 0
+    e: jnp.ndarray,        # (E, DP) f32, E % chunk == 0
+    e_a: jnp.ndarray,      # (E, HP2) f32 envelope, lanes match the message
+    seg: jnp.ndarray,      # (E, 1) int32 bond_center, sorted over real prefix
+    nbr: jnp.ndarray,      # (E, 1) int32 bond_nbr
+    offsets: jnp.ndarray,  # (A + 1,) int32 CSR row pointers
+    w1: jnp.ndarray, w2: jnp.ndarray, w3: jnp.ndarray,  # (DP, 2*HP) each
+    b: jnp.ndarray,        # (1, 2*HP)
+    ln_scale: jnp.ndarray, ln_bias: jnp.ndarray,        # (1, 2*HP)
+    *,
+    d_real: int,
+    block_rows: int = 8,
+    chunk: int = 256,
+    gather_tile: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    a_rows, dp = v.shape
+    e_rows = e.shape[0]
+    hp2 = b.shape[-1]
+    assert e_rows % chunk == 0, (e_rows, chunk)
+    assert a_rows % block_rows == 0, (a_rows, block_rows)
+    assert a_rows % gather_tile == 0, (a_rows, gather_tile)
+    grid = (a_rows // block_rows,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((a_rows, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
+            pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, hp2 // 2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i, offs: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hp2 // 2),
+                               lambda i, offs: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_atom_conv_kernel, block_rows=block_rows,
+                          chunk=chunk, d_real=d_real,
+                          gather_tile=gather_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((a_rows, hp2 // 2), jnp.float32),
+        interpret=interpret,
+    )(offsets, seg, nbr, v, v, e, e_a, w1, w2, w3, b, ln_scale, ln_bias)
+
+
+# ---------------------------------------------------------------------------
+# bond_conv megakernel: angles -> bonds (Eq. 5 message path)
+# ---------------------------------------------------------------------------
+
+def _bond_conv_kernel(offs_ref, seg_ref, ik_ref, ctr_ref, v_ref, e_full_ref,
+                      e_tile_ref, eb_full_ref, eb_tile_ref, a_ref,
+                      w1_ref, w2_ref, w3_ref, w4_ref, b_ref,
+                      lns_ref, lnb_ref, out_ref, *, block_rows: int,
+                      chunk: int, d_real: int, gather_tile: int):
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    hp = b_ref.shape[-1] // 2
+
+    def body(k, carry):
+        base = k * chunk
+        seg = seg_ref[pl.ds(base, chunk), :]                   # angle_ij
+        oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
+        e_ij = _mm(oh_w, e_tile_ref[...])        # gather e[angle_ij]
+        eb_ij = _mm(oh_w, eb_tile_ref[...])      # gather e_b[angle_ij]
+        # e / e_b share angle_ik: one tiled one-hot gathers both
+        e_ik, eb_ik = _gather_rows(
+            ik_ref[pl.ds(base, chunk), :], (e_full_ref, eb_full_ref),
+            gather_tile)
+        (v_c,) = _gather_rows(                   # gather v[center]
+            ctr_ref[pl.ds(base, chunk), :], (v_ref,), gather_tile)
+        a_c = a_ref[pl.ds(base, chunk), :]       # edge-contiguous slice
+        y = _mm(v_c, w1_ref[...]) + _mm(e_ij, w2_ref[...]) \
+            + _mm(e_ik, w3_ref[...]) + _mm(a_c, w4_ref[...]) + b_ref[...]
+        msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
+        msg = msg * eb_ij * eb_ik                # envelope e^b_ij * e^b_ik
+        out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
+
+
+def fused_bond_conv_pallas(
+    v: jnp.ndarray,        # (A, DP) f32 atom features
+    e: jnp.ndarray,        # (B, DP) f32 bond features, B % block_rows == 0
+    a: jnp.ndarray,        # (E, DP) f32 angle features, E % chunk == 0
+    e_b: jnp.ndarray,      # (B, HP) f32 bond envelope (message lanes)
+    seg: jnp.ndarray,      # (E, 1) int32 angle_ij, sorted over real prefix
+    ik: jnp.ndarray,       # (E, 1) int32 angle_ik
+    ctr: jnp.ndarray,      # (E, 1) int32 bond_center[angle_ij]
+    offsets: jnp.ndarray,  # (B + 1,) int32 CSR row pointers
+    w1: jnp.ndarray, w2: jnp.ndarray, w3: jnp.ndarray, w4: jnp.ndarray,
+    b: jnp.ndarray,        # (1, 2*HP)
+    ln_scale: jnp.ndarray, ln_bias: jnp.ndarray,        # (1, 2*HP)
+    *,
+    d_real: int,
+    block_rows: int = 8,
+    chunk: int = 256,
+    gather_tile: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    a_rows, dp = v.shape
+    b_rows = e.shape[0]
+    e_rows = a.shape[0]
+    hp2 = b.shape[-1]
+    hp = hp2 // 2
+    assert e_rows % chunk == 0, (e_rows, chunk)
+    assert b_rows % block_rows == 0, (b_rows, block_rows)
+    assert b_rows % gather_tile == 0, (b_rows, gather_tile)
+    assert a_rows % gather_tile == 0, (a_rows, gather_tile)
+    grid = (b_rows // block_rows,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((a_rows, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((b_rows, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
+            pl.BlockSpec((b_rows, hp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((block_rows, hp), lambda i, offs: (i, 0)),
+            pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i, offs: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hp), lambda i, offs: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_bond_conv_kernel, block_rows=block_rows,
+                          chunk=chunk, d_real=d_real,
+                          gather_tile=gather_tile),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b_rows, hp), jnp.float32),
+        interpret=interpret,
+    )(offsets, seg, ik, ctr, v, e, e, e_b, e_b, a,
+      w1, w2, w3, w4, b, ln_scale, ln_bias)
+
+
+# ---------------------------------------------------------------------------
+# direct-force readout megakernel: bonds -> atoms (Eq. 7)
+# ---------------------------------------------------------------------------
+
+def _force_kernel(offs_ref, seg_ref, e_ref, xhat_ref, w1_ref, b1_ref,
+                  w2_ref, b2_ref, out_ref, *, block_rows: int, chunk: int):
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    def body(k, carry):
+        base = k * chunk
+        seg = seg_ref[pl.ds(base, chunk), :]
+        oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
+        e_c = e_ref[pl.ds(base, chunk), :]
+        h = jax.nn.silu(_mm(e_c, w1_ref[...]) + b1_ref[...])  # (chunk, DP)
+        # n_ij is a SCALAR per bond (Eq. 8 equivariance proof): a lane
+        # reduction instead of a 1-column matmul
+        n = jnp.sum(h * w2_ref[...], axis=-1, keepdims=True) + b2_ref[0, 0]
+        contrib = n * xhat_ref[pl.ds(base, chunk), :]          # (chunk, 3P)
+        out_ref[...] += _mm_t(oh_w, contrib).astype(out_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
+
+
+def fused_force_readout_pallas(
+    e: jnp.ndarray,        # (E, DP) f32 final bond features
+    x_hat: jnp.ndarray,    # (E, XP) f32 unit bond vectors, lanes 3..XP zero
+    seg: jnp.ndarray,      # (E, 1) int32 bond_center, sorted over real prefix
+    offsets: jnp.ndarray,  # (A + 1,) int32 CSR row pointers
+    w1: jnp.ndarray,       # (DP, DP)
+    b1: jnp.ndarray,       # (1, DP)
+    w2: jnp.ndarray,       # (1, DP) row vector (the (D, 1) head transposed)
+    b2: jnp.ndarray,       # (1, XP) scalar bias broadcast, read at [0, 0]
+    *,
+    block_rows: int = 8,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    e_rows, dp = e.shape
+    xp = x_hat.shape[1]
+    a_rows = offsets.shape[0] - 1
+    assert e_rows % chunk == 0, (e_rows, chunk)
+    assert a_rows % block_rows == 0, (a_rows, block_rows)
+    grid = (a_rows // block_rows,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, xp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((dp, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, dp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((1, xp), lambda i, offs: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, xp), lambda i, offs: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_force_kernel, block_rows=block_rows, chunk=chunk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((a_rows, xp), jnp.float32),
+        interpret=interpret,
+    )(offsets, seg, e, x_hat, w1, b1, w2, b2)

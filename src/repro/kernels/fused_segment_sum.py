@@ -36,6 +36,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(offs_ref, seg_ref, val_ref, out_ref, *, block_rows: int,
             chunk: int):
+    # windowed one-hot shared with the message-passing megakernels, which
+    # generalize this reduction (DESIGN.md §3)
+    from .fused_message_passing import _window_onehot
+
     i = pl.program_id(0)
     r0 = i * block_rows
     start = offs_ref[r0]
@@ -46,10 +50,8 @@ def _kernel(offs_ref, seg_ref, val_ref, out_ref, *, block_rows: int,
         base = k * chunk  # chunk-aligned, so slices never straddle the cap
         v = val_ref[pl.ds(base, chunk), :]                     # (chunk, D)
         s = seg_ref[pl.ds(base, chunk), :]                     # (chunk, 1)
-        e_ids = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
-        valid = (e_ids >= start) & (e_ids < end)
-        cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, block_rows), 1)
-        onehot = ((s - r0 == cols) & valid).astype(v.dtype)
+        onehot = _window_onehot(s, r0, start, end, base, chunk,
+                                block_rows).astype(v.dtype)
         out_ref[...] += jax.lax.dot_general(
             onehot, v, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,

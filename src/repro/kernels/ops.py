@@ -11,15 +11,22 @@ Responsibilities:
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import ref
 from .flash_attention import flash_attention_pallas
 from .fused_fourier import fused_fourier_pallas
 from .fused_gated_mlp import fused_gated_mlp_pallas
+from .fused_message_passing import (
+    fused_atom_conv_pallas,
+    fused_bond_conv_pallas,
+    fused_force_readout_pallas,
+)
 from .fused_rbf import fused_rbf_pallas
 from .fused_segment_sum import fused_segment_sum_pallas
 from .fused_swiglu import fused_swiglu_pallas
@@ -63,32 +70,41 @@ def fused_fourier(theta, num_basis: int, *, block_m: int = 512):
     return out[:n, :num_basis]
 
 
-def fused_gated_mlp(x, wc, bc, wg, bg, sc, oc, sg, og, *, block_m: int = 256):
-    """CHGNet GatedMLP with packed weights; x: (M, d_in) -> (M, d_out)."""
-    w_packed = jnp.concatenate([wc, wg], axis=1)
-    b_packed = jnp.concatenate([bc, bg], axis=0)
-    ln_scale = jnp.concatenate([sc, sg], axis=0)
-    ln_bias = jnp.concatenate([oc, og], axis=0)
+def fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, *, block_m: int = 256):
+    """CHGNet GatedMLP from pre-packed parameters (w = [Wc ‖ Wg], packed
+    once at init — repro.core.interaction.gated_mlp_init); no per-step
+    parameter concat inside the jitted step."""
     x_p, m = _pad_rows(x, block_m)
     out = fused_gated_mlp_pallas(
-        x_p, w_packed, b_packed, ln_scale, ln_bias,
+        x_p, w, b, ln_scale, ln_bias,
         block_m=block_m, interpret=_interpret(),
     )
     return out[:m]
+
+
+def fused_gated_mlp(x, wc, bc, wg, bg, sc, oc, sg, og, *, block_m: int = 256):
+    """CHGNet GatedMLP from separate core/gate weights (legacy calling
+    convention; packs on the fly — prefer ``fused_gated_mlp_packed``)."""
+    return fused_gated_mlp_packed(
+        x,
+        jnp.concatenate([wc, wg], axis=1),
+        jnp.concatenate([bc, bg], axis=0),
+        jnp.concatenate([sc, sg], axis=0),
+        jnp.concatenate([oc, og], axis=0),
+        block_m=block_m,
+    )
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def _fused_segment_sum(values, segment_ids, offsets, num_segments,
                        block_rows, chunk):
     e, d = values.shape
-    ep = e + (-e) % chunk
-    dp = d + (-d) % 128
-    sp = num_segments + (-num_segments) % block_rows
+    ep = _round_up(e, chunk)
+    dp = _round_up(d, 128)
+    sp = _round_up(num_segments, block_rows)
     values_p = jnp.pad(values, ((0, ep - e), (0, dp - d)))
-    seg_p = jnp.pad(segment_ids.astype(jnp.int32), (0, ep - e))[:, None]
-    # padded rows are empty: their pointers repeat offsets[-1] (= real edges)
-    offs_p = jnp.pad(offsets.astype(jnp.int32), (0, sp - num_segments),
-                     mode="edge")
+    seg_p = _pad_ids(segment_ids, ep)
+    offs_p = _pad_offsets(offsets, sp)
     out = fused_segment_sum_pallas(
         values_p, seg_p, offs_p,
         block_rows=block_rows, chunk=chunk, interpret=_interpret(),
@@ -128,6 +144,397 @@ def fused_segment_sum(values, segment_ids, offsets, num_segments: int,
     """
     return _fused_segment_sum(values, segment_ids, offsets, num_segments,
                               block_rows, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Fused message passing (gather -> GatedMLP -> envelope -> reduce, DESIGN §3)
+# ---------------------------------------------------------------------------
+#
+# The forward runs the megakernels in fused_message_passing.py: no (E, kD)
+# concat and no (E, D) message tensor ever reaches HBM.  The custom VJPs
+# implement the redundancy bypass on the backward side: the forward saves
+# ONLY the operands (which are live layer inputs anyway), and the backward
+# recomputes the message path chunk-by-chunk inside a fori_loop — a
+# per-chunk jax.vjp whose transient working set is one (chunk, kD) tile,
+# never the full edge set.  Message activations therefore exist nowhere:
+# not in the forward, not across forward/backward, and not whole-array in
+# the backward.
+
+_LANE = 128  # TPU lane width: feature dims and packed halves pad to this
+
+
+def _pad2(x, rows, cols):
+    return jnp.pad(x.astype(jnp.float32),
+                   ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+def _round_up(n: int, m: int) -> int:
+    return n + (-n) % m
+
+
+def _pad_rows_i32(x, rows):
+    return jnp.pad(x.astype(jnp.int32), (0, rows - x.shape[0]))
+
+
+def _pad_rows_f32(x, rows):
+    return jnp.pad(x.astype(jnp.float32), ((0, rows - x.shape[0]), (0, 0)))
+
+
+def _chunk_of(x, i0, chunk: int):
+    if x.ndim == 1:
+        return jax.lax.dynamic_slice(x, (i0,), (chunk,))
+    return jax.lax.dynamic_slice(x, (i0, 0), (chunk, x.shape[1]))
+
+
+def _pad_ids(ids, rows):
+    return _pad_rows_i32(ids, rows)[:, None]
+
+
+def _pack_lanes_vec(vec, d, hp):
+    """(2d,) packed [core ‖ gate] -> (1, 2*hp) with halves lane-padded."""
+    out = jnp.zeros((2 * hp,), jnp.float32)
+    out = out.at[:d].set(vec[:d].astype(jnp.float32))
+    out = out.at[hp:hp + d].set(vec[d:].astype(jnp.float32))
+    return out[None, :]
+
+
+def _pack_lanes_w(wk, dp, d, hp):
+    """(d_in_k, 2d) weight block -> (dp, 2*hp) with halves lane-padded."""
+    out = jnp.zeros((dp, 2 * hp), jnp.float32)
+    out = out.at[:wk.shape[0], :d].set(wk[:, :d].astype(jnp.float32))
+    out = out.at[:wk.shape[0], hp:hp + d].set(wk[:, d:].astype(jnp.float32))
+    return out
+
+
+def _pad_offsets(offsets, num_rows_padded):
+    # padded rows are empty: their pointers repeat offsets[-1] (= real edges)
+    pad = num_rows_padded + 1 - offsets.shape[0]
+    return jnp.pad(offsets.astype(jnp.int32), (0, pad), mode="edge")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12))
+def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
+                     bond_center, bond_nbr, offsets,
+                     block_rows, chunk, gather_tile):
+    a_rows, dim = v.shape
+    e_rows, de = e.shape
+    d = w.shape[1] // 2
+    # the wrapper splits w rows as [v_center | v_nbr | e] — fail loudly if
+    # the caller's operand widths disagree with that partition
+    assert w.shape[0] == 2 * dim + de, (w.shape, dim, de)
+    dp = _round_up(max(dim, de), _LANE)
+    hp = _round_up(d, _LANE)
+    # atoms are both the output rows (block_rows tiles) and the in-kernel
+    # nbr-gather table (gather_tile windows): pad to a common multiple
+    ap = _round_up(a_rows, math.lcm(block_rows, gather_tile))
+    ep = _round_up(e_rows, chunk)
+    out = fused_atom_conv_pallas(
+        _pad2(v, ap, dp), _pad2(e, ep, dp), _pad2(e_a, ep, hp),
+        _pad_ids(bond_center, ep), _pad_ids(bond_nbr, ep),
+        _pad_offsets(offsets, ap),
+        _pack_lanes_w(w[:dim], dp, d, hp),
+        _pack_lanes_w(w[dim:2 * dim], dp, d, hp),
+        _pack_lanes_w(w[2 * dim:], dp, d, hp),
+        _pack_lanes_vec(b, d, hp),
+        _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
+        d_real=d, block_rows=block_rows, chunk=chunk,
+        gather_tile=gather_tile, interpret=_interpret(),
+    )
+    return out[:a_rows, :d].astype(v.dtype)
+
+
+def _fused_atom_conv_fwd(v, e, e_a, w, b, ln_scale, ln_bias,
+                         bond_center, bond_nbr, offsets,
+                         block_rows, chunk, gather_tile):
+    out = _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
+                           bond_center, bond_nbr, offsets,
+                           block_rows, chunk, gather_tile)
+    # operands only — messages are rematerialized in the backward
+    return out, (v, e, e_a, w, b, ln_scale, ln_bias,
+                 bond_center, bond_nbr, offsets)
+
+
+def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, res, g):
+    """Tile-wise recompute backward: a fori_loop over edge chunks, each
+    iteration re-deriving its (chunk, D) messages with a chunk-local
+    jax.vjp — no full-edge concat/message tensor exists here either."""
+    v, e, e_a, w, b, ln_scale, ln_bias, bond_center, bond_nbr, offsets = res
+    e_rows = e.shape[0]
+    ep = _round_up(e_rows, chunk)
+    seg_p = _pad_rows_i32(bond_center, ep)
+    nbr_p = _pad_rows_i32(bond_nbr, ep)
+    e_p = _pad_rows_f32(e, ep)
+    ea_p = _pad_rows_f32(e_a, ep)
+    f32 = lambda x: x.astype(jnp.float32)
+    v32, w32, b32 = f32(v), f32(w), f32(b)
+    lns32, lnb32 = f32(ln_scale), f32(ln_bias)
+    g32 = f32(g)
+    n_real = offsets[-1].astype(jnp.int32)
+
+    def body(k, carry):
+        dv, dep_, deap, dw, db, dls, dlb = carry
+        i0 = k * chunk
+        seg_c = _chunk_of(seg_p, i0, chunk)
+        nbr_c = _chunk_of(nbr_p, i0, chunk)
+
+        def msgs(vv, ec, eac, ww, bb, ss, oo):
+            x = jnp.concatenate([vv[seg_c], vv[nbr_c], ec], axis=-1)
+            return ref.gated_mlp_packed_ref(x, ww, bb, ss, oo) * eac
+
+        _, vjp = jax.vjp(msgs, v32, _chunk_of(e_p, i0, chunk),
+                         _chunk_of(ea_p, i0, chunk), w32, b32, lns32, lnb32)
+        valid = (i0 + jnp.arange(chunk)) < n_real
+        gm = jnp.where(valid[:, None], g32[seg_c], 0.0)
+        dvc, dec, deac, dwc, dbc, dlsc, dlbc = vjp(gm)
+        return (dv + dvc,
+                jax.lax.dynamic_update_slice(dep_, dec, (i0, 0)),
+                jax.lax.dynamic_update_slice(deap, deac, (i0, 0)),
+                dw + dwc, db + dbc, dls + dlsc, dlb + dlbc)
+
+    init = (jnp.zeros_like(v32), jnp.zeros_like(e_p), jnp.zeros_like(ea_p),
+            jnp.zeros_like(w32), jnp.zeros_like(b32),
+            jnp.zeros_like(lns32), jnp.zeros_like(lnb32))
+    # static trip count (padded chunks contribute masked zeros): the loop
+    # lowers to scan, so the bwd itself stays reverse-differentiable — the
+    # autodiff readout can run on top of the fused convs (forces need one
+    # more reverse pass through this function)
+    dv, dep_, deap, dw, db, dls, dlb = jax.lax.fori_loop(
+        0, ep // chunk, body, init)
+    f0 = jax.dtypes.float0
+    return (dv.astype(v.dtype), dep_[:e_rows].astype(e.dtype),
+            deap[:e_rows].astype(e_a.dtype), dw.astype(w.dtype),
+            db.astype(b.dtype), dls.astype(ln_scale.dtype),
+            dlb.astype(ln_bias.dtype),
+            np.zeros(bond_center.shape, f0), np.zeros(bond_nbr.shape, f0),
+            np.zeros(offsets.shape, f0))
+
+
+_fused_atom_conv.defvjp(_fused_atom_conv_fwd, _fused_atom_conv_bwd)
+
+
+def fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
+                    bond_center, bond_nbr, bond_offsets,
+                    *, block_rows: int = 8, chunk: int = 256,
+                    gather_tile: int = 256):
+    # block_rows=8: ~tens of bonds per atom, so 8 rows ~ one edge chunk
+    """Fused Eq. 4 message path: sum_j e^a_ij * phi(v_i, v_j, e_ij) -> (A, D).
+
+    Requires the sorted-segment layout (DESIGN.md §1): bonds sorted by
+    ``bond_center`` with CSR ``bond_offsets``.  Forward is one Pallas
+    megakernel (no HBM concat/message tensors); differentiable via a
+    chunked recompute-in-backward custom VJP (DESIGN.md §3).
+    """
+    return _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
+                            bond_center, bond_nbr, bond_offsets,
+                            block_rows, chunk, gather_tile)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(12, 13, 14))
+def _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
+                     angle_ij, angle_ik, center_ids, offsets,
+                     block_rows, chunk, gather_tile):
+    a_rows, dim = v.shape
+    b_rows = e.shape[0]
+    e_rows = a.shape[0]
+    d = w.shape[1] // 2
+    # the wrapper splits w rows into four equal dim-wide blocks
+    # [v_c | e_ij | e_ik | a]: all operand widths must equal dim
+    assert e.shape[1] == dim and a.shape[1] == dim, \
+        (v.shape, e.shape, a.shape)
+    assert w.shape[0] == 4 * dim, (w.shape, dim)
+    dp = _round_up(max(dim, e.shape[1], a.shape[1]), _LANE)
+    hp = _round_up(d, _LANE)
+    # bonds are output rows AND the ik-gather table; atoms the ctr-gather
+    bp = _round_up(b_rows, math.lcm(block_rows, gather_tile))
+    ap = _round_up(a_rows, gather_tile)
+    ep = _round_up(e_rows, chunk)
+    out = fused_bond_conv_pallas(
+        _pad2(v, ap, dp), _pad2(e, bp, dp), _pad2(a, ep, dp),
+        _pad2(e_b, bp, hp),
+        _pad_ids(angle_ij, ep), _pad_ids(angle_ik, ep),
+        _pad_ids(center_ids, ep), _pad_offsets(offsets, bp),
+        _pack_lanes_w(w[:dim], dp, d, hp),
+        _pack_lanes_w(w[dim:2 * dim], dp, d, hp),
+        _pack_lanes_w(w[2 * dim:3 * dim], dp, d, hp),
+        _pack_lanes_w(w[3 * dim:], dp, d, hp),
+        _pack_lanes_vec(b, d, hp),
+        _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
+        d_real=d, block_rows=block_rows, chunk=chunk,
+        gather_tile=gather_tile, interpret=_interpret(),
+    )
+    return out[:b_rows, :d].astype(e.dtype)
+
+
+def _fused_bond_conv_fwd(v, e, a, e_b, w, b, ln_scale, ln_bias,
+                         angle_ij, angle_ik, center_ids, offsets,
+                         block_rows, chunk, gather_tile):
+    out = _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
+                           angle_ij, angle_ik, center_ids, offsets,
+                           block_rows, chunk, gather_tile)
+    return out, (v, e, a, e_b, w, b, ln_scale, ln_bias,
+                 angle_ij, angle_ik, center_ids, offsets)
+
+
+def _fused_bond_conv_bwd(block_rows, chunk, gather_tile, res, g):
+    """Tile-wise recompute backward over angle chunks (see atom_conv)."""
+    (v, e, a, e_b, w, b, ln_scale, ln_bias,
+     angle_ij, angle_ik, center_ids, offsets) = res
+    e_rows = a.shape[0]
+    ep = _round_up(e_rows, chunk)
+    ij_p = _pad_rows_i32(angle_ij, ep)
+    ik_p = _pad_rows_i32(angle_ik, ep)
+    ctr_p = _pad_rows_i32(center_ids, ep)
+    a_p = _pad_rows_f32(a, ep)
+    f32 = lambda x: x.astype(jnp.float32)
+    v32, e32, eb32, w32, b32 = f32(v), f32(e), f32(e_b), f32(w), f32(b)
+    lns32, lnb32 = f32(ln_scale), f32(ln_bias)
+    g32 = f32(g)
+    n_real = offsets[-1].astype(jnp.int32)
+
+    def body(k, carry):
+        dv, de, dap, deb, dw, db, dls, dlb = carry
+        i0 = k * chunk
+        ij_c = _chunk_of(ij_p, i0, chunk)
+        ik_c = _chunk_of(ik_p, i0, chunk)
+        ctr_c = _chunk_of(ctr_p, i0, chunk)
+
+        def msgs(vv, ee, ac, eb, ww, bb, ss, oo):
+            x = jnp.concatenate([vv[ctr_c], ee[ij_c], ee[ik_c], ac], axis=-1)
+            phi = ref.gated_mlp_packed_ref(x, ww, bb, ss, oo)
+            return phi * eb[ij_c] * eb[ik_c]
+
+        _, vjp = jax.vjp(msgs, v32, e32, _chunk_of(a_p, i0, chunk), eb32,
+                         w32, b32, lns32, lnb32)
+        valid = (i0 + jnp.arange(chunk)) < n_real
+        gm = jnp.where(valid[:, None], g32[ij_c], 0.0)
+        dvc, dec, dac, debc, dwc, dbc, dlsc, dlbc = vjp(gm)
+        return (dv + dvc, de + dec,
+                jax.lax.dynamic_update_slice(dap, dac, (i0, 0)),
+                deb + debc, dw + dwc, db + dbc, dls + dlsc, dlb + dlbc)
+
+    init = (jnp.zeros_like(v32), jnp.zeros_like(e32), jnp.zeros_like(a_p),
+            jnp.zeros_like(eb32), jnp.zeros_like(w32), jnp.zeros_like(b32),
+            jnp.zeros_like(lns32), jnp.zeros_like(lnb32))
+    # static trip count -> scan -> reverse-differentiable (see atom_conv)
+    dv, de, dap, deb, dw, db, dls, dlb = jax.lax.fori_loop(
+        0, ep // chunk, body, init)
+    f0 = jax.dtypes.float0
+    return (dv.astype(v.dtype), de.astype(e.dtype),
+            dap[:e_rows].astype(a.dtype), deb.astype(e_b.dtype),
+            dw.astype(w.dtype), db.astype(b.dtype),
+            dls.astype(ln_scale.dtype), dlb.astype(ln_bias.dtype),
+            np.zeros(angle_ij.shape, f0), np.zeros(angle_ik.shape, f0),
+            np.zeros(center_ids.shape, f0), np.zeros(offsets.shape, f0))
+
+
+_fused_bond_conv.defvjp(_fused_bond_conv_fwd, _fused_bond_conv_bwd)
+
+
+def fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
+                    angle_ij, angle_ik, center_ids, angle_offsets,
+                    *, block_rows: int = 32, chunk: int = 256,
+                    gather_tile: int = 512):
+    # block_rows=32: angles-per-bond is small (~1-5), so a wider row tile
+    # keeps each program's edge range near one chunk instead of paying the
+    # per-program gather-loop overhead for a handful of edges
+    """Fused Eq. 5 message path:
+    sum_k e^b_ij e^b_ik phi(v_c, e_ij, e_ik, a_ijk) -> (B, D).
+
+    ``center_ids = bond_center[angle_ij]`` (a cheap int gather the caller
+    performs; no float tensor is materialized for it).  Requires angles
+    sorted by ``angle_ij`` with CSR ``angle_offsets`` (DESIGN.md §1).
+    """
+    return _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
+                            angle_ij, angle_ik, center_ids, angle_offsets,
+                            block_rows, chunk, gather_tile)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10))
+def _fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center, offsets,
+                         num_atoms, block_rows, chunk):
+    e_rows, dim = e.shape
+    dp = _round_up(dim, _LANE)
+    xp = _LANE
+    ap = _round_up(num_atoms, block_rows)
+    ep = _round_up(e_rows, chunk)
+    out = fused_force_readout_pallas(
+        _pad2(e, ep, dp), _pad2(x_hat, ep, xp),
+        _pad_ids(bond_center, ep), _pad_offsets(offsets, ap),
+        _pad2(w1, dp, dp), _pad2(b1[None, :], 1, dp),
+        _pad2(w2.T, 1, dp), jnp.full((1, xp), b2[0], jnp.float32),
+        block_rows=block_rows, chunk=chunk, interpret=_interpret(),
+    )
+    return out[:num_atoms, :x_hat.shape[1]].astype(e.dtype)
+
+
+def _fused_force_readout_fwd(e, x_hat, w1, b1, w2, b2, bond_center, offsets,
+                             num_atoms, block_rows, chunk):
+    out = _fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center,
+                               offsets, num_atoms, block_rows, chunk)
+    return out, (e, x_hat, w1, b1, w2, b2, bond_center, offsets)
+
+
+def _fused_force_readout_bwd(num_atoms, block_rows, chunk, res, g):
+    """Tile-wise recompute backward over bond chunks (see atom_conv)."""
+    e, x_hat, w1, b1, w2, b2, bond_center, offsets = res
+    e_rows = e.shape[0]
+    ep = _round_up(e_rows, chunk)
+    seg_p = _pad_rows_i32(bond_center, ep)
+    e_p = _pad_rows_f32(e, ep)
+    xh_p = _pad_rows_f32(x_hat, ep)
+    f32 = lambda x: x.astype(jnp.float32)
+    w1_32, b1_32, w2_32, b2_32 = f32(w1), f32(b1), f32(w2), f32(b2)
+    g32 = f32(g)
+    n_real = offsets[-1].astype(jnp.int32)
+
+    def body(k, carry):
+        dep_, dxhp, dw1, db1, dw2, db2 = carry
+        i0 = k * chunk
+        seg_c = _chunk_of(seg_p, i0, chunk)
+
+        def contribs(ec, xc, w1_, b1_, w2_, b2_):
+            h = jax.nn.silu(ec @ w1_ + b1_)
+            return (h @ w2_ + b2_) * xc
+
+        _, vjp = jax.vjp(contribs, _chunk_of(e_p, i0, chunk),
+                         _chunk_of(xh_p, i0, chunk),
+                         w1_32, b1_32, w2_32, b2_32)
+        valid = (i0 + jnp.arange(chunk)) < n_real
+        gm = jnp.where(valid[:, None], g32[seg_c], 0.0)
+        dec, dxc, dw1c, db1c, dw2c, db2c = vjp(gm)
+        return (jax.lax.dynamic_update_slice(dep_, dec, (i0, 0)),
+                jax.lax.dynamic_update_slice(dxhp, dxc, (i0, 0)),
+                dw1 + dw1c, db1 + db1c, dw2 + dw2c, db2 + db2c)
+
+    init = (jnp.zeros_like(e_p), jnp.zeros_like(xh_p),
+            jnp.zeros_like(w1_32), jnp.zeros_like(b1_32),
+            jnp.zeros_like(w2_32), jnp.zeros_like(b2_32))
+    # static trip count -> scan -> reverse-differentiable (see atom_conv)
+    dep_, dxhp, dw1, db1, dw2, db2 = jax.lax.fori_loop(
+        0, ep // chunk, body, init)
+    f0 = jax.dtypes.float0
+    return (dep_[:e_rows].astype(e.dtype), dxhp[:e_rows].astype(x_hat.dtype),
+            dw1.astype(w1.dtype), db1.astype(b1.dtype),
+            dw2.astype(w2.dtype), db2.astype(b2.dtype),
+            np.zeros(bond_center.shape, f0), np.zeros(offsets.shape, f0))
+
+
+_fused_force_readout.defvjp(_fused_force_readout_fwd,
+                            _fused_force_readout_bwd)
+
+
+def fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center, bond_offsets,
+                        num_atoms: int, *, block_rows: int = 8,
+                        chunk: int = 256):
+    """Fused Eq. 7 direct-force readout: F_i = sum_j n_ij x_hat_ij -> (A, 3).
+
+    The per-bond scalar MLP (w1/b1 -> silu -> w2/b2), the x_hat weighting,
+    and the per-atom reduction run in one megakernel over the sorted CSR
+    rows; ``n_ij`` never exists in HBM.  Rotation equivariance (Eq. 8) is
+    preserved because ``n_ij`` stays a scalar per bond.
+    """
+    return _fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center,
+                                bond_offsets, num_atoms, block_rows, chunk)
 
 
 def fused_swiglu(x, w_gate, w_up, w_down, *, activation: str = "silu",

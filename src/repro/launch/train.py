@@ -42,10 +42,13 @@ def train_chgnet(args):
             else ladder_for(ds, per_dev, num_buckets=args.buckets))
     mesh = make_host_mesh() if n_dev > 1 else None
     model_cfg = C.FAST_FS_HEAD if args.readout == "direct" else C.FAST_WO_HEAD
+    # fused message-passing megakernels (DESIGN.md §3) — every batch from
+    # repro.batching satisfies the §1 layout they require
+    model_cfg = model_cfg.with_(conv_impl=args.conv_impl)
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
                             loss=C.LOSS, grad_reduce=args.grad_reduce)
     print(f"devices={n_dev} init_lr={train_cfg.init_lr:.2e} "
-          f"readout={args.readout}")
+          f"readout={args.readout} conv_impl={args.conv_impl}")
 
     def loop(start):
         tr = Trainer(model_cfg, train_cfg, mesh=mesh, ckpt_dir=args.ckpt,
@@ -120,6 +123,9 @@ def main():
     ap.add_argument("--crystals", type=int, default=128)
     ap.add_argument("--readout", default="direct",
                     choices=["direct", "autodiff"])
+    ap.add_argument("--conv-impl", default="unfused",
+                    choices=["unfused", "fused"],
+                    help="fused = message-passing megakernels (DESIGN.md §3)")
     ap.add_argument("--grad-reduce", default="bucketed",
                     choices=["plain", "bucketed", "compressed"])
     ap.add_argument("--ckpt", default=None)

@@ -85,6 +85,15 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+class MissingLeafError(KeyError):
+    """A template leaf absent from the checkpoint; carries the leaf path so
+    callers (e.g. layout migrations) don't parse the message text."""
+
+    def __init__(self, leaf_path: str):
+        super().__init__(f"checkpoint missing leaf {leaf_path}")
+        self.leaf_path = leaf_path
+
+
 def restore_checkpoint(
     directory: str,
     template: Any,
@@ -106,7 +115,7 @@ def restore_checkpoint(
     for kpath, leaf in leaves_with_paths:
         key = jax.tree_util.keystr(kpath)
         if key not in arrays:
-            raise KeyError(f"checkpoint missing leaf {key}")
+            raise MissingLeafError(key)
         rec = arrays[key]
         arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
         arr = arr.reshape(rec["shape"])

@@ -20,8 +20,9 @@ Every batch leaving the pack path satisfies the sorted-segment layout
 (DESIGN.md §1) — the Verlet refilter preserves bond order and packing
 canonicalizes + validates — so the serve step can run any
 ``CHGNetConfig.agg_impl`` ("scatter" | "matmul" | "sorted" | "pallas")
-unchanged; set ``validate_layout=False`` to skip the per-batch check in
-tight MD loops.
+and ``conv_impl`` ("unfused" | "fused", the DESIGN.md §3 message-passing
+megakernels) unchanged; set ``validate_layout=False`` to skip the
+per-batch check in tight MD loops.
 """
 from __future__ import annotations
 
@@ -98,14 +99,16 @@ class ServeEngine:
         model_cfg: CHGNetConfig,
         crystals: list[Crystal],
         graphs: list[GraphIndices] | None = None,
+        validate_layout: bool = True,
         **ladder_kw,
     ) -> "ServeEngine":
         graphs = graphs or [
             build_graph(c, model_cfg.r_cut_atom, model_cfg.r_cut_bond)
             for c in crystals
         ]
-        return cls(params, model_cfg, structure_ladder(graphs, crystals,
-                                                       **ladder_kw))
+        return cls(params, model_cfg,
+                   structure_ladder(graphs, crystals, **ladder_kw),
+                   validate_layout=validate_layout)
 
     def step_fn(self, caps: BatchCapacities, num_slots: int):
         """Persistent compiled serve step for (bucket, slots, config)."""

@@ -285,7 +285,31 @@ class Trainer:
 
         if latest_step(self.ckpt_dir) is None:
             return False
-        state, step, _ = restore_checkpoint(self.ckpt_dir, self.state())
+        from repro.runtime.checkpoint import MissingLeafError
+
+        try:
+            state, step, _ = restore_checkpoint(self.ckpt_dir, self.state())
+        except MissingLeafError as missing:
+            # legacy checkpoint with separate GatedMLP core/gate weights:
+            # restore into the legacy-shaped template, then pack ONCE here
+            # (checkpoint-load), so no jitted step re-concatenates params.
+            # Only retry when the missing leaf IS a packed-GatedMLP key —
+            # and re-raise the original error if the legacy attempt also
+            # fails — so genuinely incompatible checkpoints (different
+            # architecture) surface their real mismatch, not a misleading
+            # legacy-layout one.
+            packed_keys = ("['w']", "['b']", "['ln_scale']", "['ln_bias']")
+            if not missing.leaf_path.endswith(packed_keys):
+                raise
+            from repro.core.interaction import (
+                gated_mlp_legacy_template, pack_gated_mlp_params)
+
+            legacy = gated_mlp_legacy_template(self.state())
+            try:
+                state, step, _ = restore_checkpoint(self.ckpt_dir, legacy)
+            except (KeyError, ValueError):
+                raise missing
+            state = pack_gated_mlp_params(state)
         self.params, self.opt_state = state["params"], state["opt_state"]
         self.step = step
         return True

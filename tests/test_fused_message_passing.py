@@ -1,0 +1,354 @@
+"""Fused message-passing megakernels (DESIGN.md §3): forward + gradient
+equivalence vs the unfused reference on packed synthetic batches, a
+hypothesis sweep over ragged bond/angle distributions, rotation
+equivariance of the fused force readout, and the packed-GatedMLP
+checkpoint migration.  All run on CPU via REPRO_KERNELS_INTERPRET=1."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batching import BatchCapacities, batch_crystals
+from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
+from repro.core.interaction import (
+    gated_mlp_init,
+    gated_mlp_legacy_template,
+    pack_gated_mlp_params,
+)
+from repro.core.losses import LossWeights, chgnet_loss
+from repro.core.neighbors import Crystal, build_graph
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# op level: kernel vs oracle on raw sorted layouts
+# ---------------------------------------------------------------------------
+
+def _sorted_edges(rng, num_edges, num_segments, n_real):
+    ids = np.sort(rng.integers(0, num_segments, n_real)).astype(np.int32)
+    seg = np.zeros(num_edges, np.int32)
+    seg[:n_real] = ids
+    offs = np.searchsorted(ids, np.arange(num_segments + 1)).astype(np.int32)
+    return jnp.asarray(seg), jnp.asarray(offs)
+
+
+def _atom_op_inputs(rng, a, e_rows, d, n_real):
+    seg, offs = _sorted_edges(rng, e_rows, a, n_real)
+    nbr = jnp.asarray(rng.integers(0, a, e_rows).astype(np.int32))
+    f = lambda *s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (3 * d, 2 * d)), jnp.float32)
+    mlp = (w, f(2 * d), jnp.asarray(rng.uniform(.5, 1.5, (2 * d,)),
+                                    jnp.float32), f(2 * d))
+    return (f(a, d), f(e_rows, d), f(e_rows, d)) + mlp + (seg, nbr, offs)
+
+
+@pytest.mark.parametrize("a,e_rows,d,n_real", [
+    (16, 200, 32, 180),   # padded tail
+    (9, 64, 64, 64),      # no padding, unaligned rows
+    (8, 32, 16, 0),       # all edges padded
+])
+def test_fused_atom_conv_matches_oracle(a, e_rows, d, n_real):
+    rng = np.random.default_rng(a + n_real)
+    args = _atom_op_inputs(rng, a, e_rows, d, n_real)
+    out = ops.fused_atom_conv(*args)
+    want = ref.fused_atom_conv_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_atom_conv_gradients_match_oracle():
+    rng = np.random.default_rng(7)
+    v, e, e_a, w, b, lns, lnb, seg, nbr, offs = _atom_op_inputs(
+        rng, 12, 128, 32, 100)
+    # fixed cotangent: compares the VJPs themselves, not forward rounding
+    # amplified through a nonlinear loss (model-level tests cover that)
+    cot = jnp.asarray(rng.normal(0, 1, (12, 32)), jnp.float32)
+
+    def loss(fn, vv, ee, ww):
+        out = fn(vv, ee, e_a, ww, b, lns, lnb, seg, nbr, offs)
+        return jnp.vdot(out, cot)
+
+    g_f = jax.grad(lambda *p: loss(ops.fused_atom_conv, *p),
+                   argnums=(0, 1, 2))(v, e, w)
+    g_r = jax.grad(lambda *p: loss(ref.fused_atom_conv_ref, *p),
+                   argnums=(0, 1, 2))(v, e, w)
+    for got, want in zip(g_f, g_r):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def _bond_op_inputs(rng, a, b_rows, e_rows, d, n_real):
+    seg, offs = _sorted_edges(rng, e_rows, b_rows, n_real)
+    ik = jnp.asarray(rng.integers(0, b_rows, e_rows).astype(np.int32))
+    ctr = jnp.asarray(rng.integers(0, a, e_rows).astype(np.int32))
+    f = lambda *s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (4 * d, 2 * d)), jnp.float32)
+    mlp = (w, f(2 * d), jnp.asarray(rng.uniform(.5, 1.5, (2 * d,)),
+                                    jnp.float32), f(2 * d))
+    return (f(a, d), f(b_rows, d), f(e_rows, d), f(b_rows, d)) + mlp + \
+        (seg, ik, ctr, offs)
+
+
+@pytest.mark.parametrize("a,b_rows,e_rows,d,n_real", [
+    (10, 48, 300, 32, 260),
+    (6, 17, 40, 16, 40),
+    (5, 12, 24, 8, 0),
+])
+def test_fused_bond_conv_matches_oracle(a, b_rows, e_rows, d, n_real):
+    rng = np.random.default_rng(b_rows + n_real)
+    args = _bond_op_inputs(rng, a, b_rows, e_rows, d, n_real)
+    out = ops.fused_bond_conv(*args)
+    want = ref.fused_bond_conv_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_bond_conv_gradients_match_oracle():
+    rng = np.random.default_rng(3)
+    v, e, a, e_b, w, b, lns, lnb, seg, ik, ctr, offs = _bond_op_inputs(
+        rng, 8, 32, 96, 16, 80)
+    cot = jnp.asarray(rng.normal(0, 1, (32, 16)), jnp.float32)
+
+    def loss(fn, ee, eb, ww):
+        out = fn(v, ee, a, eb, ww, b, lns, lnb, seg, ik, ctr, offs)
+        return jnp.vdot(out, cot)
+
+    g_f = jax.grad(lambda *p: loss(ops.fused_bond_conv, *p),
+                   argnums=(0, 1, 2))(e, e_b, w)
+    g_r = jax.grad(lambda *p: loss(ref.fused_bond_conv_ref, *p),
+                   argnums=(0, 1, 2))(e, e_b, w)
+    for got, want in zip(g_f, g_r):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_force_readout_matches_oracle_incl_grad():
+    rng = np.random.default_rng(11)
+    a, e_rows, d, n_real = 14, 180, 32, 150
+    seg, offs = _sorted_edges(rng, e_rows, a, n_real)
+    e = jnp.asarray(rng.normal(0, 1, (e_rows, d)), jnp.float32)
+    xh = rng.normal(0, 1, (e_rows, 3)).astype(np.float32)
+    xh /= np.linalg.norm(xh, axis=1, keepdims=True)
+    xh = jnp.asarray(xh)
+    w1 = jnp.asarray(rng.normal(0, .1, (d, d)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(0, .1, (d,)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(0, .1, (d, 1)), jnp.float32)
+    b2 = jnp.asarray(rng.normal(0, .1, (1,)), jnp.float32)
+    args = (xh, w1, b1, w2, b2, seg, offs, a)
+    out = ops.fused_force_readout(e, *args)
+    want = ref.fused_force_readout_ref(e, *args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    g_f = jax.grad(lambda ee, ww: jnp.sum(
+        jnp.sin(ops.fused_force_readout(ee, xh, ww, b1, w2, b2, seg, offs,
+                                        a))), argnums=(0, 1))(e, w1)
+    g_r = jax.grad(lambda ee, ww: jnp.sum(
+        jnp.sin(ref.fused_force_readout_ref(ee, xh, ww, b1, w2, b2, seg,
+                                            offs, a))), argnums=(0, 1))(e, w1)
+    for got, want in zip(g_f, g_r):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# property-based ragged sweep (optional dep, like the other hypothesis suites)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        num_segments=st.integers(1, 24),
+        n_real=st.integers(0, 90),
+        pad=st.integers(0, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fused_atom_conv_ragged_property(num_segments, n_real, pad, seed):
+        rng = np.random.default_rng(seed)
+        args = _atom_op_inputs(rng, num_segments, n_real + pad + 1, 16,
+                               n_real)
+        out = ops.fused_atom_conv(*args)
+        want = ref.fused_atom_conv_ref(*args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        num_bonds=st.integers(1, 30),
+        n_real=st.integers(0, 70),
+        pad=st.integers(0, 30),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fused_bond_conv_ragged_property(num_bonds, n_real, pad, seed):
+        rng = np.random.default_rng(seed)
+        args = _bond_op_inputs(rng, 6, num_bonds, n_real + pad + 1, 16,
+                               n_real)
+        out = ops.fused_bond_conv(*args)
+        want = ref.fused_bond_conv_ref(*args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+except ImportError:  # pragma: no cover - bare envs skip the property sweep
+    pass
+
+
+# ---------------------------------------------------------------------------
+# model level: conv_impl="fused" vs "unfused" on packed crystal batches
+# ---------------------------------------------------------------------------
+
+def _crystal(rng, n, **labels):
+    return Crystal(lattice=np.eye(3) * 4.4 + rng.normal(0, .05, (3, 3)),
+                   frac_coords=rng.random((n, 3)),
+                   atomic_numbers=rng.integers(1, 60, n), **labels)
+
+
+def _packed_batch(seed=0, sizes=(5, 7, 4), pad=(8, 32, 48)):
+    rng = np.random.default_rng(seed)
+    cs = [_crystal(rng, n, energy=float(rng.normal()),
+                   forces=rng.normal(0, .1, (n, 3)),
+                   stress=rng.normal(0, .1, (3, 3)),
+                   magmoms=np.abs(rng.normal(0, 1, n))) for n in sizes]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(sum(sizes) + pad[0],
+                           sum(g.num_bonds for g in gs) + pad[1],
+                           sum(g.num_angles for g in gs) + pad[2])
+    return batch_crystals(cs, gs, caps)
+
+
+@pytest.mark.parametrize("variant", ["fast", "reference"])
+def test_chgnet_fused_matches_unfused_forward(variant):
+    """Acceptance: conv_impl="fused" matches "unfused" <= 1e-5 end-to-end."""
+    batch = _packed_batch()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    want = chgnet_apply(
+        params, CHGNetConfig(block_variant=variant, conv_impl="unfused"),
+        batch)
+    got = chgnet_apply(
+        params, CHGNetConfig(block_variant=variant, conv_impl="fused"),
+        batch)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-5, err_msg=k)
+
+
+def test_chgnet_fused_matches_unfused_gradient():
+    """Acceptance: training gradients match <= 1e-5 through the fused path
+    (chunked recompute backward vs autodiff-through-the-unfused-graph)."""
+    batch = _packed_batch()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+
+    def loss(p, conv):
+        pred = chgnet_apply(params if p is None else p,
+                            CHGNetConfig(conv_impl=conv), batch)
+        return chgnet_loss(pred, batch, LossWeights())[0]
+
+    g_u = jax.grad(lambda p: loss(p, "unfused"))(params)
+    g_f = jax.grad(lambda p: loss(p, "fused"))(params)
+    for path, got, want in zip(
+            jax.tree_util.tree_flatten_with_path(g_f)[0],
+            jax.tree.leaves(g_f), jax.tree.leaves(g_u)):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+            err_msg=jax.tree_util.keystr(path[0]))
+
+
+def test_autodiff_readout_composes_with_fused_convs():
+    """Training through readout="autodiff" reverse-differentiates the
+    custom-VJP backward itself — the chunk loops must stay scan-lowered
+    (static trip count) for that second reverse pass to be legal."""
+    batch = _packed_batch(sizes=(4,), pad=(4, 8, 8))
+    cfg_u = CHGNetConfig(readout="autodiff", num_blocks=1,
+                         conv_impl="unfused")
+    cfg_f = cfg_u.with_(conv_impl="fused")
+    params = chgnet_init(jax.random.PRNGKey(0), cfg_u)
+
+    def loss(p, cfg):
+        return chgnet_loss(chgnet_apply(p, cfg, batch), batch,
+                           LossWeights())[0]
+
+    g_u = jax.grad(lambda p: loss(p, cfg_u))(params)
+    g_f = jax.grad(lambda p: loss(p, cfg_f))(params)
+    for got, want in zip(jax.tree.leaves(g_f), jax.tree.leaves(g_u)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_unknown_conv_impl_raises():
+    batch = _packed_batch()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    with pytest.raises(ValueError, match="conv impl"):
+        chgnet_apply(params, CHGNetConfig(conv_impl="bogus"), batch)
+
+
+# ---------------------------------------------------------------------------
+# fused force readout: rotation equivariance (Eq. 8)
+# ---------------------------------------------------------------------------
+
+def _random_rotation(rng):
+    q, r = np.linalg.qr(rng.normal(size=(3, 3)))
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def test_fused_force_rotation_equivariance():
+    """F(Rx) = R F(x) must survive the megakernel: n_ij stays scalar."""
+    rng = np.random.default_rng(7)
+    c = _crystal(rng, 5)
+    rot = _random_rotation(rng)
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout="direct", conv_impl="fused")
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+
+    f1 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c], [g], caps))["forces"])
+    c2 = Crystal(lattice=c.lattice @ rot.T, frac_coords=c.frac_coords,
+                 atomic_numbers=c.atomic_numbers)
+    g2 = build_graph(c2)
+    f2 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c2], [g2], caps))["forces"])
+    n = c.num_atoms
+    np.testing.assert_allclose(f2[:n], f1[:n] @ rot.T, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# packed GatedMLP parameter layout: pack-once + legacy checkpoint migration
+# ---------------------------------------------------------------------------
+
+def test_pack_legacy_roundtrip():
+    packed = gated_mlp_init(jax.random.PRNGKey(0), 96, 32)
+    legacy = gated_mlp_legacy_template(packed)
+    assert set(legacy.keys()) == {"wc", "bc", "wg", "bg", "ln_c_scale",
+                                  "ln_c_bias", "ln_g_scale", "ln_g_bias"}
+    repacked = pack_gated_mlp_params(legacy)
+    for k in packed:
+        np.testing.assert_array_equal(np.asarray(packed[k]),
+                                      np.asarray(repacked[k]))
+
+
+def test_trainer_restores_legacy_checkpoint(tmp_path):
+    """A checkpoint written with the old separate-weight layout restores
+    into the packed layout (packed once at load, DESIGN.md §3)."""
+    pytest.importorskip("msgpack")
+    from repro.runtime.checkpoint import save_checkpoint
+    from repro.train.trainer import Trainer, TrainConfig
+
+    trainer = Trainer(CHGNetConfig(), TrainConfig(), seed=0,
+                      ckpt_dir=str(tmp_path))
+    legacy_state = gated_mlp_legacy_template(
+        jax.tree.map(lambda x: np.asarray(x) + 1.0, trainer.state()))
+    save_checkpoint(str(tmp_path), 5, legacy_state)
+
+    assert trainer.maybe_restore()
+    assert trainer.step == 5
+    want = pack_gated_mlp_params(legacy_state)["params"]
+    for path, leaf in jax.tree_util.tree_flatten_with_path(want)[0]:
+        got = trainer.params
+        for k in path:
+            got = got[k.key if hasattr(k, "key") else k.idx]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(leaf),
+                                      err_msg=jax.tree_util.keystr(path))
