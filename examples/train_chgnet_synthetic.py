@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--crystals", type=int, default=256)
     ap.add_argument("--readout", default="direct",
                     choices=["direct", "autodiff"])
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "mixed"],
+                    help="end-to-end precision policy (DESIGN.md §4)")
     ap.add_argument("--ckpt", default="/tmp/chgnet_ckpt")
     ap.add_argument("--inject-fault", action="store_true")
     args = ap.parse_args()
@@ -32,7 +35,7 @@ def main():
     ds = make_dataset(SyntheticConfig(num_crystals=args.crystals, seed=0))
     caps = capacity_for(ds, args.batch)
     model_cfg = (C.FAST_FS_HEAD if args.readout == "direct"
-                 else C.FAST_WO_HEAD)
+                 else C.FAST_WO_HEAD).with_(precision=args.precision)
     train_cfg = TrainConfig(global_batch=args.batch,
                             total_steps=args.steps, loss=C.LOSS)
     print(f"init LR (Eq. 14): {train_cfg.init_lr:.2e}")

@@ -4,6 +4,7 @@ inference framework.
 Subpackages:
     core         the paper's contribution: CHGNet/FastCHGNet in JAX
     kernels      Pallas TPU kernels + jnp oracles
+    precision    end-to-end PrecisionPolicy + loss scaling (DESIGN.md §4)
     data         synthetic MPtrj-like dataset, load-balance sampler
     optim        Adam, schedules (Eq. 14), grad transforms
     distributed  collectives, GPipe pipeline parallelism

@@ -26,6 +26,12 @@ FAST_FS_HEAD = FAST_WO_HEAD.with_(readout="direct")
 # which every repro.batching / repro.serve batch provides)
 FAST_FUSED = FAST_FS_HEAD.with_(conv_impl="fused", agg_impl="pallas")
 
+# + end-to-end mixed precision (DESIGN.md §4): f32 master params and
+# accumulation, bf16 GEMM / kernel-VMEM operands, dynamic loss scaling in
+# the Trainer — the paper's "exploit GPU computation power" regime
+FAST_MIXED = FAST_FS_HEAD.with_(precision="mixed")
+FAST_FUSED_MIXED = FAST_FUSED.with_(precision="mixed")
+
 LOSS = LossWeights(energy=2.0, force=1.5, stress=0.1, magmom=0.1,
                    huber_delta=0.1)
 

@@ -14,6 +14,13 @@ ones so benchmarks can measure each optimization separately:
 
 The Pallas-fused versions live in ``repro.kernels`` and are numerically
 checked against these in tests.
+
+Precision (DESIGN.md §4): geometry and every basis expansion — including
+the polynomial envelopes — are pinned to the accumulation dtype (f32)
+regardless of ``CHGNetConfig.precision``; xi^p amplifies rounding and the
+trainable ``rbf_freqs`` must not round-trip through bf16.  The model
+casts basis *outputs* to the compute dtype at the embedding boundary
+(``chgnet._trunk``), never the inputs of these functions.
 """
 from __future__ import annotations
 
@@ -80,6 +87,9 @@ def smooth_rbf(
     r: (...,) distances;  freqs: (K,) trainable;  returns (..., K).
     Safe at r ~ 0 (padded entries): sin(f x)/r -> finite via masked divide.
     """
+    # accum-pinned (DESIGN.md §4): envelope + trainable freqs stay f32
+    r = r.astype(jnp.float32)
+    freqs = freqs.astype(jnp.float32)
     xi = r / r_cut
     u = envelope(xi, p)
     r_safe = jnp.where(r > 1e-8, r, 1.0)
@@ -98,6 +108,7 @@ def fourier_basis(theta: jnp.ndarray, num_basis: int = 31) -> jnp.ndarray:
     num_basis = 2*L + 1 (DC + L cos + L sin). Paper sets num_basis = 31.
     """
     assert num_basis % 2 == 1, "fourier num_basis must be odd (DC + pairs)"
+    theta = theta.astype(jnp.float32)  # accum-pinned (DESIGN.md §4)
     harmonics = (num_basis - 1) // 2
     n = jnp.arange(1, harmonics + 1, dtype=theta.dtype)
     ang = theta[..., None] * n  # (..., L)

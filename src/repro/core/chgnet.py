@@ -10,7 +10,10 @@ Pure-JAX functional model: ``chgnet_init`` builds the parameter pytree,
   - readout="direct" (FastCHGNet "F/S head"): Force/Stress heads (C1).
 
 Block variant ("reference" | "fast") and GatedMLP impl ("ref" | "packed" |
-"pallas") select the paper's other model-level optimizations.
+"pallas") select the paper's other model-level optimizations;
+``CHGNetConfig.precision`` selects the end-to-end precision policy
+(DESIGN.md §4) governing param storage, compute, accumulation, and
+output dtypes across the model, kernels, optimizer, and trainer.
 """
 from __future__ import annotations
 
@@ -19,6 +22,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.precision import resolve_policy
 
 from . import basis, heads
 from .graph import CrystalGraphBatch
@@ -36,6 +41,20 @@ EV_A3_TO_GPA = 160.21766  # eV/A^3 -> GPa
 
 @dataclasses.dataclass(frozen=True)
 class CHGNetConfig:
+    """Model + implementation-tier selection.
+
+    ``precision`` selects the end-to-end :class:`repro.precision.
+    PrecisionPolicy` (DESIGN.md §4): ``"f32"`` (everything float32, the
+    reference), ``"mixed"`` (f32 parameter storage / accumulation, bf16
+    GEMM + kernel VMEM operands — the recommended training policy), or
+    ``"bf16"`` (bf16 storage too; the optimizer keeps f32 master weights,
+    see ``optim.adam``).  The policy governs the cast boundaries in
+    ``chgnet_apply``/``_trunk``, the LayerNorm/reduction accumulation
+    dtype in ``core.interaction``/``core.heads``, and the operand dtype
+    of every Pallas kernel behind ``mlp_impl``/``agg_impl``/``conv_impl``
+    — it composes with all of those tier knobs.
+    """
+
     dim: int = 64
     num_rbf: int = 31
     num_fourier: int = 31
@@ -55,13 +74,20 @@ class CHGNetConfig:
     # See DESIGN.md §3.
     conv_impl: str = "unfused"   # "unfused" | "fused"
     envelope_impl: str = "factored"  # "factored" | "reference"
+    # end-to-end precision policy (DESIGN.md §4), see class docstring
+    precision: str = "f32"       # "f32" | "bf16" | "mixed"
     stress_scale: float = 0.1
 
     def with_(self, **kw) -> "CHGNetConfig":
         return dataclasses.replace(self, **kw)
 
 
-def chgnet_init(key, cfg: CHGNetConfig, dtype=jnp.float32):
+def chgnet_init(key, cfg: CHGNetConfig, dtype=None):
+    """Build the parameter pytree in ``cfg.precision``'s param dtype
+    (``dtype`` overrides; pass ``jnp.float32`` explicitly for the legacy
+    behavior regardless of policy)."""
+    if dtype is None:
+        dtype = resolve_policy(cfg.precision).param
     n_keys = 8 + cfg.num_blocks
     ks = jax.random.split(key, n_keys)
     params = {
@@ -70,7 +96,10 @@ def chgnet_init(key, cfg: CHGNetConfig, dtype=jnp.float32):
         "atom_embed": jax.random.normal(ks[0], (MAX_Z, cfg.dim), dtype) * 0.02,
         "bond_embed": linear_init(ks[1], cfg.num_rbf, 3 * cfg.dim, dtype),
         "angle_embed": linear_init(ks[2], cfg.num_fourier, cfg.dim, dtype),
-        "rbf_freqs": basis.rbf_frequencies(cfg.num_rbf).astype(dtype),
+        # rbf_freqs feed the accum-pinned basis (DESIGN.md §4): they are
+        # STORED at accum precision under every policy — a bf16 round-trip
+        # would perturb the trainable frequencies by ~0.4% per step
+        "rbf_freqs": basis.rbf_frequencies(cfg.num_rbf).astype(jnp.float32),
         "blocks": [
             interaction_block_init(ks[3 + i], cfg.dim, dtype)
             for i in range(cfg.num_blocks)
@@ -100,6 +129,7 @@ def param_count(params) -> int:
 
 def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
            displacement=None, strain=None):
+    policy = resolve_policy(cfg.precision)
     env = (
         basis.envelope_factored
         if cfg.envelope_impl == "factored"
@@ -122,12 +152,22 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
         )
         four = basis.fourier_basis(theta, cfg.num_fourier)
 
+    # PRECISION BOUNDARY (DESIGN.md §4): geometry + basis above run in
+    # f32 (accum-pinned); everything from the embedding GEMMs through the
+    # interaction blocks runs at the policy's compute dtype.  Parameters
+    # follow via the cast-to-compute views in linear/gated_mlp_apply.
+    cd = policy.compute
+    rbf = policy.cast_compute(rbf)
+    four = policy.cast_compute(four)
+
     # Feature embedding (packed bond linear -> split into e0 / e_a / e_b)
     packed = linear_apply(params["bond_embed"], rbf)  # (Nb, 3*dim)
     e0, e_a, e_b = jnp.split(packed, 3, axis=-1)
-    v = params["atom_embed"][graph.atom_z] * graph.atom_mask[..., None]
-    a = linear_apply(params["angle_embed"], four) * graph.angle_mask[..., None]
-    e = e0 * graph.bond_mask[..., None]
+    v = params["atom_embed"].astype(cd)[graph.atom_z] \
+        * graph.atom_mask[..., None].astype(cd)
+    a = linear_apply(params["angle_embed"], four) \
+        * graph.angle_mask[..., None].astype(cd)
+    e = e0 * graph.bond_mask[..., None].astype(cd)
 
     for blk in params["blocks"]:
         v, e, a = interaction_block_apply(
@@ -161,7 +201,17 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
     readout="direct": one forward pass, no derivatives (FastCHGNet).
     readout="autodiff": forces/stress by differentiating the energy
     (reference CHGNet) — training through this is second-order.
+
+    All outputs are cast to the precision policy's ``output_dtype``
+    (f32 for every built-in policy, DESIGN.md §4) so downstream
+    consumers — losses, MD integrators, serving — see one dtype
+    regardless of ``cfg.precision``.
     """
+    policy = resolve_policy(cfg.precision)
+
+    def _out(d):
+        return {k: policy.cast_output(x) for k, x in d.items()}
+
     if cfg.readout == "direct":
         v, e, a, vec, dist = _trunk(params, cfg, graph)
         energy = heads.energy_head_apply(params["energy_head"], graph, v)
@@ -170,8 +220,8 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
                                         dist, agg_impl=cfg.agg_impl,
                                         conv_impl=cfg.conv_impl)
         stress = heads.stress_head_apply(params["stress_head"], graph, v)
-        return {"energy": energy, "forces": forces, "stress": stress,
-                "magmom": magmom}
+        return _out({"energy": energy, "forces": forces, "stress": stress,
+                     "magmom": magmom})
 
     if cfg.readout == "autodiff":
         def energy_of(disp, strain):
@@ -192,8 +242,8 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
         vol = _volume(graph.lattice)[:, None, None]
         stress = de_dstrain / (vol + 1e-12) * EV_A3_TO_GPA
         stress = stress * graph.crystal_mask[:, None, None]
-        return {"energy": energy, "forces": forces, "stress": stress,
-                "magmom": magmom}
+        return _out({"energy": energy, "forces": forces, "stress": stress,
+                     "magmom": magmom})
 
     raise ValueError(f"unknown readout {cfg.readout!r}")
 

@@ -9,6 +9,12 @@ Force/Stress heads (FastCHGNet C1) replace the reference autodiff readout:
 
   Stress head (Eq. 9): sigma = sum_i (scale * MLP9(v_i)) ⊙ N(L),
       N(L) = sum_{a,b} L_a/|L_a| ⊗ L_b/|L_b|  (3x3 lattice-normal matrix).
+
+Precision (DESIGN.md §4): head MLPs run at the feature (compute) dtype;
+the per-crystal energy/stress reductions are pinned to f32 — a crystal's
+site-energy sum is exactly the kind of long low-magnitude accumulation
+bf16 destroys — so the heads return f32 per-crystal quantities and
+``chgnet_apply`` casts everything to the policy's ``output_dtype``.
 """
 from __future__ import annotations
 
@@ -39,8 +45,11 @@ def energy_head_init(key, dim=64, dtype=jnp.float32):
 
 
 def energy_head_apply(p, graph: CrystalGraphBatch, v):
-    """Per-site energies summed per crystal -> (B,) total energies [eV]."""
-    site_e = mlp_apply(p["mlp"], v)[..., 0] * graph.atom_mask
+    """Per-site energies summed per crystal -> (B,) total energies [eV].
+
+    The per-crystal reduction is accum-pinned to f32 (DESIGN.md §4)."""
+    site_e = mlp_apply(p["mlp"], v)[..., 0].astype(jnp.float32) \
+        * graph.atom_mask
     return jax.ops.segment_sum(
         site_e, graph.atom_crystal, num_segments=graph.num_crystals
     )
@@ -53,7 +62,8 @@ def magmom_head_init(key, dim=64, dtype=jnp.float32):
 
 
 def magmom_head_apply(p, graph: CrystalGraphBatch, v):
-    return jnp.abs(mlp_apply(p["mlp"], v)[..., 0]) * graph.atom_mask
+    out = jnp.abs(mlp_apply(p["mlp"], v)[..., 0])
+    return out * graph.atom_mask.astype(out.dtype)
 
 
 # ------------------------------ force head --------------------------------
@@ -75,21 +85,27 @@ def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
     -> reduce) is one megakernel over the sorted CSR rows (DESIGN.md §3)
     and ``n_ij`` never reaches HBM.
     """
-    x_hat = bond_vec / (bond_dist[..., None] + 1e-12)
+    # x_hat is derived from f32 geometry; cast it to the bond-feature
+    # (compute) dtype at this boundary so the contrib product and the
+    # reduction operands share one dtype (DESIGN.md §4)
+    x_hat = (bond_vec / (bond_dist[..., None] + 1e-12)).astype(e.dtype)
     if conv_impl == "fused":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
         l0, l1 = p["mlp"]  # force head is fixed at (dim -> dim -> 1)
-        return kops.fused_force_readout(
-            e, x_hat, l0["w"], l0["b"], l1["w"], l1["b"],
+        out = kops.fused_force_readout(
+            e, x_hat, l0["w"].astype(e.dtype), l0["b"].astype(e.dtype),
+            l1["w"].astype(e.dtype), l1["b"].astype(e.dtype),
             graph.bond_center, graph.bond_offsets, graph.atom_cap,
-        ) * graph.atom_mask[..., None]
+        )
+        return out * graph.atom_mask[..., None].astype(out.dtype)
     n_ij = mlp_apply(p["mlp"], e)[..., 0]  # (Nb,); masked by the aggregate
     contrib = n_ij[..., None] * x_hat  # (Nb, 3)
-    return segment_aggregate(
+    out = segment_aggregate(
         contrib, graph.bond_center, graph.atom_cap, graph.bond_mask,
         agg_impl, offsets=graph.bond_offsets,
-    ) * graph.atom_mask[..., None]
+    )
+    return out * graph.atom_mask[..., None].astype(out.dtype)
 
 
 # ------------------------------ stress head -------------------------------
@@ -100,14 +116,18 @@ def stress_head_init(key, dim=64, scale=0.1, dtype=jnp.float32):
 
 
 def stress_head_apply(p, graph: CrystalGraphBatch, v):
-    """Eq. 9. Returns (B, 3, 3) stresses [GPa]."""
+    """Eq. 9. Returns (B, 3, 3) stresses [GPa].
+
+    Lattice normals stay f32 (geometry); the per-crystal reduction is
+    accum-pinned to f32 (DESIGN.md §4)."""
     lat = graph.lattice  # (B, 3, 3) rows are lattice vectors
     l_hat = lat / (jnp.linalg.norm(lat, axis=-1, keepdims=True) + 1e-12)
     # N(L)_{mn} = sum_{a,b} l_hat[a, m] * l_hat[b, n] = (sum_a l_hat_a) ⊗ (..)
     s = jnp.sum(l_hat, axis=1)  # (B, 3)
     normal = jnp.einsum("bm,bn->bmn", s, s)
-    per_atom = mlp_apply(p["mlp"], v) * graph.atom_mask[..., None]  # (A, 9)
+    per_atom = mlp_apply(p["mlp"], v).astype(jnp.float32) \
+        * graph.atom_mask[..., None]  # (A, 9)
     per_crystal = jax.ops.segment_sum(
         per_atom, graph.atom_crystal, num_segments=graph.num_crystals
     ).reshape(-1, 3, 3)
-    return p["scale"] * per_crystal * normal
+    return p["scale"].astype(jnp.float32) * per_crystal * normal

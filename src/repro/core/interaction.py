@@ -49,14 +49,31 @@ def linear_init(key, d_in, d_out, dtype=jnp.float32):
     }
 
 
+def dot_accum(x, w, accum_dtype=jnp.float32):
+    """x @ w with MXU accumulation pinned to ``accum_dtype`` and the result
+    cast back to x's dtype (DESIGN.md §4 kernel-accumulator rule).  For f32
+    operands this is exactly ``x @ w``."""
+    out = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=accum_dtype)
+    return out.astype(x.dtype)
+
+
 def linear_apply(p, x):
-    return x @ p["w"] + p["b"]
+    # cast-to-compute view: params are stored in param_dtype and cast to
+    # the activation dtype at the use site (free under f32, DESIGN.md §4)
+    return dot_accum(x, p["w"].astype(x.dtype)) + p["b"].astype(x.dtype)
 
 
 def layer_norm(x, scale, bias, eps=1e-5):
-    mu = jnp.mean(x, axis=-1, keepdims=True)
-    var = jnp.var(x, axis=-1, keepdims=True)
-    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    # statistics pinned to accum (f32): bf16 mean/var would lose ~2 digits
+    # on the D-length reductions (DESIGN.md §4)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -135,17 +152,19 @@ def gated_mlp_legacy_template(tree):
 
 def gated_mlp_apply(p, x, impl: str = "packed"):
     d = p["w"].shape[1] // 2
+    w = p["w"].astype(x.dtype)  # cast-to-compute view (DESIGN.md §4)
+    b = p["b"].astype(x.dtype)
     if impl == "ref":
-        core = layer_norm(x @ p["w"][:, :d] + p["b"][:d],
+        core = layer_norm(dot_accum(x, w[:, :d]) + b[:d],
                           p["ln_scale"][:d], p["ln_bias"][:d])
-        gate = layer_norm(x @ p["w"][:, d:] + p["b"][d:],
+        gate = layer_norm(dot_accum(x, w[:, d:]) + b[d:],
                           p["ln_scale"][d:], p["ln_bias"][d:])
         return jax.nn.silu(core) * jax.nn.sigmoid(gate)
     if impl == "packed":
         # Fig. 3(a): one GEMM against the pre-packed weights (packed at
         # init, not here); Fig. 3(b): shared epilogue, silu(x) =
         # x * sigmoid(x) reuses the sigmoid.
-        y = x @ p["w"] + p["b"]
+        y = dot_accum(x, w) + b
         core, gate = y[..., :d], y[..., d:]
         core = layer_norm(core, p["ln_scale"][:d], p["ln_bias"][:d])
         gate = layer_norm(gate, p["ln_scale"][d:], p["ln_bias"][d:])
@@ -156,7 +175,7 @@ def gated_mlp_apply(p, x, impl: str = "packed"):
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
         return kops.fused_gated_mlp_packed(
-            x, p["w"], p["b"], p["ln_scale"], p["ln_bias"])
+            x, w, b, p["ln_scale"], p["ln_bias"])
     raise ValueError(f"unknown GatedMLP impl {impl!r}")
 
 
@@ -183,21 +202,31 @@ def segment_aggregate(values, segment_ids, num_segments, mask, impl="scatter",
     impl="pallas" : the fused tiled reduction kernel
         (``repro.kernels.fused_segment_sum``) — deterministic, atomics-free,
         MXU-tiled over the CSR rows.
+
+    Precision (DESIGN.md §4): the reduction ACCUMULATES in f32 regardless
+    of the operand dtype — bf16 edge payloads sum into f32 partials (the
+    MXU's native behavior; pinned here so scatter/sorted match on every
+    backend) — and the result is cast back to the operand dtype.
     """
-    v = values * mask[..., None]
+    v = values * mask[..., None].astype(values.dtype)
     if impl == "scatter":
-        return jax.ops.segment_sum(v, segment_ids, num_segments=num_segments)
+        return jax.ops.segment_sum(
+            v.astype(jnp.float32), segment_ids, num_segments=num_segments
+        ).astype(values.dtype)
     if impl == "matmul":
         onehot = jax.nn.one_hot(segment_ids, num_segments, dtype=values.dtype)
-        return jnp.einsum("es,ed->sd", onehot, v)
+        return jnp.einsum(
+            "es,ed->sd", onehot, v, preferred_element_type=jnp.float32
+        ).astype(values.dtype)
     if impl == "sorted":
         # padded tail ids are 0 by the padding convention; point them at
         # the last segment (their payload is masked to zero) so the full
         # array really is sorted before asserting it to XLA
         ids = jnp.where(mask > 0, segment_ids, num_segments - 1)
         return jax.ops.segment_sum(
-            v, ids, num_segments=num_segments, indices_are_sorted=True
-        )
+            v.astype(jnp.float32), ids, num_segments=num_segments,
+            indices_are_sorted=True
+        ).astype(values.dtype)
     if impl == "pallas":
         if offsets is None:
             raise ValueError(
@@ -237,7 +266,9 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
     if conv_impl == "fused":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
-        mlp = p["atom_mlp"]
+        # cast-to-compute view of the MLP params: kernel VMEM operands all
+        # share the activation dtype (DESIGN.md §4); no-op under f32
+        mlp = jax.tree.map(lambda t: t.astype(v.dtype), p["atom_mlp"])
         agg = kops.fused_atom_conv(
             v, e, e_a, mlp["w"], mlp["b"], mlp["ln_scale"], mlp["ln_bias"],
             graph.bond_center, graph.bond_nbr, graph.bond_offsets,
@@ -253,7 +284,8 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
         )
     else:
         raise ValueError(f"unknown conv impl {conv_impl!r}")
-    return v + linear_apply(p["atom_out"], agg) * graph.atom_mask[..., None]
+    mask = graph.atom_mask[..., None].astype(v.dtype)
+    return v + linear_apply(p["atom_out"], agg) * mask
 
 
 def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
@@ -267,7 +299,7 @@ def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
     if conv_impl == "fused":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
-        mlp = p["bond_mlp"]
+        mlp = jax.tree.map(lambda t: t.astype(e.dtype), p["bond_mlp"])
         agg = kops.fused_bond_conv(
             v_in, e, a, e_b, mlp["w"], mlp["b"], mlp["ln_scale"],
             mlp["ln_bias"], graph.angle_ij, graph.angle_ik, center,
@@ -285,7 +317,8 @@ def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
         )
     else:
         raise ValueError(f"unknown conv impl {conv_impl!r}")
-    return e + linear_apply(p["bond_out"], agg) * graph.bond_mask[..., None]
+    mask = graph.bond_mask[..., None].astype(e.dtype)
+    return e + linear_apply(p["bond_out"], agg) * mask
 
 
 def angle_update(p, graph: CrystalGraphBatch, v_in, e_in, a, *, mlp_impl):
@@ -298,7 +331,7 @@ def angle_update(p, graph: CrystalGraphBatch, v_in, e_in, a, *, mlp_impl):
         [v_in[center], e_in[graph.angle_ij], e_in[graph.angle_ik], a], axis=-1
     )
     upd = gated_mlp_apply(p["angle_mlp"], f_a, mlp_impl)
-    return a + upd * graph.angle_mask[..., None]
+    return a + upd * graph.angle_mask[..., None].astype(a.dtype)
 
 
 def interaction_block_apply(

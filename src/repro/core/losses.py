@@ -2,6 +2,13 @@
 
 Energy is supervised per-atom (meV/atom convention); all reductions are
 mask-aware so padding never contributes.
+
+Precision (DESIGN.md §4): predictions and targets are upcast to f32
+BEFORE the Huber/error terms, and ``_masked_mean`` reduces in f32 — so
+the loss value and every reported MAE metric are comparable across
+precision policies, and the long masked sums over padded capacities
+never accumulate in bf16 (where the many padded-slot zeros plus rounding
+would dominate the mean).
 """
 from __future__ import annotations
 
@@ -29,16 +36,26 @@ def huber(x, delta):
 
 
 def _masked_mean(x, mask):
+    # f32-pinned reduction: metrics stay comparable across precision
+    # policies (DESIGN.md §4)
+    x = x.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
     return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
 
 
 def chgnet_loss(pred: dict, graph: CrystalGraphBatch, w: LossWeights):
     """Returns (scalar loss, metrics dict with per-target MAEs)."""
-    n = jnp.maximum(graph.n_atoms_per_crystal, 1.0)
-    e_err = (pred["energy"] - graph.energy) / n  # eV/atom
-    f_err = pred["forces"] - graph.forces
-    s_err = pred["stress"] - graph.stress
-    m_err = pred["magmom"] - graph.magmoms
+    n = jnp.maximum(_f32(graph.n_atoms_per_crystal), 1.0)
+    # upcast BEFORE the error terms so Huber's quadratic/linear branch
+    # decision and the MAEs are taken in f32 for every policy
+    e_err = (_f32(pred["energy"]) - _f32(graph.energy)) / n  # eV/atom
+    f_err = _f32(pred["forces"]) - _f32(graph.forces)
+    s_err = _f32(pred["stress"]) - _f32(graph.stress)
+    m_err = _f32(pred["magmom"]) - _f32(graph.magmoms)
 
     cmask = graph.crystal_mask
     amask = graph.atom_mask

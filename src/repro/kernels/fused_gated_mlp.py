@@ -9,6 +9,11 @@ Layout: CHGNet dims are d_in ∈ {192, 256}, d_out = 64 — the packed output
 is exactly 128 lanes (core ‖ gate), the native TPU lane width. Rows are
 tiled by ``block_m``; weights are small enough to stay fully VMEM-resident
 (256 x 128 x 4 B = 128 KiB).
+
+Precision (DESIGN.md §4): operands may be bf16 (halving the VMEM tiles) —
+the GEMM accumulates f32 on the MXU (``preferred_element_type``), the
+LayerNorm statistics and the gating epilogue are evaluated in f32, and
+only the final write casts back to the operand dtype.
 """
 from __future__ import annotations
 
@@ -20,23 +25,28 @@ from jax.experimental import pallas as pl
 
 
 def _ln(x, scale, bias, eps=1e-5):
+    # f32 statistics (x arrives f32 from the accumulating GEMM)
     mu = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
     return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
 
 
 def _kernel(x_ref, w_ref, b_ref, lns_ref, lno_ref, out_ref, *, d_out: int):
-    x = x_ref[...]                       # (bm, d_in)
-    w = w_ref[...]                       # (d_in, 2*d_out)
-    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[...]
+    x = x_ref[...]                       # (bm, d_in), f32 or bf16
+    w = w_ref[...]                       # (d_in, 2*d_out), same dtype
+    # bf16 x bf16 -> f32 on the MXU: in-register accumulation stays f32
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) \
+        + b_ref[...].astype(jnp.float32)
     core = y[:, :d_out]
     gate = y[:, d_out:]
-    core = _ln(core, lns_ref[0, :d_out], lno_ref[0, :d_out])
-    gate = _ln(gate, lns_ref[0, d_out:], lno_ref[0, d_out:])
+    core = _ln(core, lns_ref[0, :d_out].astype(jnp.float32),
+               lno_ref[0, :d_out].astype(jnp.float32))
+    gate = _ln(gate, lns_ref[0, d_out:].astype(jnp.float32),
+               lno_ref[0, d_out:].astype(jnp.float32))
     sig_core = jax.nn.sigmoid(core)
     sig_gate = jax.nn.sigmoid(gate)
     # silu(core) = core * sigmoid(core): sigmoid reuse (Fig. 3b dashed line)
-    out_ref[...] = (core * sig_core) * sig_gate
+    out_ref[...] = ((core * sig_core) * sig_gate).astype(out_ref.dtype)
 
 
 def fused_gated_mlp_pallas(

@@ -38,6 +38,15 @@ variant is the follow-up for tables that outgrow VMEM.
 The backward story (recompute-in-kernel, "redundancy bypass") lives in the
 ``ops`` custom VJPs: the forward saves *only the operands*, never the
 messages, and the backward rematerializes the message path (DESIGN.md §3).
+
+Precision (DESIGN.md §4): feature/weight tables may be bf16 (halving
+their VMEM residency — the binding constraint called out above).  Every
+MXU contraction accumulates f32 (``_mm``/``_mm_t``), one-hot gather
+matrices are cast to the table dtype (lossless 0/1), LayerNorm statistics
+and envelope products are evaluated in f32, and the f32 destination
+accumulator is cast back to the operand dtype only by the ``ops`` wrapper
+slice.  The recompute-in-backward loops accumulate cotangents in f32 and
+cast to the operand dtypes at the end.
 """
 from __future__ import annotations
 
@@ -50,19 +59,31 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _mm(a, b):
-    """a @ b on the MXU in f32."""
+    """a @ b on the MXU with f32 in-register accumulation.
+
+    ``a`` is cast to ``b``'s dtype first (DESIGN.md §4): the right operand
+    is the VMEM feature/weight table whose dtype the policy picked, and
+    the left operand is either a 0/1 one-hot (exact at any float dtype) or
+    a gather result that *holds* values of ``b``'s dtype — so the cast is
+    lossless while keeping both MXU inputs at one dtype."""
     return jax.lax.dot_general(
-        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        a.astype(b.dtype), b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 def _mm_t(a, b):
-    """a.T @ b (contract rows) on the MXU in f32."""
+    """a.T @ b (contract rows) on the MXU with f32 accumulation."""
     return jax.lax.dot_general(
-        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        a.astype(b.dtype), b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 def _masked_ln(x, scale, bias, d_real: int, eps=1e-5):
-    """LayerNorm over the first ``d_real`` lanes; padded lanes stay zero."""
+    """LayerNorm over the first ``d_real`` lanes; padded lanes stay zero.
+
+    ``x`` arrives f32 from the accumulating GEMM; statistics stay f32."""
+    scale = scale.astype(jnp.float32)
+    bias = bias.astype(jnp.float32)
     cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
     m = (cols < d_real).astype(x.dtype)
     cnt = jnp.float32(d_real)
@@ -140,9 +161,10 @@ def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, v_full_ref, v_tile_ref,
         e_c = e_ref[pl.ds(base, chunk), :]        # edge-contiguous slice
         # split concat-GEMM: [v_c ‖ v_n ‖ e] @ [Wc ‖ Wg] without the concat
         y = _mm(v_c, w1_ref[...]) + _mm(v_n, w2_ref[...]) \
-            + _mm(e_c, w3_ref[...]) + b_ref[...]
+            + _mm(e_c, w3_ref[...]) + b_ref[...].astype(jnp.float32)
         msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
-        msg = msg * ea_ref[pl.ds(base, chunk), :]  # envelope e^a_ij
+        # envelope e^a_ij applied in-register at f32 (accum rule, §4)
+        msg = msg * ea_ref[pl.ds(base, chunk), :].astype(jnp.float32)
         out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
         return carry
 
@@ -233,9 +255,10 @@ def _bond_conv_kernel(offs_ref, seg_ref, ik_ref, ctr_ref, v_ref, e_full_ref,
             ctr_ref[pl.ds(base, chunk), :], (v_ref,), gather_tile)
         a_c = a_ref[pl.ds(base, chunk), :]       # edge-contiguous slice
         y = _mm(v_c, w1_ref[...]) + _mm(e_ij, w2_ref[...]) \
-            + _mm(e_ik, w3_ref[...]) + _mm(a_c, w4_ref[...]) + b_ref[...]
+            + _mm(e_ik, w3_ref[...]) + _mm(a_c, w4_ref[...]) \
+            + b_ref[...].astype(jnp.float32)
         msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
-        msg = msg * eb_ij * eb_ik                # envelope e^b_ij * e^b_ik
+        msg = msg * eb_ij * eb_ik  # envelopes are f32 gather results (§4)
         out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
         return carry
 
@@ -322,11 +345,13 @@ def _force_kernel(offs_ref, seg_ref, e_ref, xhat_ref, w1_ref, b1_ref,
         seg = seg_ref[pl.ds(base, chunk), :]
         oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
         e_c = e_ref[pl.ds(base, chunk), :]
-        h = jax.nn.silu(_mm(e_c, w1_ref[...]) + b1_ref[...])  # (chunk, DP)
+        h = jax.nn.silu(_mm(e_c, w1_ref[...])
+                        + b1_ref[...].astype(jnp.float32))     # (chunk, DP)
         # n_ij is a SCALAR per bond (Eq. 8 equivariance proof): a lane
-        # reduction instead of a 1-column matmul
-        n = jnp.sum(h * w2_ref[...], axis=-1, keepdims=True) + b2_ref[0, 0]
-        contrib = n * xhat_ref[pl.ds(base, chunk), :]          # (chunk, 3P)
+        # reduction instead of a 1-column matmul; f32 accumulation (§4)
+        n = jnp.sum(h * w2_ref[...].astype(jnp.float32), axis=-1,
+                    keepdims=True) + b2_ref[0, 0].astype(jnp.float32)
+        contrib = n * xhat_ref[pl.ds(base, chunk), :].astype(jnp.float32)
         out_ref[...] += _mm_t(oh_w, contrib).astype(out_ref.dtype)
         return carry
 

@@ -19,6 +19,11 @@ Every row is owned by exactly one program, so the reduction is
 deterministic (fixed chunk order, no atomics, no cross-tile carries) and
 the padded edge tail is never touched (``offsets[-1]`` == real edges).
 
+Precision (DESIGN.md §4): ``values`` may be bf16 — the windowed one-hot
+is built at the operand dtype, the MXU contraction accumulates f32
+(``preferred_element_type``), and the output buffer is f32; the ``ops``
+wrapper casts the sliced result back to the operand dtype.
+
 VMEM note: values/segment ids are kept whole-array resident, which is fine
 for interpret mode (CI) and for CHGNet-scale bond tensors on TPU
 (~bond_cap x dim f32); a HBM + double-buffered DMA variant is the follow-up
@@ -62,7 +67,7 @@ def _kernel(offs_ref, seg_ref, val_ref, out_ref, *, block_rows: int,
 
 
 def fused_segment_sum_pallas(
-    values: jnp.ndarray,   # (E, D) f32, E % chunk == 0, D % 128 == 0
+    values: jnp.ndarray,   # (E, D) f32/bf16, E % chunk == 0, D % 128 == 0
     seg_ids: jnp.ndarray,  # (E, 1) int32, sorted over the real prefix
     offsets: jnp.ndarray,  # (S + 1,) int32 CSR row pointers, S % block_rows == 0
     *,

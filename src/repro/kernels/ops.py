@@ -6,7 +6,12 @@ Responsibilities:
   - select interpret mode automatically (interpret=True off-TPU so the
     same code paths run in CI; compiled Mosaic on TPU);
   - expose the packed-parameter calling convention used by
-    repro.core.interaction.gated_mlp_apply(impl="pallas").
+    repro.core.interaction.gated_mlp_apply(impl="pallas");
+  - preserve operand dtypes (DESIGN.md §4): bf16 inputs reach the kernels
+    as bf16 VMEM tiles (the kernels accumulate f32 in-register) and the
+    sliced outputs are cast back to the operand dtype.  The custom-VJP
+    backwards below upcast their recompute to f32 and accumulate
+    cotangents in f32 regardless of the operand dtype.
 """
 from __future__ import annotations
 
@@ -75,8 +80,10 @@ def fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, *, block_m: int = 256):
     once at init — repro.core.interaction.gated_mlp_init); no per-step
     parameter concat inside the jitted step."""
     x_p, m = _pad_rows(x, block_m)
+    # GEMM operands share x's dtype (cast-to-compute view, DESIGN.md §4);
+    # LN params stay as given — the kernel evaluates LN in f32 regardless
     out = fused_gated_mlp_pallas(
-        x_p, w, b, ln_scale, ln_bias,
+        x_p, w.astype(x.dtype), b.astype(x.dtype), ln_scale, ln_bias,
         block_m=block_m, interpret=_interpret(),
     )
     return out[:m]
@@ -164,8 +171,8 @@ _LANE = 128  # TPU lane width: feature dims and packed halves pad to this
 
 
 def _pad2(x, rows, cols):
-    return jnp.pad(x.astype(jnp.float32),
-                   ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+    # dtype-preserving: bf16 operands stay bf16 VMEM tiles (DESIGN.md §4)
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
 
 
 def _round_up(n: int, m: int) -> int:
@@ -191,18 +198,20 @@ def _pad_ids(ids, rows):
 
 
 def _pack_lanes_vec(vec, d, hp):
-    """(2d,) packed [core ‖ gate] -> (1, 2*hp) with halves lane-padded."""
-    out = jnp.zeros((2 * hp,), jnp.float32)
-    out = out.at[:d].set(vec[:d].astype(jnp.float32))
-    out = out.at[hp:hp + d].set(vec[d:].astype(jnp.float32))
+    """(2d,) packed [core ‖ gate] -> (1, 2*hp) with halves lane-padded
+    (dtype-preserving)."""
+    out = jnp.zeros((2 * hp,), vec.dtype)
+    out = out.at[:d].set(vec[:d])
+    out = out.at[hp:hp + d].set(vec[d:])
     return out[None, :]
 
 
 def _pack_lanes_w(wk, dp, d, hp):
-    """(d_in_k, 2d) weight block -> (dp, 2*hp) with halves lane-padded."""
-    out = jnp.zeros((dp, 2 * hp), jnp.float32)
-    out = out.at[:wk.shape[0], :d].set(wk[:, :d].astype(jnp.float32))
-    out = out.at[:wk.shape[0], hp:hp + d].set(wk[:, d:].astype(jnp.float32))
+    """(d_in_k, 2d) weight block -> (dp, 2*hp) with halves lane-padded
+    (dtype-preserving)."""
+    out = jnp.zeros((dp, 2 * hp), wk.dtype)
+    out = out.at[:wk.shape[0], :d].set(wk[:, :d])
+    out = out.at[:wk.shape[0], hp:hp + d].set(wk[:, d:])
     return out
 
 
@@ -461,7 +470,7 @@ def _fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center, offsets,
         _pad2(e, ep, dp), _pad2(x_hat, ep, xp),
         _pad_ids(bond_center, ep), _pad_offsets(offsets, ap),
         _pad2(w1, dp, dp), _pad2(b1[None, :], 1, dp),
-        _pad2(w2.T, 1, dp), jnp.full((1, xp), b2[0], jnp.float32),
+        _pad2(w2.T, 1, dp), jnp.full((1, xp), b2[0], b2.dtype),
         block_rows=block_rows, chunk=chunk, interpret=_interpret(),
     )
     return out[:num_atoms, :x_hat.shape[1]].astype(e.dtype)

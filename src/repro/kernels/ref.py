@@ -2,6 +2,12 @@
 
 These mirror the *reference* math (repro.core.basis / interaction) but are
 kept dependency-free so kernel tests read as kernel-vs-oracle only.
+
+Precision (DESIGN.md §4): the oracles follow the kernels' accumulator
+rules — LayerNorm statistics in f32 — so an oracle fed bf16 operands
+models the kernel's semantics (bf16 GEMM inputs, f32 accumulation), not
+a fully-bf16 computation.  The custom-VJP backwards in ``kernels.ops``
+call these with f32-upcast operands either way.
 """
 from __future__ import annotations
 
@@ -48,9 +54,13 @@ def sorted_segment_sum_ref(values, seg_ids, offsets, num_segments):
 
 
 def _layer_norm(x, scale, bias, eps=1e-5):
-    mu = jnp.mean(x, axis=-1, keepdims=True)
-    var = jnp.var(x, axis=-1, keepdims=True)
-    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    # f32-pinned statistics, mirroring the kernels (DESIGN.md §4)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
 
 
 def fused_gated_mlp_ref(x, wc, bc, wg, bg, sc, oc, sg, og):
@@ -61,9 +71,14 @@ def fused_gated_mlp_ref(x, wc, bc, wg, bg, sc, oc, sg, og):
 
 
 def gated_mlp_packed_ref(x, w, b, ln_scale, ln_bias):
-    """Packed-parameter GatedMLP: w = [Wc ‖ Wg], b/ln_* = [core ‖ gate]."""
+    """Packed-parameter GatedMLP: w = [Wc ‖ Wg], b/ln_* = [core ‖ gate].
+
+    The GEMM accumulates f32 (kernel accumulator rule, DESIGN.md §4) —
+    identical math for f32 operands, kernel-faithful for bf16."""
     d = w.shape[1] // 2
-    y = x @ w + b
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + b.astype(jnp.float32)
     core = _layer_norm(y[..., :d], ln_scale[:d], ln_bias[:d])
     gate = _layer_norm(y[..., d:], ln_scale[d:], ln_bias[d:])
     return jax.nn.silu(core) * jax.nn.sigmoid(gate)

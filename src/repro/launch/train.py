@@ -43,12 +43,16 @@ def train_chgnet(args):
     mesh = make_host_mesh() if n_dev > 1 else None
     model_cfg = C.FAST_FS_HEAD if args.readout == "direct" else C.FAST_WO_HEAD
     # fused message-passing megakernels (DESIGN.md §3) — every batch from
-    # repro.batching satisfies the §1 layout they require
-    model_cfg = model_cfg.with_(conv_impl=args.conv_impl)
+    # repro.batching satisfies the §1 layout they require — and the
+    # end-to-end precision policy (DESIGN.md §4; "mixed" = f32 master
+    # params/accum, bf16 compute + dynamic loss scaling)
+    model_cfg = model_cfg.with_(conv_impl=args.conv_impl,
+                                precision=args.precision)
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
                             loss=C.LOSS, grad_reduce=args.grad_reduce)
     print(f"devices={n_dev} init_lr={train_cfg.init_lr:.2e} "
-          f"readout={args.readout} conv_impl={args.conv_impl}")
+          f"readout={args.readout} conv_impl={args.conv_impl} "
+          f"precision={args.precision}")
 
     def loop(start):
         tr = Trainer(model_cfg, train_cfg, mesh=mesh, ckpt_dir=args.ckpt,
@@ -126,6 +130,10 @@ def main():
     ap.add_argument("--conv-impl", default="unfused",
                     choices=["unfused", "fused"],
                     help="fused = message-passing megakernels (DESIGN.md §3)")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "mixed"],
+                    help="end-to-end precision policy (DESIGN.md §4); "
+                         "mixed = f32 params/accum, bf16 compute")
     ap.add_argument("--grad-reduce", default="bucketed",
                     choices=["plain", "bucketed", "compressed"])
     ap.add_argument("--ckpt", default=None)

@@ -1,10 +1,19 @@
 """Optimizer substrate: Adam/AdamW, schedules (Eq. 14), grad transforms."""
 from .adam import AdamConfig, adam_init, adam_update
-from .grad import clip_by_global_norm, compress, decompress, ef_init, global_norm
+from .grad import (
+    clip_by_global_norm,
+    compress,
+    decompress,
+    ef_init,
+    global_norm,
+    tree_all_finite,
+    unscale_grads,
+)
 from .schedule import cosine_annealing, scaled_init_lr
 
 __all__ = [
     "AdamConfig", "adam_init", "adam_update", "clip_by_global_norm",
     "compress", "decompress", "ef_init", "global_norm",
+    "tree_all_finite", "unscale_grads",
     "cosine_annealing", "scaled_init_lr",
 ]

@@ -3,6 +3,15 @@
 Functional API mirroring optax: ``init(params) -> state``,
 ``update(grads, state, params, lr) -> (new_params, new_state)``.
 State is a plain pytree -> checkpointable with runtime.checkpoint.
+
+Mixed precision (DESIGN.md §4): ``adam_init(params, master_dtype=...)``
+grows an f32 **master copy** of low-precision parameters inside the state
+(``state["master"]``); ``adam_update`` then steps the master weights (and
+keeps the moments at master precision) and returns a cast-to-param-dtype
+view as the new live params.  Policies whose ``param_dtype`` is already
+f32 (``"f32"``, ``"mixed"``) need no master copy — the params *are* the
+master weights.  Extra keys on the state dict (e.g. the trainer's
+``"loss_scale"`` subtree) pass through ``adam_update`` untouched.
 """
 from __future__ import annotations
 
@@ -11,6 +20,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.precision import cast_float_tree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,13 +32,19 @@ class AdamConfig:
     weight_decay: float = 0.0  # 0 => plain Adam
 
 
-def adam_init(params: Any) -> dict:
-    zeros = jax.tree.map(jnp.zeros_like, params)
-    return {
-        "mu": zeros,
-        "nu": jax.tree.map(jnp.zeros_like, params),
+def adam_init(params: Any, *, master_dtype=None) -> dict:
+    """``master_dtype`` (e.g. ``jnp.float32``) adds a master-weight copy
+    for low-precision params; moments are kept at master precision."""
+    ref = params if master_dtype is None \
+        else cast_float_tree(params, master_dtype)
+    state = {
+        "mu": jax.tree.map(jnp.zeros_like, ref),
+        "nu": jax.tree.map(jnp.zeros_like, ref),
         "count": jnp.zeros((), jnp.int32),
     }
+    if master_dtype is not None:
+        state["master"] = ref
+    return state
 
 
 def adam_update(
@@ -37,6 +54,11 @@ def adam_update(
     lr: jnp.ndarray | float,
     cfg: AdamConfig = AdamConfig(),
 ) -> tuple[Any, dict]:
+    master = state.get("master")
+    target = params if master is None else master
+    # grads arrive at whatever precision the backward produced; the moment
+    # update and the step itself run at master precision
+    grads = jax.tree.map(lambda g, t: g.astype(t.dtype), grads, target)
     count = state["count"] + 1
     b1, b2 = cfg.b1, cfg.b2
     mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
@@ -51,5 +73,12 @@ def adam_update(
             upd = upd + cfg.weight_decay * p
         return p - lr * upd
 
-    new_params = jax.tree.map(step, params, mu, nu)
-    return new_params, {"mu": mu, "nu": nu, "count": count}
+    new_target = jax.tree.map(step, target, mu, nu)
+    new_state = dict(state, mu=mu, nu=nu, count=count)
+    if master is None:
+        return new_target, new_state
+    new_state["master"] = new_target
+    # live params are a cast-to-param-dtype view of the master weights
+    new_params = jax.tree.map(
+        lambda t, p: t.astype(p.dtype), new_target, params)
+    return new_params, new_state

@@ -14,6 +14,22 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_all_finite(tree: Any) -> jnp.ndarray:
+    """Scalar bool: every element of every leaf is finite (the loss-scaler
+    skip predicate, DESIGN.md §4)."""
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(leaves))
+
+
+def unscale_grads(grads: Any, scale) -> Any:
+    """Undo loss scaling and upcast to f32 — BEFORE clipping, so the clip
+    threshold is in true-gradient units (DESIGN.md §4)."""
+    inv = 1.0 / jnp.asarray(scale, jnp.float32)
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+
+
 def global_norm(tree: Any) -> jnp.ndarray:
     return jnp.sqrt(
         sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))

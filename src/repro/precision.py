@@ -1,0 +1,189 @@
+"""End-to-end mixed-precision policy + loss scaling (DESIGN.md §4).
+
+FastCHGNet's memory-footprint and throughput wins assume the hot path runs
+at tensor-core-friendly precision.  This module is the single source of
+truth for *which* dtype each class of value uses:
+
+  - ``PrecisionPolicy``: a frozen, hashable 4-dtype contract
+    (``param_dtype`` storage, ``compute_dtype`` GEMM/VPU operands,
+    ``accum_dtype`` reductions + LayerNorm statistics + kernel
+    accumulators, ``output_dtype`` public model outputs), selected by
+    ``CHGNetConfig.precision`` (``"f32" | "bf16" | "mixed"``) and resolved
+    via :func:`resolve_policy`.  The model, the Pallas kernel wrappers,
+    the optimizer, the trainer, and the serve engine all consult the same
+    policy instead of scattering ad-hoc ``astype`` calls.
+  - ``LossScaleConfig`` + the functional loss scaler: static and dynamic
+    variants with the standard inf/nan skip-and-halve update.  bf16
+    shares float32's exponent range, so overflow is rare — but direct
+    force/stress supervision makes CHGNet-style UIPs gradient-sensitive,
+    and the dynamic scaler turns a bad step into a skipped step instead
+    of a poisoned optimizer state.  Scaler state is a plain pytree that
+    lives inside the optimizer state (``opt_state["loss_scale"]``), so it
+    threads through the compile cache, the DP ``shard_map`` path, and
+    ``runtime.checkpoint`` without any signature changes.
+
+Cast-boundary discipline (enforced across layers, see DESIGN.md §4):
+parameters are *stored* in ``param_dtype`` and cast to ``compute_dtype``
+at their use sites (a "compute view" — free for f32, one cast for mixed);
+basis functions (envelopes, RBF, Fourier) and geometry are pinned to
+``accum_dtype``; every edge→node and per-crystal reduction accumulates in
+``accum_dtype``; public outputs are cast to ``output_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Frozen dtype contract. Dtypes are stored as *names* so the policy
+    stays hashable and usable inside jit-static config dataclasses."""
+
+    name: str = "f32"
+    param_dtype: str = "float32"    # parameter storage (master weights)
+    compute_dtype: str = "float32"  # GEMM / VPU operand dtype (VMEM tiles)
+    accum_dtype: str = "float32"    # reductions, LN stats, kernel accums
+    output_dtype: str = "float32"   # public model outputs
+
+    # -- dtype accessors ----------------------------------------------------
+    @property
+    def param(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def compute(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def accum(self):
+        return jnp.dtype(self.accum_dtype)
+
+    @property
+    def output(self):
+        return jnp.dtype(self.output_dtype)
+
+    # -- predicates ---------------------------------------------------------
+    @property
+    def low_precision_compute(self) -> bool:
+        return self.compute != jnp.dtype(jnp.float32)
+
+    @property
+    def needs_master_weights(self) -> bool:
+        """True when parameters are stored below f32 and the optimizer
+        should keep an f32 master copy (``optim.adam.adam_init``)."""
+        return self.param != jnp.dtype(jnp.float32)
+
+    # -- casts --------------------------------------------------------------
+    def cast_compute(self, x):
+        return _cast(x, self.compute)
+
+    def cast_output(self, x):
+        return _cast(x, self.output)
+
+
+def _cast(x, dtype):
+    x = jnp.asarray(x)
+    return x if x.dtype == dtype else x.astype(dtype)
+
+
+def cast_float_tree(tree: Any, dtype) -> Any:
+    """Cast every inexact (floating) leaf of a pytree; integer/bool leaves
+    pass through untouched (graph indices, step counters).  The one
+    tree-cast used by master-weight growth (``optim.adam``) and the
+    checkpoint migration (``train.trainer``)."""
+    dtype = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact) else x,
+        tree,
+    )
+
+
+F32 = PrecisionPolicy(name="f32")
+# pure bf16 storage+compute; accumulation stays f32 (the MXU accumulates
+# f32 natively — there is no reason to give that up)
+BF16 = PrecisionPolicy(name="bf16", param_dtype="bfloat16",
+                       compute_dtype="bfloat16")
+# the recommended training policy: f32 master params / accumulation,
+# bf16 GEMM operands (paper's "exploit GPU computation power" regime)
+MIXED = PrecisionPolicy(name="mixed", compute_dtype="bfloat16")
+
+POLICIES = {"f32": F32, "bf16": BF16, "mixed": MIXED}
+
+
+def resolve_policy(precision: str | PrecisionPolicy) -> PrecisionPolicy:
+    """``"f32" | "bf16" | "mixed"`` (or an explicit policy) -> policy."""
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    try:
+        return POLICIES[precision]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of "
+            f"{sorted(POLICIES)} or a PrecisionPolicy") from None
+
+
+# ---------------------------------------------------------------------------
+# Loss scaling: static and dynamic (inf/nan skip-and-halve) variants
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LossScaleConfig:
+    """Loss-scaler recipe. ``kind``:
+
+    - ``"auto"``   : dynamic when the policy computes below f32, else none
+    - ``"none"``   : no scaling, no skip logic (the f32 fast path)
+    - ``"static"`` : fixed ``init_scale``; non-finite grads still skip the
+                     update (but the scale never moves)
+    - ``"dynamic"``: skip-and-halve on inf/nan grads, double after
+                     ``growth_interval`` consecutive finite steps
+    """
+
+    kind: str = "auto"
+    init_scale: float = 2.0 ** 12
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    growth_interval: int = 200
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 16
+
+    def resolved_kind(self, policy: PrecisionPolicy | str) -> str:
+        if self.kind != "auto":
+            return self.kind
+        return "dynamic" if resolve_policy(policy).low_precision_compute \
+            else "none"
+
+
+def loss_scale_init(cfg: LossScaleConfig) -> dict:
+    """Scaler state pytree (checkpointable; lives in opt_state)."""
+    return {
+        "scale": jnp.asarray(cfg.init_scale, jnp.float32),
+        "good_steps": jnp.zeros((), jnp.int32),
+    }
+
+
+def scale_loss(loss, state: dict):
+    return loss * state["scale"].astype(loss.dtype)
+
+
+def loss_scale_update(state: dict, grads_finite, cfg: LossScaleConfig,
+                      kind: str) -> dict:
+    """Skip-and-halve state machine; a no-op for the static variant."""
+    if kind == "static":
+        return state
+    scale, good = state["scale"], state["good_steps"]
+    good = jnp.where(grads_finite, good + 1, 0)
+    grow = good >= cfg.growth_interval
+    new_scale = jnp.where(
+        grads_finite,
+        jnp.where(grow,
+                  jnp.minimum(scale * cfg.growth_factor, cfg.max_scale),
+                  scale),
+        jnp.maximum(scale * cfg.backoff_factor, cfg.min_scale),
+    )
+    good = jnp.where(grow, 0, good)
+    return {"scale": new_scale, "good_steps": good}

@@ -8,12 +8,18 @@ Design goals (1000+-node deployability):
     (elastic scaling, runtime/elastic.py);
   - **keep-K**: bounded disk usage; ``latest_step`` scans for auto-resume;
   - arrays are stored by flattened-pytree path with dtype/shape, verified
-    on restore against the template pytree.
+    on restore against the template pytree: a shape mismatch raises, a
+    dtype mismatch warns and CASTS to the template dtype (so e.g. a
+    legacy f32 checkpoint restores into a bf16-param policy and vice
+    versa, DESIGN.md §4 — never a silent bit reinterpretation);
+  - extension dtypes (bfloat16 & friends, whose numpy ``.str`` is an
+    opaque void like ``<V2``) are stored by NAME so they round-trip.
 """
 from __future__ import annotations
 
 import os
 import re
+import warnings
 from typing import Any
 
 import jax
@@ -42,8 +48,14 @@ def save_checkpoint(
     arrays = {}
     for path, leaf in leaves_with_paths:
         arr = np.asarray(jax.device_get(leaf))
+        # numpy renders extension dtypes (ml_dtypes bfloat16 etc.) as raw
+        # void in ``.str`` ('<V2'), which does NOT round-trip through
+        # np.dtype(); their ``.name`` ('bfloat16') does
+        dtype_tag = arr.dtype.str
+        if "V" in dtype_tag:
+            dtype_tag = arr.dtype.name
         arrays[jax.tree_util.keystr(path)] = {
-            "dtype": arr.dtype.str,
+            "dtype": dtype_tag,
             "shape": list(arr.shape),
             "data": arr.tobytes(),
         }
@@ -124,6 +136,18 @@ def restore_checkpoint(
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {arr.shape} vs template {want_shape}"
             )
+        # dtype is VERIFIED against the template, never silently adopted:
+        # a stored-vs-template mismatch (e.g. restoring an f32 checkpoint
+        # into a mixed/bf16-policy Trainer, or the reverse) casts to the
+        # template dtype with a warning (DESIGN.md §4)
+        want_dtype = np.dtype(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        if arr.dtype != want_dtype:
+            warnings.warn(
+                f"checkpoint dtype mismatch for {key}: stored "
+                f"{arr.dtype.name}, template {want_dtype.name}; casting",
+                stacklevel=2,
+            )
+            arr = arr.astype(want_dtype)
         new_leaves.append(arr.copy())
     tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
     return tree, payload["step"], payload.get("meta", {})

@@ -76,7 +76,15 @@ def structure_ladder(
 
 
 class ServeEngine:
-    """One-step E/F/sigma/magmom prediction over bucketed padded batches."""
+    """One-step E/F/sigma/magmom prediction over bucketed padded batches.
+
+    ``precision`` overrides ``model_cfg.precision`` for serving (DESIGN.md
+    §4): MD inference typically wants ``"mixed"`` — bf16 GEMM/VMEM
+    operands halve the activation footprint per replica slot while the
+    accum-pinned reductions keep E/F/sigma at f32 quality, and outputs
+    are f32 either way (``output_dtype``), so integrators see no change.
+    Params may stay f32 (training layout): the model casts per-use.
+    """
 
     def __init__(
         self,
@@ -86,7 +94,10 @@ class ServeEngine:
         *,
         cache: CompileCache | None = None,
         validate_layout: bool = True,
+        precision: str | None = None,
     ):
+        if precision is not None:
+            model_cfg = model_cfg.with_(precision=precision)
         self.params = params
         self.model_cfg = model_cfg
         self.engine = BatchingEngine(ladder, cache,
@@ -100,6 +111,7 @@ class ServeEngine:
         crystals: list[Crystal],
         graphs: list[GraphIndices] | None = None,
         validate_layout: bool = True,
+        precision: str | None = None,
         **ladder_kw,
     ) -> "ServeEngine":
         graphs = graphs or [
@@ -108,7 +120,7 @@ class ServeEngine:
         ]
         return cls(params, model_cfg,
                    structure_ladder(graphs, crystals, **ladder_kw),
-                   validate_layout=validate_layout)
+                   validate_layout=validate_layout, precision=precision)
 
     def step_fn(self, caps: BatchCapacities, num_slots: int):
         """Persistent compiled serve step for (bucket, slots, config)."""

@@ -8,6 +8,17 @@ the second-order-derivative cost are directly measurable.
 mesh axis: per-device graph shards (leading axis), gradient all-reduce via
 plain / bucketed / bf16-compressed psum (paper C8 + beyond-paper
 compression), replicated Adam update.
+
+Mixed precision (DESIGN.md §4): when ``CHGNetConfig.precision`` computes
+below f32, the train steps scale the loss (``TrainConfig.loss_scale``),
+unscale-to-f32 BEFORE clipping, skip the update on inf/nan grads (and
+halve the dynamic scale), and keep f32 master weights via ``optim.adam``.
+Scaler state lives INSIDE ``opt_state`` (``opt_state["loss_scale"]``), so
+step signatures, the compile cache, the DP path, and checkpoints are
+unchanged; metrics gain ``loss_scale`` / ``grads_finite`` entries.  The
+same applies on the DP path: the psum reduces *scaled* grads (composing
+with the bf16-compressed collective), and unscale/skip runs replicated
+after the all-reduce so every device takes the same decision.
 """
 from __future__ import annotations
 
@@ -27,8 +38,20 @@ from repro.core.graph import CrystalGraphBatch
 from repro.core.losses import LossWeights, chgnet_loss
 from repro.distributed.collectives import bucketed_psum, compressed_psum
 from repro.optim.adam import AdamConfig, adam_init, adam_update
-from repro.optim.grad import clip_by_global_norm
+from repro.optim.grad import (
+    clip_by_global_norm,
+    tree_all_finite,
+    unscale_grads,
+)
 from repro.optim.schedule import cosine_annealing, scaled_init_lr
+from repro.precision import (
+    LossScaleConfig,
+    cast_float_tree,
+    loss_scale_init,
+    loss_scale_update,
+    resolve_policy,
+    scale_loss,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +65,9 @@ class TrainConfig:
     grad_reduce: str = "bucketed"  # "plain" | "bucketed" | "compressed"
     adam: AdamConfig = AdamConfig()
     loss: LossWeights = LossWeights()
+    # loss scaling (DESIGN.md §4): "auto" enables the dynamic scaler iff
+    # the model policy computes below f32, so the f32 path is unchanged
+    loss_scale: LossScaleConfig = LossScaleConfig()
 
     @property
     def init_lr(self) -> float:
@@ -52,6 +78,53 @@ def chgnet_loss_fn(params, cfg: CHGNetConfig, batch: CrystalGraphBatch,
                    weights: LossWeights):
     pred = chgnet_apply(params, cfg, batch)
     return chgnet_loss(pred, batch, weights)
+
+
+def _scaled_chgnet_loss_fn(params, cfg, batch, weights, scaler):
+    """Loss for value_and_grad, multiplied by the (optional) loss scale.
+    Metrics carry the UNSCALED loss."""
+    loss, metrics = chgnet_loss_fn(params, cfg, batch, weights)
+    if scaler is not None:
+        loss = scale_loss(loss, scaler)
+    return loss, metrics
+
+
+def _apply_grads(grads, opt_state, params, lr, train_cfg: TrainConfig,
+                 scale_kind: str):
+    """Shared tail of every train step: (optionally) unscale -> clip ->
+    Adam -> skip-on-nonfinite -> scaler update (DESIGN.md §4).
+
+    ``opt_state`` may carry a ``"loss_scale"`` subtree; its presence (a
+    trace-time structure property) turns on the scaled path.  Returns
+    (params, opt_state, extra_metrics).
+    """
+    scaler = opt_state.get("loss_scale")
+    if scaler is None:
+        grads = clip_by_global_norm(grads, train_cfg.grad_clip)
+        params, opt_state = adam_update(grads, opt_state, params, lr,
+                                        train_cfg.adam)
+        return params, opt_state, {}
+
+    adam_state = {k: v for k, v in opt_state.items() if k != "loss_scale"}
+    # unscale to f32 BEFORE clipping so the clip threshold is in true
+    # gradient units; the finite check sees the true grads too
+    grads = unscale_grads(grads, scaler["scale"])
+    finite = tree_all_finite(grads)
+    grads = clip_by_global_norm(grads, train_cfg.grad_clip)
+    new_params, new_adam = adam_update(grads, adam_state, params, lr,
+                                       train_cfg.adam)
+    # inf/nan grads: skip the whole update (params, moments, count) …
+    keep = lambda new, old: jax.tree.map(
+        lambda n, o: jnp.where(finite, n, o), new, old)
+    params = keep(new_params, params)
+    adam_state = keep(new_adam, adam_state)
+    # … and let the scaler back off / grow
+    scaler = loss_scale_update(scaler, finite, train_cfg.loss_scale,
+                               scale_kind)
+    opt_state = dict(adam_state, loss_scale=scaler)
+    extra = {"loss_scale": scaler["scale"],
+             "grads_finite": finite.astype(jnp.float32)}
+    return params, opt_state, extra
 
 
 # ---------------------------------------------------------------------------
@@ -75,17 +148,19 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
             warmup_steps=train_cfg.warmup_steps,
         )
 
+    scale_kind = train_cfg.loss_scale.resolved_kind(model_cfg.precision)
+
     def build_train():
         @jax.jit
         def train_step(params, opt_state, batch, step):
+            scaler = opt_state.get("loss_scale")
             (_, metrics), grads = jax.value_and_grad(
-                chgnet_loss_fn, has_aux=True
-            )(params, model_cfg, batch, train_cfg.loss)
-            grads = clip_by_global_norm(grads, train_cfg.grad_clip)
-            params, opt_state = adam_update(
-                grads, opt_state, params, lr_at(step), train_cfg.adam
-            )
-            return params, opt_state, metrics
+                _scaled_chgnet_loss_fn, has_aux=True
+            )(params, model_cfg, batch, train_cfg.loss, scaler)
+            params, opt_state, extra = _apply_grads(
+                grads, opt_state, params, lr_at(step), train_cfg,
+                scale_kind)
+            return params, opt_state, dict(metrics, **extra)
 
         return train_step
 
@@ -139,12 +214,19 @@ def make_dp_train_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
             warmup_steps=train_cfg.warmup_steps,
         )
 
+    scale_kind = train_cfg.loss_scale.resolved_kind(model_cfg.precision)
+
     def local_step(params, opt_state, batch, step):
         # leading device axis is 1 locally -> squeeze
         local_batch = jax.tree.map(lambda x: x[0], batch)
+        scaler = opt_state.get("loss_scale")
         (_, metrics), grads = jax.value_and_grad(
-            chgnet_loss_fn, has_aux=True
-        )(params, model_cfg, local_batch, train_cfg.loss)
+            _scaled_chgnet_loss_fn, has_aux=True
+        )(params, model_cfg, local_batch, train_cfg.loss, scaler)
+        # the all-reduce sees SCALED grads (composes with the bf16
+        # compressed psum: scaling lifts small cotangents above bf16's
+        # rounding before quantization); unscale + skip run replicated
+        # after it, so every device takes the same decision
         if train_cfg.grad_reduce == "plain":
             grads = jax.lax.psum(grads, axis)
         elif train_cfg.grad_reduce == "bucketed":
@@ -154,12 +236,10 @@ def make_dp_train_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
         else:
             raise ValueError(train_cfg.grad_reduce)
         grads = jax.tree.map(lambda g: g / mesh.shape[axis], grads)
-        grads = clip_by_global_norm(grads, train_cfg.grad_clip)
-        params, opt_state = adam_update(
-            grads, opt_state, params, lr_at(step), train_cfg.adam
-        )
+        params, opt_state, extra = _apply_grads(
+            grads, opt_state, params, lr_at(step), train_cfg, scale_kind)
         metrics = jax.lax.pmean(metrics, axis)
-        return params, opt_state, metrics
+        return params, opt_state, dict(metrics, **extra)
 
     batch_spec = P(axis)
     sharded = shard_map(
@@ -215,6 +295,15 @@ def make_dp_serve_step(model_cfg: CHGNetConfig, mesh: Mesh,
     ))
 
 
+def _strip_precision_state(state: dict) -> dict:
+    """Trainer-state template minus the mixed-precision-only leaves
+    (``opt_state["loss_scale"]`` / ``opt_state["master"]``) — the shape a
+    legacy f32 checkpoint has (DESIGN.md §4 migration)."""
+    opt = {k: v for k, v in state["opt_state"].items()
+           if k not in ("loss_scale", "master")}
+    return dict(state, opt_state=opt)
+
+
 # ---------------------------------------------------------------------------
 # Trainer loop with periodic checkpoint + straggler watch
 # ---------------------------------------------------------------------------
@@ -235,7 +324,19 @@ class Trainer:
         self.model_cfg = model_cfg
         self.train_cfg = train_cfg
         self.params = chgnet_init(jax.random.PRNGKey(seed), model_cfg)
-        self.opt_state = adam_init(self.params)
+        # mixed precision (DESIGN.md §4): low-precision param storage gets
+        # f32 master weights in the optimizer; low-precision compute gets
+        # a loss scaler whose state rides inside opt_state (-> checkpoints
+        # and the compile cache carry it with zero signature changes)
+        policy = resolve_policy(model_cfg.precision)
+        self.opt_state = adam_init(
+            self.params,
+            master_dtype=jnp.float32 if policy.needs_master_weights
+            else None)
+        self._scale_kind = train_cfg.loss_scale.resolved_kind(policy)
+        if self._scale_kind != "none":
+            self.opt_state["loss_scale"] = loss_scale_init(
+                train_cfg.loss_scale)
         self.step = 0
         self.mesh = mesh
         self.ckpt_dir = ckpt_dir
@@ -287,30 +388,62 @@ class Trainer:
             return False
         from repro.runtime.checkpoint import MissingLeafError
 
-        try:
-            state, step, _ = restore_checkpoint(self.ckpt_dir, self.state())
-        except MissingLeafError as missing:
-            # legacy checkpoint with separate GatedMLP core/gate weights:
-            # restore into the legacy-shaped template, then pack ONCE here
-            # (checkpoint-load), so no jitted step re-concatenates params.
-            # Only retry when the missing leaf IS a packed-GatedMLP key —
-            # and re-raise the original error if the legacy attempt also
-            # fails — so genuinely incompatible checkpoints (different
-            # architecture) surface their real mismatch, not a misleading
-            # legacy-layout one.
-            packed_keys = ("['w']", "['b']", "['ln_scale']", "['ln_bias']")
-            if not missing.leaf_path.endswith(packed_keys):
-                raise
-            from repro.core.interaction import (
-                gated_mlp_legacy_template, pack_gated_mlp_params)
+        # Two independent layout migrations, each applied at most once:
+        #   - packed GatedMLP (PR 3): legacy separate core/gate weights are
+        #     restored into the legacy-shaped template and packed ONCE here
+        #     (checkpoint-load), so no jitted step re-concatenates params;
+        #   - precision state (DESIGN.md §4): a legacy f32 checkpoint has
+        #     no ``opt_state["loss_scale"]`` / ``opt_state["master"]``
+        #     leaves — restore into a stripped template, then re-grow both
+        #     from the restored params below.
+        # Any other missing leaf (genuinely incompatible checkpoint) —
+        # and any failure of a migration attempt — re-raises the FIRST
+        # error so the real mismatch surfaces, not a misleading one.
+        packed_keys = ("['w']", "['b']", "['ln_scale']", "['ln_bias']")
+        precision_keys = ("['loss_scale']", "['master']")
+        from repro.core.interaction import (
+            gated_mlp_legacy_template, pack_gated_mlp_params)
 
-            legacy = gated_mlp_legacy_template(self.state())
+        wants_master = "master" in self.opt_state
+        template = self.state()
+        stripped = packed = False
+        first_err = None
+        while True:
             try:
-                state, step, _ = restore_checkpoint(self.ckpt_dir, legacy)
-            except (KeyError, ValueError):
+                state, step, _ = restore_checkpoint(self.ckpt_dir, template)
+                break
+            except MissingLeafError as missing:
+                first_err = first_err or missing
+                if not stripped and any(k in missing.leaf_path
+                                        for k in precision_keys):
+                    template = _strip_precision_state(template)
+                    stripped = True
+                    continue
+                if not packed and missing.leaf_path.endswith(packed_keys):
+                    template = gated_mlp_legacy_template(template)
+                    packed = True
+                    continue
+                # no migration applies: THIS leaf is genuinely missing
+                # from the checkpoint (migrations only strip/rename their
+                # own leaves), so it is the real mismatch to surface
                 raise missing
+            except (KeyError, ValueError):
+                if first_err is not None:
+                    raise first_err
+                raise
+        if packed:
             state = pack_gated_mlp_params(state)
         self.params, self.opt_state = state["params"], state["opt_state"]
+        if stripped:
+            # legacy-f32 -> mixed-precision migration: master weights are
+            # re-grown from the restored params (exact for policies that
+            # store f32 params) and the scaler restarts at init_scale
+            if wants_master:
+                self.opt_state["master"] = cast_float_tree(
+                    self.params, jnp.float32)
+            if self._scale_kind != "none":
+                self.opt_state["loss_scale"] = loss_scale_init(
+                    self.train_cfg.loss_scale)
         self.step = step
         return True
 

@@ -1,0 +1,407 @@
+"""End-to-end mixed-precision subsystem (DESIGN.md §4).
+
+Covers: bf16/mixed vs f32 forward and gradient equivalence per
+(``mlp_impl``, ``agg_impl``, ``conv_impl``) tier (CPU interpret mode),
+the dynamic loss-scaler halve/grow state machine on injected inf/nan
+grads, f32-master-weight optimization for bf16 params, a short
+loss-descent smoke under ``precision="mixed"``, and the checkpoint
+dtype-verification + legacy-f32 migration paths.
+"""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batching import BatchCapacities, batch_crystals
+from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
+from repro.core.losses import LossWeights, chgnet_loss
+from repro.core.neighbors import Crystal, build_graph
+from repro.precision import (
+    BF16,
+    MIXED,
+    LossScaleConfig,
+    loss_scale_init,
+    loss_scale_update,
+    resolve_policy,
+)
+
+# documented §4 tolerances (test scales: unit-normal features, ~16 atoms
+# per crystal): forward within 3e-2 absolute, grads within 5% relative
+# global norm and cosine >= 0.999
+FWD_ATOL = 3e-2
+GRAD_REL = 5e-2
+GRAD_COS = 0.999
+
+
+def _crystal(rng, n):
+    return Crystal(
+        lattice=np.eye(3) * 4.4 + rng.normal(0, .05, (3, 3)),
+        frac_coords=rng.random((n, 3)),
+        atomic_numbers=rng.integers(1, 60, n),
+        energy=float(rng.normal()),
+        forces=rng.normal(0, .1, (n, 3)),
+        stress=rng.normal(0, .1, (3, 3)),
+        magmoms=np.abs(rng.normal(0, 1, n)),
+    )
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(0)
+    cs = [_crystal(rng, n) for n in (5, 7, 4)]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(24, sum(g.num_bonds for g in gs) + 16,
+                           sum(g.num_angles for g in gs) + 16)
+    return batch_crystals(cs, gs, caps)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return chgnet_init(jax.random.PRNGKey(0), CHGNetConfig(),
+                       dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# policy resolution
+# ---------------------------------------------------------------------------
+
+def test_policy_resolution():
+    assert resolve_policy("mixed") is MIXED
+    assert resolve_policy(BF16) is BF16
+    assert MIXED.param == jnp.float32 and MIXED.compute == jnp.bfloat16
+    assert MIXED.accum == jnp.float32 and MIXED.output == jnp.float32
+    assert not MIXED.needs_master_weights and BF16.needs_master_weights
+    with pytest.raises(ValueError):
+        resolve_policy("fp8")
+    # "auto" loss scaling follows the compute dtype
+    auto = LossScaleConfig()
+    assert auto.resolved_kind("f32") == "none"
+    assert auto.resolved_kind("mixed") == "dynamic"
+    assert LossScaleConfig(kind="static").resolved_kind("f32") == "static"
+
+
+# ---------------------------------------------------------------------------
+# forward / gradient equivalence vs f32 per implementation tier
+# ---------------------------------------------------------------------------
+
+# (mlp_impl, agg_impl, conv_impl) — the §2/§3 matrix corners; pallas/fused
+# run in interpret mode (CI sets REPRO_KERNELS_INTERPRET=1; off-TPU the
+# ops wrappers interpret by default)
+TIERS = [
+    ("packed", "scatter", "unfused"),
+    ("ref", "sorted", "unfused"),
+    ("packed", "matmul", "unfused"),
+    ("pallas", "pallas", "unfused"),
+    ("packed", "scatter", "fused"),
+    ("packed", "pallas", "fused"),
+]
+
+
+@pytest.mark.parametrize("mlp_impl,agg_impl,conv_impl", TIERS)
+def test_forward_matches_f32(batch, params, mlp_impl, agg_impl, conv_impl):
+    cfg32 = CHGNetConfig(readout="direct", mlp_impl=mlp_impl,
+                         agg_impl=agg_impl, conv_impl=conv_impl)
+    want = chgnet_apply(params, cfg32, batch)
+    for precision in ("mixed", "bf16"):
+        got = chgnet_apply(params, cfg32.with_(precision=precision), batch)
+        for k in want:
+            assert got[k].dtype == jnp.float32, (k, precision)  # output_dtype
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(want[k]), atol=FWD_ATOL,
+                err_msg=f"{k} {precision} {mlp_impl}/{agg_impl}/{conv_impl}")
+
+
+# mlp_impl="pallas" has no VJP at ANY precision (seed-era limitation), so
+# the gradient sweep covers the differentiable tiers
+GRAD_TIERS = [t for t in TIERS if t[0] != "pallas"]
+
+
+@pytest.mark.parametrize("mlp_impl,agg_impl,conv_impl", GRAD_TIERS)
+def test_gradient_matches_f32(batch, params, mlp_impl, agg_impl, conv_impl):
+    cfg32 = CHGNetConfig(readout="direct", mlp_impl=mlp_impl,
+                         agg_impl=agg_impl, conv_impl=conv_impl)
+
+    def loss(p, cfg):
+        return chgnet_loss(chgnet_apply(p, cfg, batch), batch,
+                           LossWeights())[0]
+
+    g32 = jax.tree.leaves(jax.grad(lambda p: loss(p, cfg32))(params))
+    gmx = jax.tree.leaves(jax.grad(
+        lambda p: loss(p, cfg32.with_(precision="mixed")))(params))
+    # mixed grads are master-shaped: f32, same structure
+    assert all(g.dtype == jnp.float32 for g in gmx)
+    n32 = jnp.sqrt(sum(jnp.sum(g ** 2) for g in g32))
+    nmx = jnp.sqrt(sum(jnp.sum(g ** 2) for g in gmx))
+    diff = jnp.sqrt(sum(jnp.sum((a - b) ** 2) for a, b in zip(g32, gmx)))
+    cos = sum(jnp.sum(a * b) for a, b in zip(g32, gmx)) / (n32 * nmx)
+    assert float(diff / n32) < GRAD_REL, float(diff / n32)
+    assert float(cos) > GRAD_COS, float(cos)
+
+
+# ---------------------------------------------------------------------------
+# op level: kernels accept bf16 VMEM operands, accumulate f32
+# ---------------------------------------------------------------------------
+
+def test_fused_segment_sum_bf16_operands():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(2)
+    ids = np.sort(rng.integers(0, 12, 90)).astype(np.int32)
+    seg = np.zeros(100, np.int32)
+    seg[:90] = ids
+    offs = np.searchsorted(ids, np.arange(13)).astype(np.int32)
+    vals32 = jnp.asarray(rng.normal(0, 1, (100, 64)), jnp.float32)
+    vals16 = vals32.astype(jnp.bfloat16)
+    out = ops.fused_segment_sum(vals16, jnp.asarray(seg),
+                                jnp.asarray(offs), 12)
+    assert out.dtype == jnp.bfloat16  # operand dtype round-trips
+    want = ops.fused_segment_sum(vals16.astype(jnp.float32),
+                                 jnp.asarray(seg), jnp.asarray(offs), 12)
+    # f32 accumulation of the SAME bf16 payloads: only the final output
+    # cast separates the two
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=1e-2, atol=1e-2)
+
+
+def test_fused_gated_mlp_bf16_operands():
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 1, (40, 192)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(0, .1, (192, 128)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(0, .1, (128,)), jnp.bfloat16)
+    s = jnp.asarray(rng.uniform(.5, 1.5, (128,)), jnp.float32)
+    o = jnp.asarray(rng.normal(0, .1, (128,)), jnp.float32)
+    out = ops.fused_gated_mlp_packed(x, w, b, s, o)
+    assert out.dtype == jnp.bfloat16
+    want = ref.gated_mlp_packed_ref(x, w, b, s, o)  # same f32-accum rules
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# loss scaler: unit state machine + in-step skip behavior
+# ---------------------------------------------------------------------------
+
+def test_dynamic_scaler_halves_and_grows():
+    cfg = LossScaleConfig(kind="dynamic", init_scale=1024.0,
+                          growth_interval=2, min_scale=1.0,
+                          max_scale=4096.0)
+    s = loss_scale_init(cfg)
+    # non-finite grads: halve, reset the good-step counter
+    s = loss_scale_update(s, jnp.asarray(False), cfg, "dynamic")
+    assert float(s["scale"]) == 512.0 and int(s["good_steps"]) == 0
+    # growth_interval consecutive finite steps: double, counter resets
+    s = loss_scale_update(s, jnp.asarray(True), cfg, "dynamic")
+    assert float(s["scale"]) == 512.0 and int(s["good_steps"]) == 1
+    s = loss_scale_update(s, jnp.asarray(True), cfg, "dynamic")
+    assert float(s["scale"]) == 1024.0 and int(s["good_steps"]) == 0
+    # clamps
+    s = {"scale": jnp.asarray(1.5, jnp.float32),
+         "good_steps": jnp.zeros((), jnp.int32)}
+    s = loss_scale_update(s, jnp.asarray(False), cfg, "dynamic")
+    assert float(s["scale"]) == 1.0  # min_scale
+    s = {"scale": jnp.asarray(4096.0, jnp.float32),
+         "good_steps": jnp.asarray(1, jnp.int32)}
+    s = loss_scale_update(s, jnp.asarray(True), cfg, "dynamic")
+    assert float(s["scale"]) == 4096.0  # max_scale
+    # static: scale never moves
+    st = loss_scale_init(cfg)
+    assert float(loss_scale_update(st, jnp.asarray(False), cfg,
+                                   "static")["scale"]) == 1024.0
+
+
+def test_train_step_skips_update_on_nonfinite_grads(batch):
+    from repro.train import TrainConfig, Trainer
+
+    cfg = CHGNetConfig(readout="direct", precision="mixed")
+    tcfg = TrainConfig(global_batch=4, total_steps=10,
+                       loss_scale=LossScaleConfig(kind="dynamic",
+                                                  init_scale=256.0,
+                                                  growth_interval=2))
+    tr = Trainer(cfg, tcfg)
+    assert "loss_scale" in tr.opt_state
+    bad = dataclasses.replace(
+        batch, energy=batch.energy.at[0].set(jnp.inf))
+    p2, o2, m = tr._train_step(tr.params, tr.opt_state, bad,
+                               jnp.asarray(0))
+    # skipped: params and Adam count untouched, scale halved
+    assert float(m["grads_finite"]) == 0.0
+    assert float(o2["loss_scale"]["scale"]) == 128.0
+    assert int(o2["count"]) == 0
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(tr.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # clean batch: update applies, counter advances, scale grows after
+    # growth_interval finite steps
+    p3, o3, m3 = tr._train_step(tr.params, o2, batch, jnp.asarray(0))
+    assert float(m3["grads_finite"]) == 1.0 and int(o3["count"]) == 1
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(p3), jax.tree.leaves(tr.params)))
+    assert changed
+    _, o4, m4 = tr._train_step(p3, o3, batch, jnp.asarray(1))
+    assert float(o4["loss_scale"]["scale"]) == 256.0  # 128 * 2
+
+
+def test_bf16_policy_keeps_f32_master_weights(batch):
+    from repro.train import TrainConfig, Trainer
+
+    tr = Trainer(CHGNetConfig(readout="direct", precision="bf16"),
+                 TrainConfig(global_batch=4, total_steps=10))
+    assert "master" in tr.opt_state
+    # params stored bf16 — except rbf_freqs, which feed the accum-pinned
+    # basis and are stored f32 under every policy (DESIGN.md §4)
+    assert tr.params["rbf_freqs"].dtype == jnp.float32
+    assert all(p.dtype == jnp.bfloat16
+               for path, p in
+               jax.tree_util.tree_flatten_with_path(tr.params)[0]
+               if jnp.issubdtype(p.dtype, jnp.inexact)
+               and "rbf_freqs" not in jax.tree_util.keystr(path))
+    assert all(m.dtype == jnp.float32
+               for m in jax.tree.leaves(tr.opt_state["master"])
+               if jnp.issubdtype(m.dtype, jnp.inexact))
+    p2, o2, _ = tr._train_step(tr.params, tr.opt_state, batch,
+                               jnp.asarray(0))
+    # live params remain the bf16 view of the stepped f32 master
+    lead = jax.tree.leaves(p2)[0]
+    assert lead.dtype == jnp.bfloat16
+    master_lead = jax.tree.leaves(o2["master"])[0]
+    np.testing.assert_array_equal(
+        np.asarray(lead), np.asarray(master_lead.astype(jnp.bfloat16)))
+
+
+# ---------------------------------------------------------------------------
+# training smoke: loss descends under precision="mixed"
+# ---------------------------------------------------------------------------
+
+def test_mixed_training_loss_descends():
+    from repro.batching import capacity_for
+    from repro.data import BatchIterator, SyntheticConfig, make_dataset
+    from repro.train import TrainConfig, Trainer
+    from repro.train.trainer import make_chgnet_step_fns
+
+    ds = make_dataset(SyntheticConfig(num_crystals=32, max_atoms=12,
+                                      seed=0))
+    caps = capacity_for(ds, 8)
+    cfg = CHGNetConfig(readout="direct", precision="mixed")
+    tcfg = TrainConfig(global_batch=8, total_steps=300, lr_k=1,
+                       warmup_steps=5)
+    tr = Trainer(cfg, tcfg)
+    _, eval_step, _ = make_chgnet_step_fns(cfg, tcfg)
+    eval_batch = next(iter(BatchIterator(ds, 8, 1, caps, seed=99)))
+    before = float(eval_step(tr.params, eval_batch)["loss"])
+    hist = tr.train(itertools.islice(
+        itertools.cycle(iter(BatchIterator(ds, 8, 1, caps))), 40))
+    after = float(eval_step(tr.params, eval_batch)["loss"])
+    assert after < before, (before, after)
+    assert all(h["grads_finite"] == 1.0 for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: non-f32 round trip, dtype verification, legacy migration
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    pytest.importorskip("msgpack")
+    from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+
+    tree = {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) * 0.5,
+            "b": jnp.ones((4,), jnp.float32),
+            "n": jnp.asarray(3, jnp.int32)}
+    save_checkpoint(str(tmp_path), 7, tree)
+    got, step, _ = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    for k in tree:
+        assert np.asarray(got[k]).dtype == np.asarray(tree[k]).dtype, k
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(tree[k]), err_msg=k)
+
+
+def test_checkpoint_dtype_mismatch_warns_and_casts(tmp_path):
+    pytest.importorskip("msgpack")
+    from repro.runtime.checkpoint import restore_checkpoint, save_checkpoint
+
+    stored = {"w": jnp.linspace(0, 1, 8, dtype=jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, stored)
+    template = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    with pytest.warns(UserWarning, match="dtype mismatch"):
+        got, _, _ = restore_checkpoint(str(tmp_path), template)
+    assert np.asarray(got["w"]).dtype == np.asarray(template["w"]).dtype
+    np.testing.assert_array_equal(
+        np.asarray(got["w"]),
+        np.asarray(stored["w"].astype(jnp.bfloat16)))
+
+
+def test_legacy_f32_checkpoint_restores_into_mixed_trainer(tmp_path):
+    """Acceptance (DESIGN.md §4): a checkpoint written by an f32 Trainer
+    (no loss_scale / master leaves) restores into a mixed-precision
+    Trainer via the strip-and-regrow migration."""
+    pytest.importorskip("msgpack")
+    from repro.train import TrainConfig, Trainer
+
+    tcfg = TrainConfig(global_batch=4, total_steps=10)
+    tr32 = Trainer(CHGNetConfig(readout="direct"), tcfg,
+                   ckpt_dir=str(tmp_path), seed=3)
+    assert "loss_scale" not in tr32.opt_state  # legacy layout
+    tr32.step = 4
+    tr32.save()
+
+    trmx = Trainer(CHGNetConfig(readout="direct", precision="mixed"),
+                   tcfg, ckpt_dir=str(tmp_path), seed=9)
+    assert trmx.maybe_restore()
+    assert trmx.step == 4
+    # params restored exactly (both policies store f32 params) …
+    for a, b in zip(jax.tree.leaves(trmx.params),
+                    jax.tree.leaves(tr32.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # … and the scaler state was re-grown at init_scale
+    assert "loss_scale" in trmx.opt_state
+    assert float(trmx.opt_state["loss_scale"]["scale"]) == \
+        tcfg.loss_scale.init_scale
+
+
+def test_bf16_trainer_checkpoint_roundtrip(tmp_path):
+    """Full non-f32 Trainer state (bf16 params + f32 master + scaler)
+    round-trips through runtime.checkpoint."""
+    pytest.importorskip("msgpack")
+    from repro.train import TrainConfig, Trainer
+
+    tcfg = TrainConfig(global_batch=4, total_steps=10)
+    tr = Trainer(CHGNetConfig(readout="direct", precision="bf16"), tcfg,
+                 ckpt_dir=str(tmp_path), seed=1)
+    tr.step = 2
+    tr.save()
+    tr2 = Trainer(CHGNetConfig(readout="direct", precision="bf16"), tcfg,
+                  ckpt_dir=str(tmp_path), seed=5)
+    assert tr2.maybe_restore() and tr2.step == 2
+    for a, b in zip(jax.tree.leaves(tr2.state()),
+                    jax.tree.leaves(tr.state())):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# serve: precision override
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_precision_override(params):
+    from repro.serve import ServeEngine
+
+    rng = np.random.default_rng(4)
+    cs = [_crystal(rng, n) for n in (5, 6)]
+    engine = ServeEngine.for_structures(
+        params, CHGNetConfig(readout="direct"), cs, precision="mixed")
+    assert engine.model_cfg.precision == "mixed"
+    out = engine.predict(cs)
+    engine32 = ServeEngine.for_structures(
+        params, CHGNetConfig(readout="direct"), cs)
+    want = engine32.predict(cs)
+    np.testing.assert_allclose(out["energy"], want["energy"],
+                               atol=FWD_ATOL)
+    for f_got, f_want in zip(out["forces"], want["forces"]):
+        assert f_got.dtype == np.float32  # output_dtype
+        np.testing.assert_allclose(f_got, f_want, atol=FWD_ATOL)
