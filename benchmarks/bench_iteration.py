@@ -55,17 +55,25 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
-def run(batch_size: int = 16, iters: int = 3):
+def _bench_batch(batch_size: int):
+    """The one synthetic workload every sweep in this file measures:
+    whole-dataset capacities (+8 headroom) so all combos see identical
+    padded shapes.  Returns (ds, caps, batch)."""
     ds = make_dataset(SyntheticConfig(num_crystals=batch_size, max_atoms=24,
                                       seed=0))
+    caps = BatchCapacities(
+        atoms=sum(c.num_atoms for c in ds.crystals) + 8,
+        bonds=sum(g.num_bonds for g in ds.graphs) + 8,
+        angles=sum(g.num_angles for g in ds.graphs) + 8)
+    return ds, caps, batch_crystals(ds.crystals, ds.graphs, caps)
+
+
+def run(batch_size: int = 16, iters: int = 3):
+    ds, caps_all, batch_all = _bench_batch(batch_size)
     crystals, graphs = ds.crystals, ds.graphs
     caps_one = BatchCapacities(
         atoms=64, bonds=max(g.num_bonds for g in graphs) + 8,
         angles=max(g.num_angles for g in graphs) + 8)
-    caps_all = BatchCapacities(
-        atoms=sum(c.num_atoms for c in crystals) + 8,
-        bonds=sum(g.num_bonds for g in graphs) + 8,
-        angles=sum(g.num_angles for g in graphs) + 8)
 
     w = LossWeights()
     results = {}
@@ -86,7 +94,7 @@ def run(batch_size: int = 16, iters: int = 3):
     results["ref_serial"] = _time(serial_step, iters=iters)
 
     # --- stage 2: + parallel batched basis ---------------------------------
-    batch = batch_crystals(crystals, graphs, caps_all)
+    batch = batch_all
     grad_all = jax.jit(jax.grad(
         lambda p, b: chgnet_loss_fn(p, cfg, b, w)[0]))
     results["par_basis"] = _time(grad_all, params, batch, iters=iters)
@@ -136,15 +144,8 @@ def run_conv_sweep(
     agg_impl barely moves the row — CI trims the near-duplicate, expensive
     interpret-mode rows to one).
     """
-    ds = make_dataset(SyntheticConfig(num_crystals=batch_size, max_atoms=24,
-                                      seed=0))
-    crystals, graphs = ds.crystals, ds.graphs
-    caps = BatchCapacities(
-        atoms=sum(c.num_atoms for c in crystals) + 8,
-        bonds=sum(g.num_bonds for g in graphs) + 8,
-        angles=sum(g.num_angles for g in graphs) + 8)
-    batch = batch_crystals(crystals, graphs, caps)
-    real_atoms = int(sum(c.num_atoms for c in crystals))
+    ds, caps, batch = _bench_batch(batch_size)
+    real_atoms = int(sum(c.num_atoms for c in ds.crystals))
 
     w = LossWeights()
     params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
@@ -178,6 +179,141 @@ def run_conv_sweep(
     return rows
 
 
+def run_bond_store_sweep(
+    batch_size: int = 16,
+    iters: int = 3,
+    bond_stores: tuple = ("directed", "undirected"),
+    conv_impls: tuple = ("unfused", "fused"),
+    agg_impl: str = "scatter",
+    check: bool = True,
+):
+    """bond_store x conv_impl sweep of one train step at FIXED capacities.
+
+    The DESIGN.md §5 claim as a tracked trajectory: per combo, step wall
+    time, atoms/s, compiled peak temp memory, and the bond-level tensor
+    accounting — ``eu_ratio`` (real undirected / real directed bonds; 0.5
+    for pair-symmetric graphs) and ``bond_level_bytes`` (the f32 bytes of
+    the per-bond basis + envelope tensors at that store's granularity:
+    rows x (num_rbf + 2*dim) x 4).  Acceptance bars (enforced in
+    interpret mode / CPU too — everything here is f32, no emulation
+    caveat): every "undirected" row must undercut its "directed"
+    counterpart's peak temp memory, and the bond-level bytes reduction
+    must be >= 25%.  atoms/s is recorded for the no-regression check
+    (reported, not enforced: CI wall clock is too noisy to gate on).
+    """
+    ds, caps, batch = _bench_batch(batch_size)
+    real_atoms = int(sum(c.num_atoms for c in ds.crystals))
+    real_bonds = int(sum(g.num_bonds for g in ds.graphs))
+    real_und = int(sum(g.num_undirected for g in ds.graphs))
+
+    w = LossWeights()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    rows = []
+    for store in bond_stores:
+        for conv in conv_impls:
+            cfg = CHGNetConfig(readout="direct", bond_store=store,
+                               conv_impl=conv, agg_impl=agg_impl)
+            # bond-level tensors at this store's granularity: rbf basis
+            # (num_rbf lanes) + the e^a/e^b envelope tables (dim each)
+            basis_rows = caps.und_cap if store == "undirected" \
+                else caps.bonds
+            bond_bytes = basis_rows * (cfg.num_rbf + 2 * cfg.dim) * 4
+            grad_fn = jax.jit(jax.grad(
+                lambda p, b, cfg=cfg: chgnet_loss_fn(p, cfg, b, w)[0]))
+            compiled = grad_fn.lower(params, batch).compile()
+            mem = compiled.memory_analysis()
+            step_s = _time(grad_fn, params, batch, iters=iters)
+            rows.append({
+                "name": f"iter_store_{store}_conv_{conv}",
+                "bond_store": store,
+                "conv_impl": conv,
+                "agg_impl": agg_impl,
+                "step_us": step_s * 1e6,
+                "atoms_per_s": real_atoms / step_s,
+                "peak_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "bond_level_bytes": bond_bytes,
+                "eu_ratio": real_und / real_bonds,
+                "note": (f"B={batch_size} atoms={real_atoms} "
+                         f"bonds={real_bonds} und={real_und} "
+                         f"caps=({caps.atoms},{caps.bonds},{caps.angles},"
+                         f"und={caps.und_cap})"),
+            })
+    if check:
+        _check_bond_store_bar(rows)
+    return rows
+
+
+def _check_bond_store_bar(rows):
+    """DESIGN.md §5 bars, enforced so a regression FAILS the CI bench step:
+    undirected must show (a) strictly lower compiled peak temp memory than
+    directed per conv_impl and (b) >= 25% lower bond-level tensor bytes."""
+    by = {(r["bond_store"], r["conv_impl"]): r for r in rows}
+    for (store, conv), r in by.items():
+        if store != "undirected":
+            continue
+        d = by.get(("directed", conv))
+        if d is None:
+            continue
+        db, ub = d["bond_level_bytes"], r["bond_level_bytes"]
+        if ub > 0.75 * db:
+            raise RuntimeError(
+                f"undirected bond-level tensor bytes not >=25% below "
+                f"directed: {ub:,} vs {db:,} (conv_impl={conv!r}, "
+                f"Eu/E={r['eu_ratio']:.3f}) — DESIGN.md §5")
+        peak, d_peak = r["peak_temp_bytes"], d["peak_temp_bytes"]
+        if peak is None or d_peak is None:
+            print(f"WARNING: no memory_analysis on this backend "
+                  f"(conv={conv}); §5 memory bar not checked")
+            continue
+        if peak >= d_peak:
+            raise RuntimeError(
+                f"bond_store='undirected' peak temp memory not below "
+                f"directed: {peak:,} >= {d_peak:,} bytes "
+                f"(conv_impl={conv!r}) — DESIGN.md §5 requires strictly "
+                f"lower")
+        slow = r["atoms_per_s"] < 0.9 * d["atoms_per_s"]
+        print(f"bond-store bar OK (conv={conv}): peak {peak:,} < "
+              f"{d_peak:,}; bond bytes {ub:,} vs {db:,} "
+              f"(Eu/E={r['eu_ratio']:.3f})"
+              + (f"; NOTE atoms/s regressed: {r['atoms_per_s']:.0f} vs "
+                 f"{d['atoms_per_s']:.0f} (interpret-mode wall clock is "
+                 f"not the §5 claim)" if slow else ""))
+
+
+def run_donation_probe(batch_size: int = 16):
+    """Compiled peak-memory delta from donating params/opt_state into the
+    train step (the compile-cache step builders donate by default; this
+    probe compiles the same step WITHOUT donation to track the delta).
+
+    Reports per variant the compiled argument/output/temp/alias bytes;
+    ``donation_saved_bytes`` is the aliased-buffer total XLA can reuse
+    in place (0 without donation).
+    """
+    from repro.optim.adam import adam_init
+    from repro.train.trainer import TrainConfig, make_chgnet_step_fns
+
+    _, _, batch = _bench_batch(batch_size)
+    cfg = CHGNetConfig(readout="direct")
+    tcfg = TrainConfig(global_batch=batch_size)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    opt = adam_init(params)
+
+    rows = []
+    for name, donate in (("donated", True), ("undonated", False)):
+        fn, _, _ = make_chgnet_step_fns(cfg, tcfg, donate=donate)
+        mem = fn.lower(params, opt, batch,
+                       jnp.asarray(0)).compile().memory_analysis()
+        alias = getattr(mem, "alias_size_in_bytes", None)
+        rows.append({
+            "name": f"iter_donation_{name}",
+            "peak_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "donation_saved_bytes": alias,
+        })
+    return rows
+
+
 def run_precision_sweep(
     batch_size: int = 16,
     iters: int = 3,
@@ -197,15 +333,8 @@ def run_precision_sweep(
     (trajectory tracking), it just reports instead of failing.  Wall time
     off-TPU measures the same emulation and is equally non-indicative.
     """
-    ds = make_dataset(SyntheticConfig(num_crystals=batch_size, max_atoms=24,
-                                      seed=0))
-    crystals, graphs = ds.crystals, ds.graphs
-    caps = BatchCapacities(
-        atoms=sum(c.num_atoms for c in crystals) + 8,
-        bonds=sum(g.num_bonds for g in graphs) + 8,
-        angles=sum(g.num_angles for g in graphs) + 8)
-    batch = batch_crystals(crystals, graphs, caps)
-    real_atoms = int(sum(c.num_atoms for c in crystals))
+    ds, caps, batch = _bench_batch(batch_size)
+    real_atoms = int(sum(c.num_atoms for c in ds.crystals))
 
     w = LossWeights()
     rows = []
@@ -298,6 +427,12 @@ if __name__ == "__main__":
                     help="comma-separated precision policies to sweep "
                          "(e.g. f32,mixed,bf16); atoms/s + compiled "
                          "peak memory per policy (DESIGN.md §4)")
+    ap.add_argument("--bond-store", default=None, metavar="STORES",
+                    help="comma-separated bond stores to sweep (e.g. "
+                         "directed,undirected); atoms/s + compiled peak "
+                         "memory + Eu/E bond-tensor bytes per store x "
+                         "conv_impl, with the undirected<directed bars "
+                         "enforced (DESIGN.md §5)")
     args = ap.parse_args()
     bs, iters = (8, 1) if args.quick else (16, 3)
     stage_rows = [] if args.sweep_only else run(batch_size=bs, iters=iters)
@@ -307,17 +442,29 @@ if __name__ == "__main__":
     precision_rows = [] if args.precision is None else run_precision_sweep(
         batch_size=bs, iters=iters,
         precisions=tuple(args.precision.split(",")))
+    store_rows = [] if args.bond_store is None else run_bond_store_sweep(
+        batch_size=bs, iters=iters,
+        bond_stores=tuple(args.bond_store.split(",")),
+        conv_impls=("unfused",) if args.quick else ("unfused", "fused"))
+    # the probe's two extra train-step compiles only pay off when the
+    # numbers land in the artifact
+    donation_rows = run_donation_probe(batch_size=bs) if args.json else []
     for r in stage_rows:
         print(",".join(map(str, r)))
-    for r in sweep_rows + precision_rows:
+    for r in sweep_rows + precision_rows + store_rows:
         print(f"{r['name']},{r['step_us']},peak_temp={r['peak_temp_bytes']}"
               f",atoms_per_s={r['atoms_per_s']:.0f}")
+    for r in donation_rows:
+        print(f"{r['name']},peak_temp={r['peak_temp_bytes']},"
+              f"donation_saved={r['donation_saved_bytes']}")
     if args.json:
         payload = {
             "stages": [{"name": n, "us_per_iter": t, "note": note}
                        for n, t, note in stage_rows],
             "sweep": sweep_rows,
             "precision": precision_rows,
+            "bond_store": store_rows,
+            "donation": donation_rows,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--precision", default="f32",
                     choices=["f32", "bf16", "mixed"],
                     help="end-to-end precision policy (DESIGN.md §4)")
+    ap.add_argument("--bond-store", default="directed",
+                    choices=["directed", "undirected"],
+                    help="undirected = half-graph bond store (DESIGN.md §5)")
     ap.add_argument("--ckpt", default="/tmp/chgnet_ckpt")
     ap.add_argument("--inject-fault", action="store_true")
     args = ap.parse_args()
@@ -35,7 +38,8 @@ def main():
     ds = make_dataset(SyntheticConfig(num_crystals=args.crystals, seed=0))
     caps = capacity_for(ds, args.batch)
     model_cfg = (C.FAST_FS_HEAD if args.readout == "direct"
-                 else C.FAST_WO_HEAD).with_(precision=args.precision)
+                 else C.FAST_WO_HEAD).with_(precision=args.precision,
+                                            bond_store=args.bond_store)
     train_cfg = TrainConfig(global_batch=args.batch,
                             total_steps=args.steps, loss=C.LOSS)
     print(f"init LR (Eq. 14): {train_cfg.init_lr:.2e}")

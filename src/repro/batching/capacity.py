@@ -29,11 +29,27 @@ def _align_up(raw: int, align: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class BatchCapacities:
-    """Static (atom, bond, angle) capacities of one padded batch."""
+    """Static (atom, bond, angle) capacities of one padded batch.
+
+    ``und_bonds`` caps the *undirected* half-graph store (DESIGN.md §5).
+    ``None`` (the default) derives ``ceil(bonds / 2)`` — exact for the
+    pair-symmetric graphs every uncapped producer emits (Eu == E/2).
+    Graphs whose symmetry was broken by ``max_nbr_per_atom`` capping fall
+    back to singleton undirected entries (Eu > E/2) and need an explicit
+    ``und_bonds`` override to pack.
+    """
 
     atoms: int
     bonds: int
     angles: int
+    und_bonds: int | None = None
+
+    @property
+    def und_cap(self) -> int:
+        """Undirected-bond capacity (``bonds``-derived unless overridden)."""
+        if self.und_bonds is not None:
+            return self.und_bonds
+        return self.bonds // 2 + self.bonds % 2
 
     def fits(self, n_atoms: int, n_bonds: int, n_angles: int) -> bool:
         return (
@@ -49,7 +65,9 @@ class BatchCapacities:
 
     def scaled(self, k: int) -> "BatchCapacities":
         """Capacities for ``k`` structures that each fit this bucket."""
-        return BatchCapacities(self.atoms * k, self.bonds * k, self.angles * k)
+        return BatchCapacities(
+            self.atoms * k, self.bonds * k, self.angles * k,
+            None if self.und_bonds is None else self.und_bonds * k)
 
 
 def capacity_from_stats(

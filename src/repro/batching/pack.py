@@ -21,7 +21,14 @@ packing canonicalizes the graph indices so that
     ``angle_offsets: (bond_cap+1,)`` delimit each segment's contiguous run
     (last entry == number of real entries, excluding the padded tail).
 
-``validate_layout`` checks the invariant cheaply (a few O(E) numpy
+Undirected half-graph store (DESIGN.md §5): alongside the directed
+arrays, packing emits a once-per-pair ``und_*`` store (capacity
+``caps.und_cap`` ≈ bonds/2) plus the mirror maps ``bond_pair`` /
+``bond_sign`` that materialize directed views (``vec_dir = sign ⊙
+vec_und[bond_pair]``).  The directed index arrays are untouched, so the
+§1 sorted-CSR invariant — and every consumer of it — is preserved.
+
+``validate_layout`` checks both invariants cheaply (a few O(E) numpy
 passes); packing validates by default so every producer — the training
 pipeline, the serve engine's Verlet rebuild path — emits certified-sorted
 batches that the fused aggregation kernels can consume without atomics.
@@ -33,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import CrystalGraphBatch
-from repro.core.neighbors import Crystal, GraphIndices
+from repro.core.neighbors import Crystal, GraphIndices, build_mirror_maps
 
 from .capacity import BatchCapacities
 
@@ -78,6 +85,23 @@ def batch_crystals(
             f"batch ({tot_atoms} atoms, {tot_bonds} bonds, {tot_angles} angles)"
             f" exceeds capacities {caps}"
         )
+    # undirected half-graph store (DESIGN.md §5): repair missing mirror
+    # maps (hand-built GraphIndices) once, up front
+    mirrors = [
+        (g.bond_pair, g.bond_sign, g.und_rep)
+        if g.bond_pair is not None
+        else build_mirror_maps(g.bond_center, g.bond_nbr, g.bond_image)
+        for g in graphs
+    ]
+    und_cap = caps.und_cap
+    tot_und = sum(int(m[2].shape[0]) for m in mirrors)
+    if tot_und > und_cap:
+        raise ValueError(
+            f"batch has {tot_und} undirected bonds, exceeding und_cap "
+            f"{und_cap}; pair symmetry was likely broken by "
+            f"max_nbr_per_atom capping — pass BatchCapacities(..., "
+            f"und_bonds=...) with explicit headroom"
+        )
 
     atom_z = np.zeros((caps.atoms,), np.int32)
     atom_mask = np.zeros((caps.atoms,), dtype)
@@ -94,6 +118,13 @@ def batch_crystals(
     angle_ij = np.zeros((caps.angles,), np.int32)
     angle_ik = np.zeros((caps.angles,), np.int32)
     angle_mask = np.zeros((caps.angles,), dtype)
+    bond_pair = np.zeros((caps.bonds,), np.int32)
+    bond_sign = np.zeros((caps.bonds,), dtype)
+    und_center = np.zeros((und_cap,), np.int32)
+    und_nbr = np.zeros((und_cap,), np.int32)
+    und_image = np.zeros((und_cap, 3), dtype)
+    und_crystal = np.zeros((und_cap,), np.int32)
+    und_mask = np.zeros((und_cap,), dtype)
     energy = np.zeros((b,), dtype)
     forces = np.zeros((caps.atoms, 3), dtype)
     stress = np.zeros((b, 3, 3), dtype)
@@ -103,8 +134,11 @@ def batch_crystals(
     a_off = 0
     b_off = 0
     g_off = 0
-    for ci, (c, g) in enumerate(zip(crystals, graphs)):
+    u_off = 0
+    for ci, (c, g, (g_pair, g_sign, g_rep)) in enumerate(
+            zip(crystals, graphs, mirrors)):
         na, nb, ng = c.num_atoms, g.num_bonds, g.num_angles
+        nu = int(g_rep.shape[0])
         atom_z[a_off:a_off + na] = c.atomic_numbers
         atom_mask[a_off:a_off + na] = 1.0
         atom_crystal[a_off:a_off + na] = ci
@@ -120,6 +154,13 @@ def batch_crystals(
         angle_ij[g_off:g_off + ng] = g.angle_ij + b_off
         angle_ik[g_off:g_off + ng] = g.angle_ik + b_off
         angle_mask[g_off:g_off + ng] = 1.0
+        bond_pair[b_off:b_off + nb] = g_pair + u_off
+        bond_sign[b_off:b_off + nb] = g_sign
+        und_center[u_off:u_off + nu] = g.bond_center[g_rep] + a_off
+        und_nbr[u_off:u_off + nu] = g.bond_nbr[g_rep] + a_off
+        und_image[u_off:u_off + nu] = g.bond_image[g_rep].astype(dtype)
+        und_crystal[u_off:u_off + nu] = ci
+        und_mask[u_off:u_off + nu] = 1.0
         if c.energy is not None:
             energy[ci] = c.energy
         if c.forces is not None:
@@ -131,6 +172,7 @@ def batch_crystals(
         a_off += na
         b_off += nb
         g_off += ng
+        u_off += nu
 
     # Canonicalize to the sorted-segment layout. ``build_graph`` already
     # emits per-crystal indices sorted by center, and crystals are packed
@@ -138,7 +180,8 @@ def batch_crystals(
     # is one O(E log E) pass that certifies the invariant regardless of
     # where the graphs came from.
     perm_b = np.argsort(bond_center[:b_off], kind="stable")
-    for arr in (bond_center, bond_nbr, bond_image, bond_crystal, bond_mask):
+    for arr in (bond_center, bond_nbr, bond_image, bond_crystal, bond_mask,
+                bond_pair, bond_sign):
         arr[:b_off] = arr[perm_b]
     # angles index into bonds: remap through the bond permutation first
     inv_b = np.empty_like(perm_b)
@@ -158,6 +201,9 @@ def batch_crystals(
         _validate_arrays(bond_mask, angle_mask, bond_center, angle_ij,
                          bond_offsets, angle_offsets,
                          atom_cap=caps.atoms, bond_cap=caps.bonds)
+        _validate_mirror(bond_mask, bond_center, bond_nbr, bond_image,
+                         bond_crystal, bond_pair, bond_sign, und_center,
+                         und_nbr, und_image, und_crystal, und_mask)
 
     return CrystalGraphBatch(
         atom_z=jnp.asarray(atom_z),
@@ -176,6 +222,13 @@ def batch_crystals(
         angle_mask=jnp.asarray(angle_mask),
         bond_offsets=jnp.asarray(bond_offsets),
         angle_offsets=jnp.asarray(angle_offsets),
+        bond_pair=jnp.asarray(bond_pair),
+        bond_sign=jnp.asarray(bond_sign),
+        und_center=jnp.asarray(und_center),
+        und_nbr=jnp.asarray(und_nbr),
+        und_image=jnp.asarray(und_image),
+        und_crystal=jnp.asarray(und_crystal),
+        und_mask=jnp.asarray(und_mask),
         energy=jnp.asarray(energy),
         forces=jnp.asarray(forces),
         stress=jnp.asarray(stress),
@@ -193,17 +246,27 @@ def validate_layout(batch: CrystalGraphBatch) -> CrystalGraphBatch:
     """Cheap host-side check of the sorted-segment layout invariant.
 
     Verifies (a few O(E) numpy passes): masks are contiguous real-prefix
-    indicators, real bonds/angles are sorted by their segment key, and the
-    CSR row pointers exactly describe the segment runs.  Pulls the
-    index/mask leaves to host, so use it on externally produced batches;
-    the pack path validates its numpy arrays pre-upload instead.  Returns
-    the batch for chaining; raises ValueError with the broken condition.
+    indicators, real bonds/angles are sorted by their segment key, the
+    CSR row pointers exactly describe the segment runs, and the mirror
+    maps of the undirected half-graph store (DESIGN.md §5) exactly
+    reconstruct every real directed bond.  Pulls the index/mask leaves to
+    host, so use it on externally produced batches; the pack path
+    validates its numpy arrays pre-upload instead.  Returns the batch for
+    chaining; raises ValueError with the broken condition.
     """
     _validate_arrays(
         np.asarray(batch.bond_mask), np.asarray(batch.angle_mask),
         np.asarray(batch.bond_center), np.asarray(batch.angle_ij),
         np.asarray(batch.bond_offsets), np.asarray(batch.angle_offsets),
         atom_cap=batch.atom_cap, bond_cap=batch.bond_cap,
+    )
+    _validate_mirror(
+        np.asarray(batch.bond_mask), np.asarray(batch.bond_center),
+        np.asarray(batch.bond_nbr), np.asarray(batch.bond_image),
+        np.asarray(batch.bond_crystal), np.asarray(batch.bond_pair),
+        np.asarray(batch.bond_sign), np.asarray(batch.und_center),
+        np.asarray(batch.und_nbr), np.asarray(batch.und_image),
+        np.asarray(batch.und_crystal), np.asarray(batch.und_mask),
     )
     return batch
 
@@ -231,6 +294,55 @@ def _validate_arrays(bond_mask, angle_mask, bond_center, angle_ij,
         expect = np.searchsorted(ids[:n_real], np.arange(offs.shape[0]))
         _check(np.array_equal(offs, expect),
                f"{name}_offsets disagree with sorted {name} segment ids")
+
+
+def _validate_mirror(bond_mask, bond_center, bond_nbr, bond_image,
+                     bond_crystal, bond_pair, bond_sign, und_center,
+                     und_nbr, und_image, und_crystal, und_mask) -> None:
+    """Mirror invariant of the undirected store (DESIGN.md §5).
+
+    For every real directed bond e with p = bond_pair[e]:
+      sign=+1  =>  (center, nbr, image)[e] == (und_center, und_nbr,
+                   und_image)[p]          (the stored orientation)
+      sign=-1  =>  (center, nbr, image)[e] == (und_nbr, und_center,
+                   -und_image)[p]         (the mirror)
+    plus: crystal ids agree, each real undirected row is referenced by
+    exactly one sign=+1 bond and at most one sign=-1 bond, und_mask is a
+    real-prefix indicator, and padded directed bonds carry (pair=0,
+    sign=0) so their expanded vectors vanish.
+    """
+    nb = int(bond_mask.sum())
+    nu = int(und_mask.sum())
+    _check(np.all(und_mask[:nu] == 1.0) and np.all(und_mask[nu:] == 0.0),
+           "und_mask is not a real-prefix indicator")
+    _check(np.all(bond_pair[nb:] == 0) and np.all(bond_sign[nb:] == 0.0),
+           "padded directed bonds must carry (pair=0, sign=0)")
+    p = bond_pair[:nb]
+    s = bond_sign[:nb]
+    _check(np.all((p >= 0) & (p < max(nu, 1))),
+           "bond_pair out of range of the real undirected prefix")
+    _check(np.all(np.abs(s) == 1.0), "real bond_sign must be ±1")
+    plus, minus = s > 0, s < 0
+    same = (
+        (bond_center[:nb] == und_center[p])
+        & (bond_nbr[:nb] == und_nbr[p])
+        & np.all(bond_image[:nb] == und_image[p], axis=-1)
+    )
+    flip = (
+        (bond_center[:nb] == und_nbr[p])
+        & (bond_nbr[:nb] == und_center[p])
+        & np.all(bond_image[:nb] == -und_image[p], axis=-1)
+    )
+    _check(np.all(same[plus]), "sign=+1 bonds disagree with their und row")
+    _check(np.all(flip[minus]), "sign=-1 bonds are not exact mirrors")
+    _check(np.all(bond_crystal[:nb] == und_crystal[p]),
+           "bond/und crystal ids disagree")
+    refs_plus = np.bincount(p[plus], minlength=nu)
+    refs_minus = np.bincount(p[minus], minlength=nu)
+    _check(np.all(refs_plus == 1),
+           "each und row needs exactly one sign=+1 reference")
+    _check(np.all(refs_minus <= 1),
+           "an und row has more than one sign=-1 reference")
 
 
 def atom_offsets(crystals: list[Crystal]) -> np.ndarray:

@@ -32,6 +32,15 @@ FAST_FUSED = FAST_FS_HEAD.with_(conv_impl="fused", agg_impl="pallas")
 FAST_MIXED = FAST_FS_HEAD.with_(precision="mixed")
 FAST_FUSED_MIXED = FAST_FUSED.with_(precision="mixed")
 
+# + undirected-bond redundancy bypass (DESIGN.md §5): bond geometry, the
+# smooth-RBF basis, the bond-embed GEMM, and the e^a/e^b envelopes run
+# once per pair (Eu = E/2); directed views via the batch mirror maps —
+# the paper's redundancy-bypass contribution applied to the whole bond
+# store, composing with the fused megakernels and mixed precision
+FAST_HALF = FAST_FS_HEAD.with_(bond_store="undirected")
+FAST_FUSED_HALF = FAST_FUSED.with_(bond_store="undirected")
+FAST_FUSED_HALF_MIXED = FAST_FUSED_MIXED.with_(bond_store="undirected")
+
 LOSS = LossWeights(energy=2.0, force=1.5, stress=0.1, magmom=0.1,
                    huber_delta=0.1)
 

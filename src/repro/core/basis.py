@@ -11,6 +11,10 @@ ones so benchmarks can measure each optimization separately:
   - ``compute_geometry``    : batched (Alg. 2) bond vectors / distances /
                               angle cosines from the padded graph, fully
                               differentiable w.r.t. positions and strain.
+  - ``compute_geometry_undirected``: the same geometry on the undirected
+                              half-graph store (DESIGN.md §5) — vectors
+                              computed once per pair, directed views via
+                              the ``bond_pair``/``bond_sign`` mirror maps.
 
 The Pallas-fused versions live in ``repro.kernels`` and are numerically
 checked against these in tests.
@@ -121,6 +125,40 @@ def fourier_basis(theta: jnp.ndarray, num_basis: int = 31) -> jnp.ndarray:
 # Batched geometry (paper Alg. 2): one fused computation for the whole batch
 # ---------------------------------------------------------------------------
 
+def _cart_positions(graph: CrystalGraphBatch, displacement, strain):
+    """Strained lattice + Cartesian positions shared by both bond stores."""
+    lattice = graph.lattice
+    if strain is not None:
+        eye = jnp.eye(3, dtype=lattice.dtype)
+        lattice = jnp.einsum("bij,bjk->bik", lattice, eye + strain)
+    # Cartesian positions: (atom_cap, 3) — one batched matmul (Alg. 2 l.12)
+    cart = jnp.einsum(
+        "ai,aij->aj", graph.frac_coords, lattice[graph.atom_crystal]
+    )
+    if displacement is not None:
+        cart = cart + displacement
+    return cart, lattice
+
+
+def _bond_vectors(cart, lattice, center, nbr, image, crystal):
+    """r_ij = r_j + image @ L - r_i and its length, for any bond store."""
+    shift = jnp.einsum("bi,bij->bj", image, lattice[crystal])
+    vec = cart[nbr] + shift - cart[center]
+    dist = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-16)
+    return vec, dist
+
+
+def _angle_geometry(graph: CrystalGraphBatch, vec, dist):
+    """Angle cosines between directed bonds ij / ik sharing a center."""
+    v_ij = vec[graph.angle_ij]
+    v_ik = vec[graph.angle_ik]
+    d_ij = dist[graph.angle_ij]
+    d_ik = dist[graph.angle_ik]
+    cos_t = jnp.sum(v_ij * v_ik, axis=-1) / (d_ij * d_ik + 1e-12)
+    cos_t = jnp.clip(cos_t, -1.0 + 1e-7, 1.0 - 1e-7)
+    return cos_t, jnp.arccos(cos_t)
+
+
 def compute_geometry(
     graph: CrystalGraphBatch,
     *,
@@ -136,31 +174,44 @@ def compute_geometry(
 
     Returns (bond_vec (Nb,3), bond_dist (Nb,), cos_theta (Na,), theta (Na,)).
     """
-    lattice = graph.lattice
-    if strain is not None:
-        eye = jnp.eye(3, dtype=lattice.dtype)
-        lattice = jnp.einsum("bij,bjk->bik", lattice, eye + strain)
-
-    # Cartesian positions: (atom_cap, 3) — one batched matmul (Alg. 2 l.12)
-    cart = jnp.einsum(
-        "ai,aij->aj", graph.frac_coords, lattice[graph.atom_crystal]
-    )
-    if displacement is not None:
-        cart = cart + displacement
-
+    cart, lattice = _cart_positions(graph, displacement, strain)
     # bond vector r_ij = r_j + image @ L - r_i  (Alg. 2 l.13-14, batched)
-    shift = jnp.einsum(
-        "bi,bij->bj", graph.bond_image, lattice[graph.bond_crystal]
+    vec, dist = _bond_vectors(
+        cart, lattice, graph.bond_center, graph.bond_nbr, graph.bond_image,
+        graph.bond_crystal,
     )
-    vec = cart[graph.bond_nbr] + shift - cart[graph.bond_center]
-    dist = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-16)
-
-    # angles between bond ij and bond ik (both indices into bonds)
-    v_ij = vec[graph.angle_ij]
-    v_ik = vec[graph.angle_ik]
-    d_ij = dist[graph.angle_ij]
-    d_ik = dist[graph.angle_ik]
-    cos_t = jnp.sum(v_ij * v_ik, axis=-1) / (d_ij * d_ik + 1e-12)
-    cos_t = jnp.clip(cos_t, -1.0 + 1e-7, 1.0 - 1e-7)
-    theta = jnp.arccos(cos_t)
+    cos_t, theta = _angle_geometry(graph, vec, dist)
     return vec, dist, cos_t, theta
+
+
+def compute_geometry_undirected(
+    graph: CrystalGraphBatch,
+    *,
+    displacement: jnp.ndarray | None = None,
+    strain: jnp.ndarray | None = None,
+):
+    """Geometry on the undirected half-graph store (DESIGN.md §5).
+
+    Bond vectors/distances are computed ONCE per undirected pair — halving
+    the dominant edge-level geometry work in the forward AND in every
+    derivative pass through it (forces/stress differentiate this) — and
+    directed views materialize through the mirror maps:
+
+        vec_dir  = bond_sign ⊙ vec_und[bond_pair]    (exact mirror)
+        dist_dir = dist_und[bond_pair]               (length is shared)
+
+    Padded directed bonds carry sign 0, so their expanded vectors vanish
+    like the directed store's padded slot-0 bonds.
+
+    Returns (vec_und (Nu,3), dist_und (Nu,), vec (Nb,3), dist (Nb,),
+    cos_theta (Na,), theta (Na,)).
+    """
+    cart, lattice = _cart_positions(graph, displacement, strain)
+    vec_und, dist_und = _bond_vectors(
+        cart, lattice, graph.und_center, graph.und_nbr, graph.und_image,
+        graph.und_crystal,
+    )
+    vec = graph.bond_sign[..., None] * vec_und[graph.bond_pair]
+    dist = dist_und[graph.bond_pair]
+    cos_t, theta = _angle_geometry(graph, vec, dist)
+    return vec_und, dist_und, vec, dist, cos_t, theta

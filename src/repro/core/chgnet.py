@@ -73,6 +73,14 @@ class CHGNetConfig:
     # conv call sites (angle_update and per-crystal sums still honor them).
     # See DESIGN.md §3.
     conv_impl: str = "unfused"   # "unfused" | "fused"
+    # "undirected": undirected-bond redundancy bypass (DESIGN.md §5) —
+    # geometry, the smooth-RBF basis, the packed bond-embed GEMM, and the
+    # e^a/e^b envelope tables all run at the undirected capacity Eu ≈ E/2;
+    # directed views materialize through the batch's bond_pair/bond_sign
+    # mirror maps (cheap gathers; inside the megakernels when conv_impl=
+    # "fused").  Composes with every other tier knob; "directed" keeps the
+    # reference twice-stored layout.
+    bond_store: str = "directed"  # "directed" | "undirected"
     envelope_impl: str = "factored"  # "factored" | "reference"
     # end-to-end precision policy (DESIGN.md §4), see class docstring
     precision: str = "f32"       # "f32" | "bf16" | "mixed"
@@ -135,19 +143,33 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
         if cfg.envelope_impl == "factored"
         else basis.envelope_reference
     )
-    vec, dist, _cos, theta = basis.compute_geometry(
-        graph, displacement=displacement, strain=strain
-    )
+    # bond_store="undirected" (DESIGN.md §5): geometry, RBF, and the bond
+    # embedding run ONCE per undirected pair (Eu ≈ E/2); only e^0 is
+    # expanded to the directed store (it seeds e, which bond_conv updates
+    # per directed bond) — e^a/e^b stay at Eu for the whole trunk.
+    if cfg.bond_store == "undirected":
+        _vec_u, dist_u, vec, dist, _cos, theta = \
+            basis.compute_geometry_undirected(
+                graph, displacement=displacement, strain=strain
+            )
+        rbf_dist = dist_u
+    elif cfg.bond_store == "directed":
+        vec, dist, _cos, theta = basis.compute_geometry(
+            graph, displacement=displacement, strain=strain
+        )
+        rbf_dist = dist
+    else:
+        raise ValueError(f"unknown bond store {cfg.bond_store!r}")
     if cfg.mlp_impl == "pallas":
         from repro.kernels import ops as kops
 
         rbf = kops.fused_rbf(
-            dist, params["rbf_freqs"], cfg.r_cut_atom, cfg.envelope_p
+            rbf_dist, params["rbf_freqs"], cfg.r_cut_atom, cfg.envelope_p
         )
         four = kops.fused_fourier(theta, cfg.num_fourier)
     else:
         rbf = basis.smooth_rbf(
-            dist, params["rbf_freqs"], cfg.r_cut_atom, cfg.envelope_p,
+            rbf_dist, params["rbf_freqs"], cfg.r_cut_atom, cfg.envelope_p,
             envelope=env,
         )
         four = basis.fourier_basis(theta, cfg.num_fourier)
@@ -160,14 +182,22 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
     rbf = policy.cast_compute(rbf)
     four = policy.cast_compute(four)
 
-    # Feature embedding (packed bond linear -> split into e0 / e_a / e_b)
-    packed = linear_apply(params["bond_embed"], rbf)  # (Nb, 3*dim)
+    # Feature embedding (packed bond linear -> split into e0 / e_a / e_b).
+    # Undirected store: the (rbf -> 3*dim) GEMM runs at Eu; e^a/e^b keep
+    # that granularity (the blocks never update them), e^0 expands once.
+    packed = linear_apply(params["bond_embed"], rbf)  # (Nb or Nu, 3*dim)
     e0, e_a, e_b = jnp.split(packed, 3, axis=-1)
     v = params["atom_embed"].astype(cd)[graph.atom_z] \
         * graph.atom_mask[..., None].astype(cd)
     a = linear_apply(params["angle_embed"], four) \
         * graph.angle_mask[..., None].astype(cd)
-    e = e0 * graph.bond_mask[..., None].astype(cd)
+    if cfg.bond_store == "undirected":
+        umask = graph.und_mask[..., None].astype(cd)
+        e_a = e_a * umask
+        e_b = e_b * umask
+        e = e0[graph.bond_pair] * graph.bond_mask[..., None].astype(cd)
+    else:
+        e = e0 * graph.bond_mask[..., None].astype(cd)
 
     for blk in params["blocks"]:
         v, e, a = interaction_block_apply(
@@ -176,6 +206,7 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
             mlp_impl=cfg.mlp_impl,
             agg_impl=cfg.agg_impl,
             conv_impl=cfg.conv_impl,
+            bond_store=cfg.bond_store,
         )
     # last block updates atoms only (matches CHGNet's final atom conv)
     from .interaction import atom_conv
@@ -183,6 +214,7 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
     v = atom_conv(
         params["final_block"], graph, v, e, e_a,
         mlp_impl=cfg.mlp_impl, agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
+        bond_store=cfg.bond_store,
     )
     return v, e, a, vec, dist
 

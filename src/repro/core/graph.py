@@ -43,6 +43,8 @@ if TYPE_CHECKING:  # host-side capacity policy, see repro.batching
         "crystal_mask", "bond_center", "bond_nbr", "bond_image",
         "bond_crystal", "bond_mask", "angle_ij", "angle_ik", "angle_mask",
         "bond_offsets", "angle_offsets",
+        "bond_pair", "bond_sign", "und_center", "und_nbr", "und_image",
+        "und_crystal", "und_mask",
         "energy", "forces", "stress", "magmoms", "n_atoms_per_crystal",
     ],
     meta_fields=[],
@@ -76,6 +78,18 @@ class CrystalGraphBatch:
     # every row.
     bond_offsets: jnp.ndarray   # (atom_cap + 1,) int32
     angle_offsets: jnp.ndarray  # (bond_cap + 1,) int32
+    # undirected half-graph store (DESIGN.md §5): each i-j pair is stored
+    # ONCE in the und_* arrays; directed views materialize through the
+    # mirror maps (vec_dir = bond_sign ⊙ vec_und[bond_pair]).  Padded
+    # directed bonds carry (pair=0, sign=0), so their expanded vectors
+    # vanish; padded und rows point at atom 0 like padded bonds.
+    bond_pair: jnp.ndarray      # (bond_cap,) int32 -> undirected index
+    bond_sign: jnp.ndarray      # (bond_cap,) f32 ±1 (0 on padding)
+    und_center: jnp.ndarray     # (und_cap,) int32 -> atom index
+    und_nbr: jnp.ndarray        # (und_cap,) int32 -> atom index
+    und_image: jnp.ndarray      # (und_cap, 3) f32 periodic image
+    und_crystal: jnp.ndarray    # (und_cap,) int32
+    und_mask: jnp.ndarray       # (und_cap,) f32
     # labels
     energy: jnp.ndarray         # (B,) f32 total energy (eV)
     forces: jnp.ndarray         # (atom_cap, 3) f32
@@ -98,6 +112,10 @@ class CrystalGraphBatch:
     @property
     def angle_cap(self) -> int:
         return self.angle_ij.shape[0]
+
+    @property
+    def und_cap(self) -> int:
+        return self.und_center.shape[0]
 
 
 def batch_input_specs(
@@ -123,6 +141,13 @@ def batch_input_specs(
         angle_mask=s((caps.angles,), f),
         bond_offsets=s((caps.atoms + 1,), i),
         angle_offsets=s((caps.bonds + 1,), i),
+        bond_pair=s((caps.bonds,), i),
+        bond_sign=s((caps.bonds,), f),
+        und_center=s((caps.und_cap,), i),
+        und_nbr=s((caps.und_cap,), i),
+        und_image=s((caps.und_cap, 3), f),
+        und_crystal=s((caps.und_cap,), i),
+        und_mask=s((caps.und_cap,), f),
         energy=s((batch_size,), f),
         forces=s((caps.atoms, 3), f),
         stress=s((batch_size, 3, 3), f),

@@ -27,6 +27,11 @@ On top of the per-call-site impl choices, ``conv_impl="fused"`` (DESIGN.md
 path of atom_conv / bond_conv with one Pallas megakernel over the sorted
 CSR rows (requires DESIGN.md §1), so the (E, 3D)/(A_ang, 4D) concats and
 (E, D) messages never reach HBM and are never saved for the backward.
+
+``bond_store="undirected"`` (DESIGN.md §5) hands the convs e^a/e^b at the
+undirected capacity Eu ~ E/2; they are expanded through the batch's
+``bond_pair`` mirror map — an explicit gather in the unfused path, the
+mirror-indirected operand class inside the megakernels when fused.
 """
 from __future__ import annotations
 
@@ -255,13 +260,19 @@ def interaction_block_init(key, dim=64, dtype=jnp.float32):
 
 
 def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
-              conv_impl: str = "unfused"):
+              conv_impl: str = "unfused", bond_store: str = "directed"):
     """Eq. 4: v_i <- v_i + L_v[ sum_j e^a_ij * phi(v_i, v_j, e_ij) ].
 
     ``conv_impl="fused"`` runs the whole message path (gather -> GatedMLP
     -> envelope -> reduce) as one Pallas megakernel over the sorted CSR
     rows (DESIGN.md §3; requires §1; ``mlp_impl``/``agg_impl`` are
     subsumed).  ``"unfused"`` keeps the composable impl matrix below.
+
+    ``bond_store="undirected"`` (DESIGN.md §5): ``e_a`` lives at the
+    undirected capacity and is gathered through ``graph.bond_pair`` — in
+    the unfused path explicitly, in the fused path inside the megakernel
+    (the mirror-indirected operand class).  The envelope is symmetric
+    (e^a_ij == e^a_ji, a function of |r_ij| only), so no sign is applied.
     """
     if conv_impl == "fused":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
@@ -272,12 +283,14 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
         agg = kops.fused_atom_conv(
             v, e, e_a, mlp["w"], mlp["b"], mlp["ln_scale"], mlp["ln_bias"],
             graph.bond_center, graph.bond_nbr, graph.bond_offsets,
+            pair=graph.bond_pair if bond_store == "undirected" else None,
         )
     elif conv_impl == "unfused":
         f_v = jnp.concatenate(
             [v[graph.bond_center], v[graph.bond_nbr], e], axis=-1
         )
-        msg = gated_mlp_apply(p["atom_mlp"], f_v, mlp_impl) * e_a
+        env = e_a[graph.bond_pair] if bond_store == "undirected" else e_a
+        msg = gated_mlp_apply(p["atom_mlp"], f_v, mlp_impl) * env
         agg = segment_aggregate(
             msg, graph.bond_center, graph.atom_cap, graph.bond_mask, agg_impl,
             offsets=graph.bond_offsets,
@@ -289,11 +302,17 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
 
 
 def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
-              agg_impl, conv_impl: str = "unfused"):
+              agg_impl, conv_impl: str = "unfused",
+              bond_store: str = "directed"):
     """Eq. 5: e_ij <- e_ij + L_e[ sum_k e^b_ij * e^b_ik * phi(f_e) ].
 
     ``v_in`` is v^{t+1} in the reference variant, v^t in the fast variant.
     ``conv_impl`` as in ``atom_conv`` (DESIGN.md §3).
+
+    ``bond_store="undirected"`` (DESIGN.md §5): ``e_b`` lives at the
+    undirected capacity; both envelope factors gather through
+    ``bond_pair[angle_*]`` (explicitly here, inside the megakernel when
+    fused).  Like e^a, e^b is symmetric, so no sign is applied.
     """
     center = graph.bond_center[graph.angle_ij]
     if conv_impl == "fused":
@@ -304,13 +323,18 @@ def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
             v_in, e, a, e_b, mlp["w"], mlp["b"], mlp["ln_scale"],
             mlp["ln_bias"], graph.angle_ij, graph.angle_ik, center,
             graph.angle_offsets,
+            pair=graph.bond_pair if bond_store == "undirected" else None,
         )
     elif conv_impl == "unfused":
         f_e = jnp.concatenate(
             [v_in[center], e[graph.angle_ij], e[graph.angle_ik], a], axis=-1
         )
         msg = gated_mlp_apply(p["bond_mlp"], f_e, mlp_impl)
-        msg = msg * e_b[graph.angle_ij] * e_b[graph.angle_ik]
+        if bond_store == "undirected":
+            msg = msg * e_b[graph.bond_pair[graph.angle_ij]] \
+                * e_b[graph.bond_pair[graph.angle_ik]]
+        else:
+            msg = msg * e_b[graph.angle_ij] * e_b[graph.angle_ik]
         agg = segment_aggregate(
             msg, graph.angle_ij, graph.bond_cap, graph.angle_mask, agg_impl,
             offsets=graph.angle_offsets,
@@ -347,15 +371,17 @@ def interaction_block_apply(
     mlp_impl: str = "packed",
     agg_impl: str = "scatter",
     conv_impl: str = "unfused",
+    bond_store: str = "directed",
     update_angles: bool = True,
 ):
     """One interaction block IB^t (paper Eq. 3), either variant."""
     v_new = atom_conv(p, graph, v, e, e_a, mlp_impl=mlp_impl,
-                      agg_impl=agg_impl, conv_impl=conv_impl)
+                      agg_impl=agg_impl, conv_impl=conv_impl,
+                      bond_store=bond_store)
     if variant == "reference":
         e_new = bond_conv(
             p, graph, v_new, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
-            conv_impl=conv_impl,
+            conv_impl=conv_impl, bond_store=bond_store,
         )
         if update_angles:
             a_new = angle_update(p, graph, v_new, e_new, a, mlp_impl=mlp_impl)
@@ -365,7 +391,7 @@ def interaction_block_apply(
         # Dependency elimination (Eq. 11): all three read layer-t features.
         e_new = bond_conv(
             p, graph, v, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
-            conv_impl=conv_impl,
+            conv_impl=conv_impl, bond_store=bond_store,
         )
         if update_angles:
             a_new = angle_update(p, graph, v, e, a, mlp_impl=mlp_impl)

@@ -48,6 +48,17 @@ class GraphIndices:
     ``angle_ij`` is non-decreasing — ``_graph_from_pairs`` canonicalizes
     every producer (``build_graph`` and the Verlet ``update`` refilter), so
     batch packing only has to merge already-sorted runs.
+
+    Mirror maps (DESIGN.md §5): every directed bond (i, j, n) has a mirror
+    (j, i, -n); ``bond_pair`` maps each directed bond to its *undirected*
+    id, ``bond_sign`` is +1 when the directed bond shares the stored
+    orientation of its undirected representative (-1 for the mirror), and
+    ``und_rep`` lists, per undirected id, the directed index whose
+    (center, nbr, image) triple IS the stored orientation.  Graphs whose
+    pair symmetry was broken (``max_nbr_per_atom`` capping) fall back to
+    singleton undirected entries, so the maps are total either way.
+    ``_graph_from_pairs`` always populates them; hand-built instances may
+    leave them ``None`` and let packing repair via ``build_mirror_maps``.
     """
 
     bond_center: np.ndarray  # (Nb,) int32 atom index i
@@ -56,6 +67,10 @@ class GraphIndices:
     # bond-graph edges: ordered pairs of *short* bonds sharing a center
     angle_ij: np.ndarray     # (Na,) int32 index into bonds (the updated bond)
     angle_ik: np.ndarray     # (Na,) int32 index into bonds (the partner bond)
+    # undirected mirror maps (DESIGN.md §5)
+    bond_pair: np.ndarray | None = None  # (Nb,) int32 -> undirected id
+    bond_sign: np.ndarray | None = None  # (Nb,) f32 +1 rep orientation, -1 mirror
+    und_rep: np.ndarray | None = None    # (Nu,) int32 -> representative bond
 
     @property
     def num_bonds(self) -> int:
@@ -64,6 +79,12 @@ class GraphIndices:
     @property
     def num_angles(self) -> int:
         return int(self.angle_ij.shape[0])
+
+    @property
+    def num_undirected(self) -> int:
+        if self.und_rep is None:
+            raise ValueError("mirror maps not built; see build_mirror_maps")
+        return int(self.und_rep.shape[0])
 
     def feature_count(self, num_atoms: int) -> int:
         """Paper's load metric: atoms + bonds + angles (Fig. 9)."""
@@ -139,6 +160,93 @@ def _build_angles(
     return angle_ij, angle_ik
 
 
+def _lex_less(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Row-wise lexicographic a < b for integer (E, K) arrays."""
+    res = np.zeros(a.shape[0], dtype=bool)
+    decided = np.zeros(a.shape[0], dtype=bool)
+    for k in range(a.shape[1]):
+        lt = ~decided & (a[:, k] < b[:, k])
+        gt = ~decided & (a[:, k] > b[:, k])
+        res |= lt
+        decided |= lt | gt
+    return res
+
+
+def build_mirror_maps(
+    bond_center: np.ndarray,
+    bond_nbr: np.ndarray,
+    bond_image: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Undirected mirror maps for a directed bond list (DESIGN.md §5).
+
+    A directed bond is the tuple (i, j, n); its mirror is (j, i, -n).  The
+    *canonical* form of the pair is the lexicographically smaller of the
+    two tuples — i < j ordering with image canonicalization; self-image
+    i-j-i bonds (i == j, n != 0) canonicalize on the image alone.  Bonds
+    sharing a canonical form are matched into one undirected entry whose
+    stored orientation is the canonically-oriented member's; an unmatched
+    bond (pair symmetry broken by ``max_nbr_per_atom`` capping) falls back
+    to a singleton entry stored in its own orientation, so the maps are
+    total and exact for ANY directed bond list.
+
+    Returns ``(bond_pair, bond_sign, und_rep)``:
+      - ``bond_pair (E,) int32``: directed -> undirected id,
+      - ``bond_sign (E,) f32``: +1 if the directed bond equals its
+        representative's orientation, -1 if it is the mirror,
+      - ``und_rep (Nu,) int32``: undirected id -> representative directed
+        index (strictly increasing — undirected entries are numbered by
+        first appearance of their representative, preserving the sorted
+        DESIGN.md §1 locality).
+
+    Invariants (checked by ``repro.batching.validate_layout``): every
+    undirected id has exactly one sign=+1 reference and at most one
+    sign=-1 reference, and ``bond_sign[und_rep] == +1``.
+    """
+    e_cnt = int(bond_center.shape[0])
+    if e_cnt == 0:
+        z = np.zeros((0,), np.int32)
+        return z, np.zeros((0,), np.float32), z.copy()
+    img = bond_image.astype(np.int64)
+    fwd = np.column_stack(
+        [bond_center.astype(np.int64), bond_nbr.astype(np.int64), img])
+    rev = np.column_stack(
+        [bond_nbr.astype(np.int64), bond_center.astype(np.int64), -img])
+    # fwd == rev would need i == j and n == -n, i.e. the excluded zero-
+    # distance self pair — so exactly one direction is canonical
+    is_canon = _lex_less(fwd, rev)
+    key = np.where(is_canon[:, None], fwd, rev)
+    order = np.lexsort(key.T[::-1])
+    ks = key[order]
+    boundary = np.empty(e_cnt, dtype=bool)
+    boundary[0] = True
+    boundary[1:] = np.any(ks[1:] != ks[:-1], axis=1)
+    gid = np.empty(e_cnt, np.int64)
+    gid[order] = np.cumsum(boundary) - 1
+    n_groups = int(gid[order[-1]]) + 1
+    # representative: the canonically-oriented member when present (the
+    # symmetric case), else the lone survivor (capped fallback)
+    rep = np.full(n_groups, e_cnt, np.int64)
+    canon_idx = np.nonzero(is_canon)[0]
+    np.minimum.at(rep, gid[canon_idx], canon_idx)
+    first = np.full(n_groups, e_cnt, np.int64)
+    np.minimum.at(first, gid, np.arange(e_cnt))
+    rep = np.where(rep == e_cnt, first, rep)
+    # number undirected entries by representative position (ascending)
+    und_order = np.argsort(rep, kind="stable")
+    rank = np.empty(n_groups, np.int64)
+    rank[und_order] = np.arange(n_groups)
+    bond_pair = rank[gid].astype(np.int32)
+    und_rep = rep[und_order].astype(np.int32)
+    rep_of = rep[gid]
+    same = (
+        (bond_center == bond_center[rep_of])
+        & (bond_nbr == bond_nbr[rep_of])
+        & np.all(bond_image == bond_image[rep_of], axis=1)
+    )
+    bond_sign = np.where(same, 1.0, -1.0).astype(np.float32)
+    return bond_pair, bond_sign, und_rep
+
+
 def _graph_from_pairs(
     ci: np.ndarray,
     nj: np.ndarray,
@@ -181,12 +289,22 @@ def _graph_from_pairs(
     # assert cheaply rather than re-sorting.
     assert angle_ij.size == 0 or np.all(np.diff(angle_ij) >= 0)
 
+    # mirror maps (DESIGN.md §5): recomputed from the filtered pairs, so
+    # every producer — build_graph AND the Verlet refilter, whose boolean
+    # keep-masks preserve pair symmetry exactly (|-v| == |v| bitwise) —
+    # emits canonicalized maps
+    bond_pair, bond_sign, und_rep = build_mirror_maps(
+        bond_center, bond_nbr, bond_image)
+
     return GraphIndices(
         bond_center=bond_center,
         bond_nbr=bond_nbr,
         bond_image=bond_image,
         angle_ij=angle_ij,
         angle_ik=angle_ik,
+        bond_pair=bond_pair,
+        bond_sign=bond_sign,
+        und_rep=und_rep,
     )
 
 

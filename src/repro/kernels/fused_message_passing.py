@@ -23,6 +23,12 @@ intermediates ever exists outside VMEM:
     (``concat(xs) @ W == sum_k xs[k] @ W_k``), so even in VMEM the packed
     concat row is never built; the packed ``[Wc ‖ Wg]`` GEMM halves share
     one masked-LayerNorm + sigmoid epilogue (paper Fig. 3);
+  - with the undirected bond store (``mirror=True``, DESIGN.md §5) the
+    envelope operands join a fourth, *mirror-indirected* class: ``e_a`` /
+    ``e_b`` live in Eu-row undirected tables and are gathered per edge
+    chunk through the ``bond_pair`` mirror-map ids with the same tiled
+    one-hot mechanism as remote operands — the directed (E, D) envelope
+    expansions never exist in HBM or VMEM;
   - envelope weights are applied in-register and the weighted messages are
     accumulated straight into the destination tile with the transposed
     windowed one-hot (one more MXU contraction).
@@ -140,10 +146,11 @@ def _gather_rows(ids, table_refs, tile: int):
 # atom_conv megakernel: bonds -> atoms (Eq. 4 message path)
 # ---------------------------------------------------------------------------
 
-def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, v_full_ref, v_tile_ref,
-                      e_ref, ea_ref, w1_ref, w2_ref, w3_ref, b_ref,
-                      lns_ref, lnb_ref, out_ref, *, block_rows: int,
-                      chunk: int, d_real: int, gather_tile: int):
+def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
+                      v_tile_ref, e_ref, ea_ref, w1_ref, w2_ref, w3_ref,
+                      b_ref, lns_ref, lnb_ref, out_ref, *, block_rows: int,
+                      chunk: int, d_real: int, gather_tile: int,
+                      mirror: bool):
     i = pl.program_id(0)
     r0 = i * block_rows
     start = offs_ref[r0]
@@ -163,8 +170,17 @@ def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, v_full_ref, v_tile_ref,
         y = _mm(v_c, w1_ref[...]) + _mm(v_n, w2_ref[...]) \
             + _mm(e_c, w3_ref[...]) + b_ref[...].astype(jnp.float32)
         msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
-        # envelope e^a_ij applied in-register at f32 (accum rule, §4)
-        msg = msg * ea_ref[pl.ds(base, chunk), :].astype(jnp.float32)
+        # envelope e^a_ij applied in-register at f32 (accum rule, §4).
+        # Mirror-indirected operand class (DESIGN.md §5): with the
+        # undirected store, e^a lives in an Eu-row table and is gathered
+        # through bond_pair — the directed (E, D) expansion never exists
+        # in HBM or VMEM.
+        if mirror:
+            (ea_c,) = _gather_rows(
+                pair_ref[pl.ds(base, chunk), :], (ea_ref,), gather_tile)
+        else:
+            ea_c = ea_ref[pl.ds(base, chunk), :].astype(jnp.float32)
+        msg = msg * ea_c
         out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
         return carry
 
@@ -174,9 +190,10 @@ def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, v_full_ref, v_tile_ref,
 def fused_atom_conv_pallas(
     v: jnp.ndarray,        # (A, DP) f32, A % block_rows == 0, DP % 128 == 0
     e: jnp.ndarray,        # (E, DP) f32, E % chunk == 0
-    e_a: jnp.ndarray,      # (E, HP2) f32 envelope, lanes match the message
+    e_a: jnp.ndarray,      # (E, HP) envelope — or (EU, HP) table (mirror)
     seg: jnp.ndarray,      # (E, 1) int32 bond_center, sorted over real prefix
     nbr: jnp.ndarray,      # (E, 1) int32 bond_nbr
+    pair: jnp.ndarray,     # (E, 1) int32 bond_pair (mirror; else any dummy)
     offsets: jnp.ndarray,  # (A + 1,) int32 CSR row pointers
     w1: jnp.ndarray, w2: jnp.ndarray, w3: jnp.ndarray,  # (DP, 2*HP) each
     b: jnp.ndarray,        # (1, 2*HP)
@@ -186,14 +203,20 @@ def fused_atom_conv_pallas(
     block_rows: int = 8,
     chunk: int = 256,
     gather_tile: int = 256,
+    mirror: bool = False,
     interpret: bool = True,
 ) -> jnp.ndarray:
     a_rows, dp = v.shape
     e_rows = e.shape[0]
+    ea_rows = e_a.shape[0]
     hp2 = b.shape[-1]
     assert e_rows % chunk == 0, (e_rows, chunk)
     assert a_rows % block_rows == 0, (a_rows, block_rows)
     assert a_rows % gather_tile == 0, (a_rows, gather_tile)
+    if mirror:  # the e^a table is walked in gather_tile windows
+        assert ea_rows % gather_tile == 0, (ea_rows, gather_tile)
+    else:
+        assert ea_rows == e_rows, (ea_rows, e_rows)
     grid = (a_rows // block_rows,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -201,10 +224,11 @@ def fused_atom_conv_pallas(
         in_specs=[
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((a_rows, dp), lambda i, offs: (0, 0)),
             pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
             pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
-            pl.BlockSpec((e_rows, hp2 // 2), lambda i, offs: (0, 0)),
+            pl.BlockSpec((ea_rows, hp2 // 2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
@@ -218,22 +242,24 @@ def fused_atom_conv_pallas(
     return pl.pallas_call(
         functools.partial(_atom_conv_kernel, block_rows=block_rows,
                           chunk=chunk, d_real=d_real,
-                          gather_tile=gather_tile),
+                          gather_tile=gather_tile, mirror=mirror),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((a_rows, hp2 // 2), jnp.float32),
         interpret=interpret,
-    )(offsets, seg, nbr, v, v, e, e_a, w1, w2, w3, b, ln_scale, ln_bias)
+    )(offsets, seg, nbr, pair, v, v, e, e_a, w1, w2, w3, b, ln_scale,
+      ln_bias)
 
 
 # ---------------------------------------------------------------------------
 # bond_conv megakernel: angles -> bonds (Eq. 5 message path)
 # ---------------------------------------------------------------------------
 
-def _bond_conv_kernel(offs_ref, seg_ref, ik_ref, ctr_ref, v_ref, e_full_ref,
-                      e_tile_ref, eb_full_ref, eb_tile_ref, a_ref,
-                      w1_ref, w2_ref, w3_ref, w4_ref, b_ref,
-                      lns_ref, lnb_ref, out_ref, *, block_rows: int,
-                      chunk: int, d_real: int, gather_tile: int):
+def _bond_conv_kernel(offs_ref, seg_ref, ik_ref, ctr_ref, pij_ref, pik_ref,
+                      v_ref, e_full_ref, e_tile_ref, eb_full_ref,
+                      eb_tile_ref, a_ref, w1_ref, w2_ref, w3_ref, w4_ref,
+                      b_ref, lns_ref, lnb_ref, out_ref, *, block_rows: int,
+                      chunk: int, d_real: int, gather_tile: int,
+                      mirror: bool):
     i = pl.program_id(0)
     r0 = i * block_rows
     start = offs_ref[r0]
@@ -246,11 +272,23 @@ def _bond_conv_kernel(offs_ref, seg_ref, ik_ref, ctr_ref, v_ref, e_full_ref,
         seg = seg_ref[pl.ds(base, chunk), :]                   # angle_ij
         oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
         e_ij = _mm(oh_w, e_tile_ref[...])        # gather e[angle_ij]
-        eb_ij = _mm(oh_w, eb_tile_ref[...])      # gather e_b[angle_ij]
-        # e / e_b share angle_ik: one tiled one-hot gathers both
-        e_ik, eb_ik = _gather_rows(
-            ik_ref[pl.ds(base, chunk), :], (e_full_ref, eb_full_ref),
-            gather_tile)
+        if mirror:
+            # mirror-indirected operand class (DESIGN.md §5): e^b lives in
+            # an Eu-row table; BOTH envelope factors gather through the
+            # precomputed bond_pair[angle_*] ids — the windowed one-hot no
+            # longer applies because pair ids are not tile-local.
+            (e_ik,) = _gather_rows(
+                ik_ref[pl.ds(base, chunk), :], (e_full_ref,), gather_tile)
+            (eb_ij,) = _gather_rows(
+                pij_ref[pl.ds(base, chunk), :], (eb_full_ref,), gather_tile)
+            (eb_ik,) = _gather_rows(
+                pik_ref[pl.ds(base, chunk), :], (eb_full_ref,), gather_tile)
+        else:
+            eb_ij = _mm(oh_w, eb_tile_ref[...])  # gather e_b[angle_ij]
+            # e / e_b share angle_ik: one tiled one-hot gathers both
+            e_ik, eb_ik = _gather_rows(
+                ik_ref[pl.ds(base, chunk), :], (e_full_ref, eb_full_ref),
+                gather_tile)
         (v_c,) = _gather_rows(                   # gather v[center]
             ctr_ref[pl.ds(base, chunk), :], (v_ref,), gather_tile)
         a_c = a_ref[pl.ds(base, chunk), :]       # edge-contiguous slice
@@ -269,10 +307,12 @@ def fused_bond_conv_pallas(
     v: jnp.ndarray,        # (A, DP) f32 atom features
     e: jnp.ndarray,        # (B, DP) f32 bond features, B % block_rows == 0
     a: jnp.ndarray,        # (E, DP) f32 angle features, E % chunk == 0
-    e_b: jnp.ndarray,      # (B, HP) f32 bond envelope (message lanes)
+    e_b: jnp.ndarray,      # (B, HP) envelope — or (EU, HP) table (mirror)
     seg: jnp.ndarray,      # (E, 1) int32 angle_ij, sorted over real prefix
     ik: jnp.ndarray,       # (E, 1) int32 angle_ik
     ctr: jnp.ndarray,      # (E, 1) int32 bond_center[angle_ij]
+    pij: jnp.ndarray,      # (E, 1) int32 bond_pair[angle_ij] (mirror; else dummy)
+    pik: jnp.ndarray,      # (E, 1) int32 bond_pair[angle_ik] (mirror; else dummy)
     offsets: jnp.ndarray,  # (B + 1,) int32 CSR row pointers
     w1: jnp.ndarray, w2: jnp.ndarray, w3: jnp.ndarray, w4: jnp.ndarray,
     b: jnp.ndarray,        # (1, 2*HP)
@@ -282,17 +322,26 @@ def fused_bond_conv_pallas(
     block_rows: int = 8,
     chunk: int = 256,
     gather_tile: int = 256,
+    mirror: bool = False,
     interpret: bool = True,
 ) -> jnp.ndarray:
     a_rows, dp = v.shape
     b_rows = e.shape[0]
     e_rows = a.shape[0]
+    eb_rows = e_b.shape[0]
     hp2 = b.shape[-1]
     hp = hp2 // 2
     assert e_rows % chunk == 0, (e_rows, chunk)
     assert b_rows % block_rows == 0, (b_rows, block_rows)
     assert b_rows % gather_tile == 0, (b_rows, gather_tile)
     assert a_rows % gather_tile == 0, (a_rows, gather_tile)
+    if mirror:
+        # the e^b table is walked in gather_tile windows; its unused tile
+        # view (pinned at block 0 below) still needs one whole block
+        assert eb_rows % gather_tile == 0, (eb_rows, gather_tile)
+        assert eb_rows >= block_rows, (eb_rows, block_rows)
+    else:
+        assert eb_rows == b_rows, (eb_rows, b_rows)
     grid = (b_rows // block_rows,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -301,11 +350,15 @@ def fused_bond_conv_pallas(
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((a_rows, dp), lambda i, offs: (0, 0)),
             pl.BlockSpec((b_rows, dp), lambda i, offs: (0, 0)),
             pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
-            pl.BlockSpec((b_rows, hp), lambda i, offs: (0, 0)),
-            pl.BlockSpec((block_rows, hp), lambda i, offs: (i, 0)),
+            pl.BlockSpec((eb_rows, hp), lambda i, offs: (0, 0)),
+            pl.BlockSpec((block_rows, hp),
+                         (lambda i, offs: (i, 0)) if not mirror
+                         else (lambda i, offs: (0, 0))),
             pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
@@ -320,11 +373,11 @@ def fused_bond_conv_pallas(
     return pl.pallas_call(
         functools.partial(_bond_conv_kernel, block_rows=block_rows,
                           chunk=chunk, d_real=d_real,
-                          gather_tile=gather_tile),
+                          gather_tile=gather_tile, mirror=mirror),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b_rows, hp), jnp.float32),
         interpret=interpret,
-    )(offsets, seg, ik, ctr, v, e, e, e_b, e_b, a,
+    )(offsets, seg, ik, ctr, pij, pik, v, e, e, e_b, e_b, a,
       w1, w2, w3, w4, b, ln_scale, ln_bias)
 
 

@@ -12,6 +12,13 @@ Responsibilities:
     sliced outputs are cast back to the operand dtype.  The custom-VJP
     backwards below upcast their recompute to f32 and accumulate
     cotangents in f32 regardless of the operand dtype.
+
+Every op here is differentiable: the basis kernels (fused_rbf /
+fused_fourier), the GatedMLP, and the message-passing megakernels all
+carry chunked recompute custom VJPs (the DESIGN.md §3 pattern), so
+``mlp_impl="pallas"`` trains end to end — the seed-era forward-only
+caveat is gone.  The conv wrappers additionally accept the DESIGN.md §5
+``pair`` mirror maps for the undirected bond store.
 """
 from __future__ import annotations
 
@@ -54,8 +61,24 @@ def _pad_rows(x: jnp.ndarray, mult: int) -> tuple[jnp.ndarray, int]:
     return x, n
 
 
-def fused_rbf(dist, freqs, r_cut: float, p: int = 8, *, block_m: int = 512):
-    """(N,) x (K,) -> (N, K) fused smooth-RBF basis."""
+# ---------------------------------------------------------------------------
+# Basis + GatedMLP kernels with chunked recompute backwards
+# ---------------------------------------------------------------------------
+#
+# These three ops were forward-only in the seed (no VJP on a pallas_call),
+# which pinned mlp_impl="pallas" to inference.  Each now carries a custom
+# VJP in the §3 recompute style: the forward saves only its (tiny) primal
+# operands, and the backward re-derives the basis/MLP chunk-by-chunk with
+# a chunk-local jax.vjp of the analytic reference math (kernels/ref.py) —
+# f32 accumulation, one (chunk, K) transient tile, nothing stored across
+# forward/backward.
+
+def _row_chunks(n_padded: int, chunk: int):
+    return n_padded // chunk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _fused_rbf(dist, freqs, r_cut, p, block_m):
     k = freqs.shape[0]
     k_pad = (-k) % 128
     freqs_p = jnp.pad(freqs, (0, k_pad)) if k_pad else freqs
@@ -66,8 +89,54 @@ def fused_rbf(dist, freqs, r_cut: float, p: int = 8, *, block_m: int = 512):
     return out[:n, :k]
 
 
-def fused_fourier(theta, num_basis: int, *, block_m: int = 512):
-    """(N,) -> (N, num_basis) fused Fourier angle basis."""
+def _fused_rbf_fwd(dist, freqs, r_cut, p, block_m):
+    return _fused_rbf(dist, freqs, r_cut, p, block_m), (dist, freqs)
+
+
+def _fused_rbf_bwd(r_cut, p, block_m, res, g):
+    """Chunked analytic backward: d(sRBF)/d(dist, freqs) via a per-chunk
+    jax.vjp of the reference basis (no saved intermediates)."""
+    dist, freqs = res
+    n = dist.shape[0]
+    np_rows = _round_up(max(n, 1), block_m)
+    dist_p = jnp.pad(dist.astype(jnp.float32), (0, np_rows - n))
+    # padded rows carry zero cotangents, so they contribute nothing
+    g_p = jnp.pad(g.astype(jnp.float32),
+                  ((0, np_rows - n), (0, 0)))
+    freqs32 = freqs.astype(jnp.float32)
+
+    def body(i, carry):
+        dd, df = carry
+        i0 = i * block_m
+        dist_c = jax.lax.dynamic_slice(dist_p, (i0,), (block_m,))
+        g_c = jax.lax.dynamic_slice(g_p, (i0, 0), (block_m, g_p.shape[1]))
+        _, vjp = jax.vjp(
+            lambda dc, fr: ref.fused_rbf_ref(dc, fr, r_cut, p),
+            dist_c, freqs32)
+        dd_c, df_c = vjp(g_c)
+        return (jax.lax.dynamic_update_slice(dd, dd_c, (i0,)), df + df_c)
+
+    dd, df = jax.lax.fori_loop(
+        0, _row_chunks(np_rows, block_m), body,
+        (jnp.zeros_like(dist_p), jnp.zeros_like(freqs32)))
+    return dd[:n].astype(dist.dtype), df.astype(freqs.dtype)
+
+
+_fused_rbf.defvjp(_fused_rbf_fwd, _fused_rbf_bwd)
+
+
+def fused_rbf(dist, freqs, r_cut: float, p: int = 8, *, block_m: int = 512):
+    """(N,) x (K,) -> (N, K) fused smooth-RBF basis.
+
+    Differentiable w.r.t. distances AND the trainable frequencies (chunked
+    recompute custom VJP — the forces/stress autodiff readout and training
+    with ``mlp_impl="pallas"`` both pass through here).
+    """
+    return _fused_rbf(dist, freqs, r_cut, p, block_m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _fused_fourier(theta, num_basis, block_m):
     theta_p, n = _pad_rows(theta, block_m)
     out = fused_fourier_pallas(
         theta_p, num_basis, block_m=block_m, interpret=_interpret()
@@ -75,10 +144,42 @@ def fused_fourier(theta, num_basis: int, *, block_m: int = 512):
     return out[:n, :num_basis]
 
 
-def fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, *, block_m: int = 256):
-    """CHGNet GatedMLP from pre-packed parameters (w = [Wc ‖ Wg], packed
-    once at init — repro.core.interaction.gated_mlp_init); no per-step
-    parameter concat inside the jitted step."""
+def _fused_fourier_fwd(theta, num_basis, block_m):
+    return _fused_fourier(theta, num_basis, block_m), theta
+
+
+def _fused_fourier_bwd(num_basis, block_m, theta, g):
+    """Chunked analytic backward: d(FT)/d(theta) per chunk."""
+    n = theta.shape[0]
+    np_rows = _round_up(max(n, 1), block_m)
+    theta_p = jnp.pad(theta.astype(jnp.float32), (0, np_rows - n))
+    g_p = jnp.pad(g.astype(jnp.float32), ((0, np_rows - n), (0, 0)))
+
+    def body(i, dt):
+        i0 = i * block_m
+        theta_c = jax.lax.dynamic_slice(theta_p, (i0,), (block_m,))
+        g_c = jax.lax.dynamic_slice(g_p, (i0, 0), (block_m, g_p.shape[1]))
+        _, vjp = jax.vjp(
+            lambda tc: ref.fused_fourier_ref(tc, num_basis), theta_c)
+        (dt_c,) = vjp(g_c)
+        return jax.lax.dynamic_update_slice(dt, dt_c, (i0,))
+
+    dt = jax.lax.fori_loop(0, _row_chunks(np_rows, block_m), body,
+                           jnp.zeros_like(theta_p))
+    return (dt[:n].astype(theta.dtype),)
+
+
+_fused_fourier.defvjp(_fused_fourier_fwd, _fused_fourier_bwd)
+
+
+def fused_fourier(theta, num_basis: int, *, block_m: int = 512):
+    """(N,) -> (N, num_basis) fused Fourier angle basis (differentiable
+    w.r.t. theta via a chunked recompute custom VJP)."""
+    return _fused_fourier(theta, num_basis, block_m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, block_m):
     x_p, m = _pad_rows(x, block_m)
     # GEMM operands share x's dtype (cast-to-compute view, DESIGN.md §4);
     # LN params stay as given — the kernel evaluates LN in f32 regardless
@@ -87,6 +188,54 @@ def fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, *, block_m: int = 256):
         block_m=block_m, interpret=_interpret(),
     )
     return out[:m]
+
+
+def _fused_gated_mlp_packed_fwd(x, w, b, ln_scale, ln_bias, block_m):
+    out = _fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, block_m)
+    return out, (x, w, b, ln_scale, ln_bias)
+
+
+def _fused_gated_mlp_packed_bwd(block_m, res, g):
+    """Chunked recompute backward over row chunks of x (the §3 pattern):
+    each iteration re-derives its (chunk, 2D) GatedMLP with a chunk-local
+    jax.vjp of the packed reference — no LN statistics or activations are
+    saved anywhere."""
+    x, w, b, ln_scale, ln_bias = res
+    m = x.shape[0]
+    mp = _round_up(max(m, 1), block_m)
+    x_p = _pad_rows_f32(x, mp)
+    g_p = _pad_rows_f32(g, mp)
+    f32 = lambda t: t.astype(jnp.float32)
+    w32, b32, s32, o32 = f32(w), f32(b), f32(ln_scale), f32(ln_bias)
+
+    def body(i, carry):
+        dx, dw, db, ds, do = carry
+        i0 = i * block_m
+        x_c = _chunk_of(x_p, i0, block_m)
+        g_c = _chunk_of(g_p, i0, block_m)
+        _, vjp = jax.vjp(ref.gated_mlp_packed_ref, x_c, w32, b32, s32, o32)
+        dx_c, dw_c, db_c, ds_c, do_c = vjp(g_c)
+        return (jax.lax.dynamic_update_slice(dx, dx_c, (i0, 0)),
+                dw + dw_c, db + db_c, ds + ds_c, do + do_c)
+
+    init = (jnp.zeros_like(x_p), jnp.zeros_like(w32), jnp.zeros_like(b32),
+            jnp.zeros_like(s32), jnp.zeros_like(o32))
+    dx, dw, db, ds, do = jax.lax.fori_loop(
+        0, _row_chunks(mp, block_m), body, init)
+    return (dx[:m].astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype),
+            ds.astype(ln_scale.dtype), do.astype(ln_bias.dtype))
+
+
+_fused_gated_mlp_packed.defvjp(_fused_gated_mlp_packed_fwd,
+                               _fused_gated_mlp_packed_bwd)
+
+
+def fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, *, block_m: int = 256):
+    """CHGNet GatedMLP from pre-packed parameters (w = [Wc ‖ Wg], packed
+    once at init — repro.core.interaction.gated_mlp_init); no per-step
+    parameter concat inside the jitted step.  Differentiable via a chunked
+    recompute custom VJP, so ``mlp_impl="pallas"`` trains end to end."""
+    return _fused_gated_mlp_packed(x, w, b, ln_scale, ln_bias, block_m)
 
 
 def fused_gated_mlp(x, wc, bc, wg, bg, sc, oc, sg, og, *, block_m: int = 256):
@@ -221,9 +370,9 @@ def _pad_offsets(offsets, num_rows_padded):
     return jnp.pad(offsets.astype(jnp.int32), (0, pad), mode="edge")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13))
 def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
-                     bond_center, bond_nbr, offsets,
+                     bond_center, bond_nbr, offsets, pair,
                      block_rows, chunk, gather_tile):
     a_rows, dim = v.shape
     e_rows, de = e.shape
@@ -237,9 +386,18 @@ def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
     # nbr-gather table (gather_tile windows): pad to a common multiple
     ap = _round_up(a_rows, math.lcm(block_rows, gather_tile))
     ep = _round_up(e_rows, chunk)
+    mirror = pair is not None
+    if mirror:
+        # undirected store (DESIGN.md §5): e_a is an Eu-row table gathered
+        # in-kernel through bond_pair — pad its rows to gather_tile windows
+        ea_p = _pad2(e_a, _round_up(e_a.shape[0], gather_tile), hp)
+        pair_ids = _pad_ids(pair, ep)
+    else:
+        ea_p = _pad2(e_a, ep, hp)
+        pair_ids = _pad_ids(bond_center, ep)  # unused dummy, aliases seg
     out = fused_atom_conv_pallas(
-        _pad2(v, ap, dp), _pad2(e, ep, dp), _pad2(e_a, ep, hp),
-        _pad_ids(bond_center, ep), _pad_ids(bond_nbr, ep),
+        _pad2(v, ap, dp), _pad2(e, ep, dp), ea_p,
+        _pad_ids(bond_center, ep), _pad_ids(bond_nbr, ep), pair_ids,
         _pad_offsets(offsets, ap),
         _pack_lanes_w(w[:dim], dp, d, hp),
         _pack_lanes_w(w[dim:2 * dim], dp, d, hp),
@@ -247,75 +405,100 @@ def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
         _pack_lanes_vec(b, d, hp),
         _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
         d_real=d, block_rows=block_rows, chunk=chunk,
-        gather_tile=gather_tile, interpret=_interpret(),
+        gather_tile=gather_tile, mirror=mirror, interpret=_interpret(),
     )
     return out[:a_rows, :d].astype(v.dtype)
 
 
 def _fused_atom_conv_fwd(v, e, e_a, w, b, ln_scale, ln_bias,
-                         bond_center, bond_nbr, offsets,
+                         bond_center, bond_nbr, offsets, pair,
                          block_rows, chunk, gather_tile):
     out = _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
-                           bond_center, bond_nbr, offsets,
+                           bond_center, bond_nbr, offsets, pair,
                            block_rows, chunk, gather_tile)
     # operands only — messages are rematerialized in the backward
     return out, (v, e, e_a, w, b, ln_scale, ln_bias,
-                 bond_center, bond_nbr, offsets)
+                 bond_center, bond_nbr, offsets, pair)
 
 
 def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, res, g):
     """Tile-wise recompute backward: a fori_loop over edge chunks, each
     iteration re-deriving its (chunk, D) messages with a chunk-local
-    jax.vjp — no full-edge concat/message tensor exists here either."""
-    v, e, e_a, w, b, ln_scale, ln_bias, bond_center, bond_nbr, offsets = res
+    jax.vjp — no full-edge concat/message tensor exists here either.
+    With the mirror maps (``pair`` set), e_a cotangents accumulate into
+    the Eu-row table (the chunk-local vjp's gather transposes to a
+    table-shaped scatter-add)."""
+    (v, e, e_a, w, b, ln_scale, ln_bias, bond_center, bond_nbr, offsets,
+     pair) = res
     e_rows = e.shape[0]
     ep = _round_up(e_rows, chunk)
     seg_p = _pad_rows_i32(bond_center, ep)
     nbr_p = _pad_rows_i32(bond_nbr, ep)
     e_p = _pad_rows_f32(e, ep)
-    ea_p = _pad_rows_f32(e_a, ep)
     f32 = lambda x: x.astype(jnp.float32)
     v32, w32, b32 = f32(v), f32(w), f32(b)
     lns32, lnb32 = f32(ln_scale), f32(ln_bias)
     g32 = f32(g)
     n_real = offsets[-1].astype(jnp.int32)
+    mirror = pair is not None
+    if mirror:
+        ea_full = f32(e_a)  # (Eu, D) table — cotangents accumulate whole
+        pair_p = _pad_rows_i32(pair, ep)
+    else:
+        ea_p = _pad_rows_f32(e_a, ep)
 
     def body(k, carry):
-        dv, dep_, deap, dw, db, dls, dlb = carry
+        dv, dep_, dea, dw, db, dls, dlb = carry
         i0 = k * chunk
         seg_c = _chunk_of(seg_p, i0, chunk)
         nbr_c = _chunk_of(nbr_p, i0, chunk)
+        if mirror:
+            pair_c = _chunk_of(pair_p, i0, chunk)
 
-        def msgs(vv, ec, eac, ww, bb, ss, oo):
-            x = jnp.concatenate([vv[seg_c], vv[nbr_c], ec], axis=-1)
-            return ref.gated_mlp_packed_ref(x, ww, bb, ss, oo) * eac
+            def msgs(vv, ec, ea_t, ww, bb, ss, oo):
+                x = jnp.concatenate([vv[seg_c], vv[nbr_c], ec], axis=-1)
+                return ref.gated_mlp_packed_ref(x, ww, bb, ss, oo) \
+                    * ea_t[pair_c]
+
+            ea_arg = ea_full
+        else:
+            def msgs(vv, ec, eac, ww, bb, ss, oo):
+                x = jnp.concatenate([vv[seg_c], vv[nbr_c], ec], axis=-1)
+                return ref.gated_mlp_packed_ref(x, ww, bb, ss, oo) * eac
+
+            ea_arg = _chunk_of(ea_p, i0, chunk)
 
         _, vjp = jax.vjp(msgs, v32, _chunk_of(e_p, i0, chunk),
-                         _chunk_of(ea_p, i0, chunk), w32, b32, lns32, lnb32)
+                         ea_arg, w32, b32, lns32, lnb32)
         valid = (i0 + jnp.arange(chunk)) < n_real
         gm = jnp.where(valid[:, None], g32[seg_c], 0.0)
         dvc, dec, deac, dwc, dbc, dlsc, dlbc = vjp(gm)
+        dea = dea + deac if mirror else \
+            jax.lax.dynamic_update_slice(dea, deac, (i0, 0))
         return (dv + dvc,
                 jax.lax.dynamic_update_slice(dep_, dec, (i0, 0)),
-                jax.lax.dynamic_update_slice(deap, deac, (i0, 0)),
-                dw + dwc, db + dbc, dls + dlsc, dlb + dlbc)
+                dea, dw + dwc, db + dbc, dls + dlsc, dlb + dlbc)
 
-    init = (jnp.zeros_like(v32), jnp.zeros_like(e_p), jnp.zeros_like(ea_p),
+    init = (jnp.zeros_like(v32), jnp.zeros_like(e_p),
+            jnp.zeros_like(ea_full) if mirror else jnp.zeros_like(ea_p),
             jnp.zeros_like(w32), jnp.zeros_like(b32),
             jnp.zeros_like(lns32), jnp.zeros_like(lnb32))
     # static trip count (padded chunks contribute masked zeros): the loop
     # lowers to scan, so the bwd itself stays reverse-differentiable — the
     # autodiff readout can run on top of the fused convs (forces need one
     # more reverse pass through this function)
-    dv, dep_, deap, dw, db, dls, dlb = jax.lax.fori_loop(
+    dv, dep_, dea, dw, db, dls, dlb = jax.lax.fori_loop(
         0, ep // chunk, body, init)
+    dea = dea.astype(e_a.dtype) if mirror \
+        else dea[:e_rows].astype(e_a.dtype)
     f0 = jax.dtypes.float0
     return (dv.astype(v.dtype), dep_[:e_rows].astype(e.dtype),
-            deap[:e_rows].astype(e_a.dtype), dw.astype(w.dtype),
+            dea, dw.astype(w.dtype),
             db.astype(b.dtype), dls.astype(ln_scale.dtype),
             dlb.astype(ln_bias.dtype),
             np.zeros(bond_center.shape, f0), np.zeros(bond_nbr.shape, f0),
-            np.zeros(offsets.shape, f0))
+            np.zeros(offsets.shape, f0),
+            None if pair is None else np.zeros(pair.shape, f0))
 
 
 _fused_atom_conv.defvjp(_fused_atom_conv_fwd, _fused_atom_conv_bwd)
@@ -323,7 +506,7 @@ _fused_atom_conv.defvjp(_fused_atom_conv_fwd, _fused_atom_conv_bwd)
 
 def fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                     bond_center, bond_nbr, bond_offsets,
-                    *, block_rows: int = 8, chunk: int = 256,
+                    *, pair=None, block_rows: int = 8, chunk: int = 256,
                     gather_tile: int = 256):
     # block_rows=8: ~tens of bonds per atom, so 8 rows ~ one edge chunk
     """Fused Eq. 4 message path: sum_j e^a_ij * phi(v_i, v_j, e_ij) -> (A, D).
@@ -332,15 +515,20 @@ def fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
     ``bond_center`` with CSR ``bond_offsets``.  Forward is one Pallas
     megakernel (no HBM concat/message tensors); differentiable via a
     chunked recompute-in-backward custom VJP (DESIGN.md §3).
+
+    ``pair`` (DESIGN.md §5): directed->undirected mirror map.  When set,
+    ``e_a`` is the (Eu, D) undirected envelope table and the kernel
+    gathers it per edge chunk in-register (mirror-indirected operand
+    class) — the directed (E, D) expansion never exists in HBM.
     """
     return _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
-                            bond_center, bond_nbr, bond_offsets,
+                            bond_center, bond_nbr, bond_offsets, pair,
                             block_rows, chunk, gather_tile)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(12, 13, 14))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(13, 14, 15))
 def _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
-                     angle_ij, angle_ik, center_ids, offsets,
+                     angle_ij, angle_ik, center_ids, offsets, pair,
                      block_rows, chunk, gather_tile):
     a_rows, dim = v.shape
     b_rows = e.shape[0]
@@ -357,11 +545,22 @@ def _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
     bp = _round_up(b_rows, math.lcm(block_rows, gather_tile))
     ap = _round_up(a_rows, gather_tile)
     ep = _round_up(e_rows, chunk)
+    mirror = pair is not None
+    if mirror:
+        # undirected store (DESIGN.md §5): e_b is an Eu-row table; both
+        # envelope gathers run in-kernel through bond_pair[angle_*] (cheap
+        # int gathers here — no float tensor is expanded for them)
+        eb_p = _pad2(e_b, _round_up(e_b.shape[0], gather_tile), hp)
+        pij = _pad_ids(pair[angle_ij], ep)
+        pik = _pad_ids(pair[angle_ik], ep)
+    else:
+        eb_p = _pad2(e_b, bp, hp)
+        pij = _pad_ids(angle_ij, ep)   # unused dummies, alias seg/ik
+        pik = _pad_ids(angle_ik, ep)
     out = fused_bond_conv_pallas(
-        _pad2(v, ap, dp), _pad2(e, bp, dp), _pad2(a, ep, dp),
-        _pad2(e_b, bp, hp),
+        _pad2(v, ap, dp), _pad2(e, bp, dp), _pad2(a, ep, dp), eb_p,
         _pad_ids(angle_ij, ep), _pad_ids(angle_ik, ep),
-        _pad_ids(center_ids, ep), _pad_offsets(offsets, bp),
+        _pad_ids(center_ids, ep), pij, pik, _pad_offsets(offsets, bp),
         _pack_lanes_w(w[:dim], dp, d, hp),
         _pack_lanes_w(w[dim:2 * dim], dp, d, hp),
         _pack_lanes_w(w[2 * dim:3 * dim], dp, d, hp),
@@ -369,25 +568,27 @@ def _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
         _pack_lanes_vec(b, d, hp),
         _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
         d_real=d, block_rows=block_rows, chunk=chunk,
-        gather_tile=gather_tile, interpret=_interpret(),
+        gather_tile=gather_tile, mirror=mirror, interpret=_interpret(),
     )
     return out[:b_rows, :d].astype(e.dtype)
 
 
 def _fused_bond_conv_fwd(v, e, a, e_b, w, b, ln_scale, ln_bias,
-                         angle_ij, angle_ik, center_ids, offsets,
+                         angle_ij, angle_ik, center_ids, offsets, pair,
                          block_rows, chunk, gather_tile):
     out = _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
-                           angle_ij, angle_ik, center_ids, offsets,
+                           angle_ij, angle_ik, center_ids, offsets, pair,
                            block_rows, chunk, gather_tile)
     return out, (v, e, a, e_b, w, b, ln_scale, ln_bias,
-                 angle_ij, angle_ik, center_ids, offsets)
+                 angle_ij, angle_ik, center_ids, offsets, pair)
 
 
 def _fused_bond_conv_bwd(block_rows, chunk, gather_tile, res, g):
-    """Tile-wise recompute backward over angle chunks (see atom_conv)."""
+    """Tile-wise recompute backward over angle chunks (see atom_conv).
+    With the mirror maps, the envelope factors gather from the Eu-row
+    table and their cotangents accumulate into it."""
     (v, e, a, e_b, w, b, ln_scale, ln_bias,
-     angle_ij, angle_ik, center_ids, offsets) = res
+     angle_ij, angle_ik, center_ids, offsets, pair) = res
     e_rows = a.shape[0]
     ep = _round_up(e_rows, chunk)
     ij_p = _pad_rows_i32(angle_ij, ep)
@@ -399,6 +600,10 @@ def _fused_bond_conv_bwd(block_rows, chunk, gather_tile, res, g):
     lns32, lnb32 = f32(ln_scale), f32(ln_bias)
     g32 = f32(g)
     n_real = offsets[-1].astype(jnp.int32)
+    mirror = pair is not None
+    if mirror:
+        pij_p = _pad_rows_i32(pair[angle_ij], ep)
+        pik_p = _pad_rows_i32(pair[angle_ik], ep)
 
     def body(k, carry):
         dv, de, dap, deb, dw, db, dls, dlb = carry
@@ -406,11 +611,16 @@ def _fused_bond_conv_bwd(block_rows, chunk, gather_tile, res, g):
         ij_c = _chunk_of(ij_p, i0, chunk)
         ik_c = _chunk_of(ik_p, i0, chunk)
         ctr_c = _chunk_of(ctr_p, i0, chunk)
+        if mirror:
+            pij_c = _chunk_of(pij_p, i0, chunk)
+            pik_c = _chunk_of(pik_p, i0, chunk)
+        else:
+            pij_c, pik_c = ij_c, ik_c
 
         def msgs(vv, ee, ac, eb, ww, bb, ss, oo):
             x = jnp.concatenate([vv[ctr_c], ee[ij_c], ee[ik_c], ac], axis=-1)
             phi = ref.gated_mlp_packed_ref(x, ww, bb, ss, oo)
-            return phi * eb[ij_c] * eb[ik_c]
+            return phi * eb[pij_c] * eb[pik_c]
 
         _, vjp = jax.vjp(msgs, v32, e32, _chunk_of(a_p, i0, chunk), eb32,
                          w32, b32, lns32, lnb32)
@@ -433,7 +643,8 @@ def _fused_bond_conv_bwd(block_rows, chunk, gather_tile, res, g):
             dw.astype(w.dtype), db.astype(b.dtype),
             dls.astype(ln_scale.dtype), dlb.astype(ln_bias.dtype),
             np.zeros(angle_ij.shape, f0), np.zeros(angle_ik.shape, f0),
-            np.zeros(center_ids.shape, f0), np.zeros(offsets.shape, f0))
+            np.zeros(center_ids.shape, f0), np.zeros(offsets.shape, f0),
+            None if pair is None else np.zeros(pair.shape, f0))
 
 
 _fused_bond_conv.defvjp(_fused_bond_conv_fwd, _fused_bond_conv_bwd)
@@ -441,7 +652,7 @@ _fused_bond_conv.defvjp(_fused_bond_conv_fwd, _fused_bond_conv_bwd)
 
 def fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
                     angle_ij, angle_ik, center_ids, angle_offsets,
-                    *, block_rows: int = 32, chunk: int = 256,
+                    *, pair=None, block_rows: int = 32, chunk: int = 256,
                     gather_tile: int = 512):
     # block_rows=32: angles-per-bond is small (~1-5), so a wider row tile
     # keeps each program's edge range near one chunk instead of paying the
@@ -452,10 +663,14 @@ def fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
     ``center_ids = bond_center[angle_ij]`` (a cheap int gather the caller
     performs; no float tensor is materialized for it).  Requires angles
     sorted by ``angle_ij`` with CSR ``angle_offsets`` (DESIGN.md §1).
+
+    ``pair`` (DESIGN.md §5): directed->undirected mirror map.  When set,
+    ``e_b`` is the (Eu, D) undirected envelope table; both envelope
+    factors gather through ``pair[angle_*]`` inside the kernel.
     """
     return _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
                             angle_ij, angle_ik, center_ids, angle_offsets,
-                            block_rows, chunk, gather_tile)
+                            pair, block_rows, chunk, gather_tile)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10))

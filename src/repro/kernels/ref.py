@@ -91,26 +91,36 @@ def _mask_real_edges(msg, offsets):
 
 
 def fused_atom_conv_ref(v, e, e_a, w, b, ln_scale, ln_bias,
-                        bond_center, bond_nbr, offsets):
+                        bond_center, bond_nbr, offsets, pair=None):
     """Unfused Eq. 4 message path: gather-concat -> GatedMLP -> envelope ->
     segment reduce.  Ground truth for the atom_conv megakernel; also the
     recompute the custom VJP differentiates in the backward (DESIGN.md §3).
+
+    ``pair`` (DESIGN.md §5): when set, ``e_a`` is the undirected (Eu, D)
+    envelope table and is expanded through the mirror map.
     """
     x = jnp.concatenate([v[bond_center], v[bond_nbr], e], axis=-1)
-    msg = gated_mlp_packed_ref(x, w, b, ln_scale, ln_bias) * e_a
+    env = e_a if pair is None else e_a[pair]
+    msg = gated_mlp_packed_ref(x, w, b, ln_scale, ln_bias) * env
     msg = _mask_real_edges(msg, offsets)
     return jax.ops.segment_sum(msg, bond_center, num_segments=v.shape[0])
 
 
 def fused_bond_conv_ref(v, e, a, e_b, w, b, ln_scale, ln_bias,
-                        angle_ij, angle_ik, center_ids, offsets):
+                        angle_ij, angle_ik, center_ids, offsets, pair=None):
     """Unfused Eq. 5 message path (``center_ids = bond_center[angle_ij]``,
     precomputed by the caller so the op itself carries no graph coupling).
+
+    ``pair`` (DESIGN.md §5): when set, ``e_b`` is the undirected (Eu, D)
+    envelope table; both factors gather through ``pair[angle_*]``.
     """
     x = jnp.concatenate(
         [v[center_ids], e[angle_ij], e[angle_ik], a], axis=-1)
     msg = gated_mlp_packed_ref(x, w, b, ln_scale, ln_bias)
-    msg = msg * e_b[angle_ij] * e_b[angle_ik]
+    if pair is None:
+        msg = msg * e_b[angle_ij] * e_b[angle_ik]
+    else:
+        msg = msg * e_b[pair[angle_ij]] * e_b[pair[angle_ik]]
     msg = _mask_real_edges(msg, offsets)
     return jax.ops.segment_sum(msg, angle_ij, num_segments=e.shape[0])
 

@@ -47,12 +47,13 @@ def train_chgnet(args):
     # end-to-end precision policy (DESIGN.md §4; "mixed" = f32 master
     # params/accum, bf16 compute + dynamic loss scaling)
     model_cfg = model_cfg.with_(conv_impl=args.conv_impl,
-                                precision=args.precision)
+                                precision=args.precision,
+                                bond_store=args.bond_store)
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
                             loss=C.LOSS, grad_reduce=args.grad_reduce)
     print(f"devices={n_dev} init_lr={train_cfg.init_lr:.2e} "
           f"readout={args.readout} conv_impl={args.conv_impl} "
-          f"precision={args.precision}")
+          f"precision={args.precision} bond_store={args.bond_store}")
 
     def loop(start):
         tr = Trainer(model_cfg, train_cfg, mesh=mesh, ckpt_dir=args.ckpt,
@@ -134,6 +135,11 @@ def main():
                     choices=["f32", "bf16", "mixed"],
                     help="end-to-end precision policy (DESIGN.md §4); "
                          "mixed = f32 params/accum, bf16 compute")
+    ap.add_argument("--bond-store", default="directed",
+                    choices=["directed", "undirected"],
+                    help="undirected = half-graph bond store with mirror "
+                         "maps (DESIGN.md §5): geometry/RBF/embed GEMM "
+                         "and e^a/e^b run once per pair (Eu = E/2)")
     ap.add_argument("--grad-reduce", default="bucketed",
                     choices=["plain", "bucketed", "compressed"])
     ap.add_argument("--ckpt", default=None)

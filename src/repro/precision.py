@@ -94,10 +94,17 @@ def cast_float_tree(tree: Any, dtype) -> Any:
     """Cast every inexact (floating) leaf of a pytree; integer/bool leaves
     pass through untouched (graph indices, step counters).  The one
     tree-cast used by master-weight growth (``optim.adam``) and the
-    checkpoint migration (``train.trainer``)."""
+    checkpoint migration (``train.trainer``).
+
+    Always materializes NEW float buffers, even where the cast is a no-op
+    (``jnp.array`` copies; ``astype`` would return the same object): the
+    result backs master weights that are donated to the train step
+    alongside the params they were cast from, and donating one buffer
+    through two arguments is an XLA execution error (e.g. the f32-pinned
+    ``rbf_freqs`` under the bf16 policy)."""
     dtype = jnp.dtype(dtype)
     return jax.tree.map(
-        lambda x: x.astype(dtype)
+        lambda x: jnp.array(x, dtype=dtype)
         if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact) else x,
         tree,
     )

@@ -123,11 +123,18 @@ class ServeEngine:
                    validate_layout=validate_layout, precision=precision)
 
     def step_fn(self, caps: BatchCapacities, num_slots: int):
-        """Persistent compiled serve step for (bucket, slots, config)."""
+        """Persistent compiled serve step for (bucket, slots, config).
+
+        The batch argument is donated (each packed batch is consumed
+        exactly once), so its buffers back the outputs instead of a fresh
+        allocation per MD step; params stay undonated — every replica
+        group reuses them.
+        """
         cfg = self.model_cfg
 
         def build():
-            return jax.jit(lambda p, b: chgnet_apply(p, cfg, b))
+            return jax.jit(lambda p, b: chgnet_apply(p, cfg, b),
+                           donate_argnums=(1,))
 
         return self.engine.compiled("serve", caps, num_slots, cfg, build)
 

@@ -132,14 +132,23 @@ def _apply_grads(grads, opt_state, params, lr, train_cfg: TrainConfig,
 # ---------------------------------------------------------------------------
 
 def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
-                         *, cache: CompileCache | None = None):
+                         *, cache: CompileCache | None = None,
+                         donate: bool = True):
     """Returns (train_step, eval_step, serve_step), all jitted.
 
     With ``cache`` (a ``repro.batching.CompileCache``), the jitted wrappers
-    are memoized per ``(kind, model_cfg, train_cfg)`` — a new Trainer after
-    a fault restart reuses the already-traced step instead of starting
-    from an empty jit cache.  (Per-shape/bucket specialisation below the
-    wrapper is jit's own cache; the ladder bounds how many shapes exist.)
+    are memoized per ``(kind, model_cfg, train_cfg, donate)`` — a new
+    Trainer after a fault restart reuses the already-traced step instead
+    of starting from an empty jit cache.  (Per-shape/bucket specialisation
+    below the wrapper is jit's own cache; the ladder bounds how many
+    shapes exist.)
+
+    ``donate`` (default on): the train step donates ``params``/
+    ``opt_state`` and the serve step donates its batch — callers must
+    treat those arguments as consumed (the Trainer loop rebinds both every
+    step; ``benchmarks/bench_iteration.run_donation_probe`` tracks the
+    compiled-memory delta).  Eval donates nothing: eval batches are
+    legitimately reused.
     """
 
     def lr_at(step):
@@ -151,7 +160,12 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
     scale_kind = train_cfg.loss_scale.resolved_kind(model_cfg.precision)
 
     def build_train():
-        @jax.jit
+        # donate params/opt_state: the returned trees alias the input
+        # buffers instead of allocating fresh copies, so the params +
+        # optimizer state never exist twice.  Callers must treat the
+        # passed-in params/opt_state as consumed — the Trainer loop
+        # rebinds both every step.
+        @partial(jax.jit, donate_argnums=(0, 1) if donate else ())
         def train_step(params, opt_state, batch, step):
             scaler = opt_state.get("loss_scale")
             (_, metrics), grads = jax.value_and_grad(
@@ -174,7 +188,10 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
         return eval_step
 
     def build_serve():
-        @jax.jit
+        # donate the batch (the serve step's per-call state): each packed
+        # batch is consumed exactly once per prediction, so its buffers
+        # can back the outputs; params are NOT donated (reused every call)
+        @partial(jax.jit, donate_argnums=(1,) if donate else ())
         def serve_step(params, batch):
             """One MD step's worth of inference (Table II)."""
             return chgnet_apply(params, model_cfg, batch)
@@ -183,7 +200,9 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
 
     if cache is None:
         return build_train(), build_eval(), build_serve()
-    key = (model_cfg, train_cfg)
+    # donate is part of the key: a donated and an undonated step are
+    # different executables and must never satisfy each other's lookups
+    key = (model_cfg, train_cfg, donate)
     return (
         cache.get(("chgnet_train",) + key, build_train),
         cache.get(("chgnet_eval",) + key, build_eval),
@@ -249,7 +268,8 @@ def make_dp_train_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
         out_specs=(P(), P(), P()),
         check_rep=False,
     )
-    return jax.jit(sharded)
+    # donate params/opt_state (same contract as the single-device step)
+    return jax.jit(sharded, donate_argnums=(0, 1))
 
 
 def make_dp_eval_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,

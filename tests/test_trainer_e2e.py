@@ -145,6 +145,35 @@ def test_serve_step_md_inference(ds, caps):
     assert all(bool(jnp.all(jnp.isfinite(v))) for v in out.values())
 
 
+def test_step_donation_survives_compile_cache(ds, caps):
+    """params/opt_state donation must ride the compile-cache key: a second
+    builder call returns the SAME jitted step (cache hit), and its lowered
+    module still carries the input->output aliasing annotations."""
+    from repro.batching import CompileCache
+    from repro.train.trainer import make_chgnet_step_fns
+
+    cfg = CHGNetConfig(readout="direct")
+    tcfg = TrainConfig(global_batch=8)
+    cache = CompileCache()
+    t1, e1, s1 = make_chgnet_step_fns(cfg, tcfg, cache=cache)
+    t2, e2, s2 = make_chgnet_step_fns(cfg, tcfg, cache=cache)
+    assert t1 is t2 and e1 is e2 and s1 is s2  # hits, not rebuilds
+    tr = Trainer(cfg, tcfg)
+    batch = next(iter(BatchIterator(ds, 8, 1, caps)))
+    # donated params/opt_state show up as aliased outputs in the lowering
+    txt = t2.lower(tr.params, tr.opt_state, batch, jnp.asarray(0)).as_text()
+    assert "tf.aliasing_output" in txt
+    # the serve step donates its per-call state (the batch)
+    stxt = s2.lower(tr.params, batch).as_text()
+    assert "tf.aliasing_output" in stxt
+    # eval donates nothing (batches are reused across evals)
+    etxt = e2.lower(tr.params, batch).as_text()
+    assert "tf.aliasing_output" not in etxt
+    # end-to-end: stepping with donation and rebinding works
+    p2, o2, m = t2(tr.params, tr.opt_state, batch, jnp.asarray(0))
+    assert np.isfinite(float(m["loss"]))
+
+
 def test_checkpoint_restore_trainer_roundtrip(tmp_path, ds, caps):
     ckpt = str(tmp_path / "c2")
     cfg = CHGNetConfig()
