@@ -15,6 +15,15 @@ from .capacity import (
     ladder_for,
     ladder_from_stats,
 )
+from .balance import (
+    StepPlan,
+    crystal_slots_for,
+    lpt_pack,
+    plan_microbatches,
+    shard_cost_totals,
+    straggler_ratio,
+)
+from .cost import DEFAULT_COST_MODEL, CostModel, fit_cost_model
 from .engine import BatchingEngine, CompileCache, global_compile_cache
 from .pack import (
     atom_offsets,
@@ -30,4 +39,7 @@ __all__ = [
     "BatchingEngine", "CompileCache", "global_compile_cache",
     "atom_offsets", "batch_crystals", "padding_waste",
     "stack_device_batches", "validate_layout",
+    "StepPlan", "crystal_slots_for", "lpt_pack", "plan_microbatches",
+    "shard_cost_totals", "straggler_ratio",
+    "CostModel", "DEFAULT_COST_MODEL", "fit_cost_model",
 ]

@@ -50,3 +50,10 @@ LARGE_BATCH = 2048        # multi-GPU recipe (Fig. 6)
 EPOCHS = 30
 BASE_LR = 3e-4
 LR_K = 128                # Eq. 14
+
+# multi-GPU sharding recipe (DESIGN.md §6, paper Fig. 4/9): cost-model
+# LPT bin packing instead of even-count shards, with per-bucket gradient
+# accumulation so mixed-size microbatches never pad to the worst bucket
+# (launch/train: --balance cost --accum N)
+BALANCE = "cost"
+ACCUM_MICROS = 2          # microbatches per optimizer step at LARGE_BATCH

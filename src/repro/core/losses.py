@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 from .graph import CrystalGraphBatch
 
@@ -47,8 +48,8 @@ def _f32(x):
     return x.astype(jnp.float32)
 
 
-def chgnet_loss(pred: dict, graph: CrystalGraphBatch, w: LossWeights):
-    """Returns (scalar loss, metrics dict with per-target MAEs)."""
+def _error_terms(pred: dict, graph: CrystalGraphBatch):
+    """Masked f32 error terms shared by the mean- and sum-reduced losses."""
     n = jnp.maximum(_f32(graph.n_atoms_per_crystal), 1.0)
     # upcast BEFORE the error terms so Huber's quadratic/linear branch
     # decision and the MAEs are taken in f32 for every policy
@@ -61,6 +62,13 @@ def chgnet_loss(pred: dict, graph: CrystalGraphBatch, w: LossWeights):
     amask = graph.atom_mask
     fmask = amask[..., None] * jnp.ones_like(f_err)
     smask = cmask[:, None, None] * jnp.ones_like(s_err)
+    return (e_err, cmask), (f_err, fmask), (s_err, smask), (m_err, amask)
+
+
+def chgnet_loss(pred: dict, graph: CrystalGraphBatch, w: LossWeights):
+    """Returns (scalar loss, metrics dict with per-target MAEs)."""
+    (e_err, cmask), (f_err, fmask), (s_err, smask), (m_err, amask) = \
+        _error_terms(pred, graph)
 
     l_e = _masked_mean(huber(e_err, w.huber_delta), cmask)
     l_f = _masked_mean(huber(f_err, w.huber_delta), fmask)
@@ -76,3 +84,73 @@ def chgnet_loss(pred: dict, graph: CrystalGraphBatch, w: LossWeights):
         "mae_m": _masked_mean(jnp.abs(m_err), amask),
     }
     return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Global-denominator reduction for gradient accumulation (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def global_denominators(num_crystals: int, num_atoms: int) -> dict:
+    """Loss denominators of a *global* batch with the given real counts.
+
+    Matches ``_masked_mean``'s per-term mask totals exactly: crystals for
+    energy, 3*atoms for forces, 9*crystals for stress, atoms for magmoms
+    (each clamped to >= 1, like ``_masked_mean``).  Passed unchanged to
+    every microbatch of one optimizer step, so the per-microbatch losses
+    of :func:`chgnet_loss_sums` SUM to the single-big-batch
+    :func:`chgnet_loss` — and therefore so do their gradients.
+    """
+    c = float(max(num_crystals, 1))
+    a = float(max(num_atoms, 1))
+    return {
+        "energy": np.float32(c),
+        "force": np.float32(3.0 * a),
+        "stress": np.float32(9.0 * c),
+        "magmom": np.float32(a),
+    }
+
+
+def chgnet_loss_sums(pred: dict, graph: CrystalGraphBatch, w: LossWeights,
+                     denoms: dict):
+    """Partial loss of one microbatch against GLOBAL denominators.
+
+    Returns ``(loss, sums)``: ``loss`` is this microbatch's masked Huber
+    sums divided by the step-wide ``denoms`` (see
+    :func:`global_denominators`), so losses — and gradients — are exactly
+    additive across the microbatches of one optimizer step regardless of
+    how unevenly the balancer split it.  ``sums`` carries the unweighted
+    absolute-error sums (plus the loss itself) for metric aggregation via
+    :func:`metrics_from_sums`.  An all-padding shard (a device idled by
+    an uneven bucket group) contributes exactly zero to both.
+    """
+    (e_err, cmask), (f_err, fmask), (s_err, smask), (m_err, amask) = \
+        _error_terms(pred, graph)
+
+    def msum(x, mask):
+        return jnp.sum(x.astype(jnp.float32) * mask.astype(jnp.float32))
+
+    loss = (
+        w.energy * msum(huber(e_err, w.huber_delta), cmask) / denoms["energy"]
+        + w.force * msum(huber(f_err, w.huber_delta), fmask) / denoms["force"]
+        + w.stress * msum(huber(s_err, w.huber_delta), smask) / denoms["stress"]
+        + w.magmom * msum(huber(m_err, w.huber_delta), amask) / denoms["magmom"]
+    )
+    sums = {
+        "loss": loss,
+        "abs_e": msum(jnp.abs(e_err), cmask),
+        "abs_f": msum(jnp.abs(f_err), fmask),
+        "abs_s": msum(jnp.abs(s_err), smask),
+        "abs_m": msum(jnp.abs(m_err), amask),
+    }
+    return loss, sums
+
+
+def metrics_from_sums(sums: dict, denoms: dict) -> dict:
+    """Accumulated microbatch sums -> the ``chgnet_loss`` metrics dict."""
+    return {
+        "loss": sums["loss"],
+        "mae_e_per_atom": sums["abs_e"] / denoms["energy"],
+        "mae_f": sums["abs_f"] / denoms["force"],
+        "mae_s": sums["abs_s"] / denoms["stress"],
+        "mae_m": sums["abs_m"] / denoms["magmom"],
+    }

@@ -247,6 +247,36 @@ def build_mirror_maps(
     return bond_pair, bond_sign, und_rep
 
 
+def _mirror_partner(ci: np.ndarray, nj: np.ndarray,
+                    images: np.ndarray) -> np.ndarray:
+    """Index of each directed pair's mirror (j, i, -n) in the same list.
+
+    Pairs whose mirror is absent (asymmetric input) map to themselves.
+    Uses the same canonical-key grouping as ``build_mirror_maps``.
+    """
+    e_cnt = int(ci.shape[0])
+    if e_cnt == 0:
+        return np.zeros((0,), np.int64)
+    img = images.astype(np.int64)
+    fwd = np.column_stack([ci.astype(np.int64), nj.astype(np.int64), img])
+    rev = np.column_stack([nj.astype(np.int64), ci.astype(np.int64), -img])
+    key = np.where(_lex_less(fwd, rev)[:, None], fwd, rev)
+    order = np.lexsort(key.T[::-1])
+    ks = key[order]
+    boundary = np.empty(e_cnt, dtype=bool)
+    boundary[0] = True
+    boundary[1:] = np.any(ks[1:] != ks[:-1], axis=1)
+    gid = np.empty(e_cnt, np.int64)
+    gid[order] = np.cumsum(boundary) - 1
+    n_groups = int(np.sum(boundary))
+    sums = np.zeros(n_groups, np.int64)
+    counts = np.zeros(n_groups, np.int64)
+    np.add.at(sums, gid, np.arange(e_cnt))
+    np.add.at(counts, gid, 1)
+    idx = np.arange(e_cnt)
+    return np.where(counts[gid] == 2, sums[gid] - idx, idx)
+
+
 def _graph_from_pairs(
     ci: np.ndarray,
     nj: np.ndarray,
@@ -256,8 +286,11 @@ def _graph_from_pairs(
     n: int,
     r_cut_bond: float,
     max_nbr_per_atom: int | None = None,
+    cap_mode: str = "symmetric",
 ) -> GraphIndices:
     """Assemble GraphIndices from pairs already filtered to r_cut_atom."""
+    if cap_mode not in ("symmetric", "per_center"):
+        raise ValueError(f"unknown cap_mode {cap_mode!r}")
     if max_nbr_per_atom is not None and ci.size > 0:
         # keep the closest max_nbr_per_atom neighbors per center (cap blowup)
         order = np.lexsort((dist, ci))
@@ -268,6 +301,15 @@ def _graph_from_pairs(
             if counts[c] < max_nbr_per_atom:
                 keep[idx] = True
                 counts[c] += 1
+        if cap_mode == "symmetric":
+            # symmetry-preserving cap (DESIGN.md §6): keep a directed pair
+            # iff BOTH directions survived the greedy per-center pass, so
+            # the capped graph stays pair-symmetric (Eu == E/2) and the
+            # undirected half-graph store (§5) never needs a singleton
+            # fallback.  Per-atom degree can undershoot the cap (a kept
+            # slot whose mirror lost out is dropped), never overshoot.
+            partner = _mirror_partner(ci, nj, images)
+            keep = keep & keep[partner]
         ci, nj, images, dist = ci[keep], nj[keep], images[keep], dist[keep]
 
     # Sorted-segment invariant: bonds sorted by center (stable — preserves
@@ -313,8 +355,18 @@ def build_graph(
     r_cut_atom: float = 6.0,
     r_cut_bond: float = 3.0,
     max_nbr_per_atom: int | None = None,
+    cap_mode: str = "symmetric",
 ) -> GraphIndices:
-    """Build G^a / G^b index arrays for one crystal (vectorized numpy)."""
+    """Build G^a / G^b index arrays for one crystal (vectorized numpy).
+
+    ``cap_mode`` governs how ``max_nbr_per_atom`` prunes:
+      - ``"symmetric"`` (default): a pair is kept iff both directions
+        survive the per-center closest-k pass — the capped graph stays
+        pair-symmetric, so Eu == E/2 and the undirected bond store packs
+        without an ``und_bonds`` override;
+      - ``"per_center"``: the legacy greedy cap (exact closest-k degree
+        per atom, may break pair symmetry).
+    """
     lat = np.asarray(crystal.lattice, dtype=np.float64)
     frac = np.asarray(crystal.frac_coords, dtype=np.float64)
     ci, nj, images, dist = _candidate_pairs(lat, frac, r_cut_atom)
@@ -322,6 +374,7 @@ def build_graph(
         ci, nj, images, dist,
         n=frac.shape[0], r_cut_bond=r_cut_bond,
         max_nbr_per_atom=max_nbr_per_atom,
+        cap_mode=cap_mode,
     )
 
 

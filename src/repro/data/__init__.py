@@ -4,15 +4,19 @@ Capacity sizing / packing policy lives in ``repro.batching``;
 ``capacity_for`` / ``ladder_for`` are re-exported here for convenience.
 """
 from .pipeline import (
-    BatchIterator, Prefetcher, build_device_batch, capacity_for, ladder_for,
-    stack_device_batches,
+    BalancedBatchIterator, BatchIterator, Prefetcher, build_device_batch,
+    capacity_for, ladder_for, stack_device_batches,
 )
-from .sampler import DefaultSampler, LoadBalanceSampler, cov_of_device_loads, device_loads
+from .sampler import (
+    CostBalanceSampler, DefaultSampler, LoadBalanceSampler,
+    cov_of_device_loads, device_loads,
+)
 from .synthetic import SyntheticConfig, SyntheticDataset, make_dataset
 
 __all__ = [
-    "BatchIterator", "Prefetcher", "build_device_batch", "capacity_for",
-    "ladder_for", "stack_device_batches", "DefaultSampler",
+    "BalancedBatchIterator", "BatchIterator", "Prefetcher",
+    "build_device_batch", "capacity_for", "ladder_for",
+    "stack_device_batches", "CostBalanceSampler", "DefaultSampler",
     "LoadBalanceSampler", "cov_of_device_loads", "device_loads",
     "SyntheticConfig", "SyntheticDataset", "make_dataset",
 ]

@@ -35,13 +35,22 @@ from repro.batching import (
     ladder_for,
     stack_device_batches,
 )
+from repro.batching.balance import (
+    StepPlan,
+    crystal_slots_for,
+    plan_microbatches,
+    shard_cost_totals,
+)
+from repro.batching.cost import DEFAULT_COST_MODEL, CostModel
 from repro.core.graph import CrystalGraphBatch
-from .sampler import DefaultSampler, LoadBalanceSampler
+from repro.core.losses import global_denominators
+from .sampler import CostBalanceSampler, DefaultSampler, LoadBalanceSampler
 from .synthetic import SyntheticDataset
 
 __all__ = [
-    "BatchIterator", "Prefetcher", "build_device_batch",
-    "stack_device_batches", "capacity_for", "ladder_for",
+    "BatchIterator", "BalancedBatchIterator", "Prefetcher",
+    "build_device_batch", "stack_device_batches", "capacity_for",
+    "ladder_for",
 ]
 
 
@@ -72,11 +81,12 @@ class BatchIterator:
         num_devices: int,
         caps: BatchCapacities | CapacityLadder,
         *,
-        load_balance: bool = True,
+        load_balance: bool | str = True,
         seed: int = 0,
         stack: bool | None = None,
         drop_last: bool = True,
         validate_layout: bool = True,
+        cost_model: CostModel | None = None,
     ):
         if num_devices < 1:
             raise ValueError(f"num_devices must be >= 1, got {num_devices}")
@@ -93,17 +103,29 @@ class BatchIterator:
         # epoch loops over a trusted dataset can turn it off — packing
         # establishes the invariant either way
         self.validate_layout = validate_layout
-        # every shard is padded to this many crystal slots so that shards of
-        # unequal length (non-divisible global batch) stack to one shape
-        self.crystal_slots = math.ceil(global_batch / num_devices)
         # stacked (num_devices, ...) leaves for shard_map; plain batch else
         self.stack = (num_devices > 1) if stack is None else stack
-        counts = ds.feature_counts()
-        self.sampler = (
-            LoadBalanceSampler(counts, seed)
-            if load_balance
-            else DefaultSampler(counts, seed)
-        )
+        if load_balance == "cost":
+            # LPT bin packing over a cost model (DESIGN.md §6): shards may
+            # hold unequal sample counts, so the static crystal-slot pad
+            # needs LPT's 2x headroom (crystal_slots_for) instead of
+            # ceil(batch / devices)
+            model = cost_model if cost_model is not None \
+                else DEFAULT_COST_MODEL
+            self.crystal_slots = crystal_slots_for(global_batch, num_devices)
+            self.sampler = CostBalanceSampler(
+                model.predict_dataset(ds), seed,
+                max_items=self.crystal_slots)
+        else:
+            # every shard is padded to this many crystal slots so that
+            # shards of unequal length (non-divisible global batch) stack
+            self.crystal_slots = math.ceil(global_batch / num_devices)
+            counts = ds.feature_counts()
+            self.sampler = (
+                LoadBalanceSampler(counts, seed)
+                if load_balance
+                else DefaultSampler(counts, seed)
+            )
 
     def _caps_for(self, shards: list[np.ndarray]) -> BatchCapacities:
         """One capacity for all shards of this step (shapes must match)."""
@@ -133,6 +155,110 @@ class BatchIterator:
             else:
                 assert len(batches) == 1
                 yield batches[0]
+
+
+class BalancedBatchIterator:
+    """Epoch iterator producing :class:`StepPlan` s (DESIGN.md §6).
+
+    One yielded plan = one optimizer step = ``num_micro`` microbatches,
+    each LPT-packed across devices by predicted cost and packed into its
+    OWN smallest-fitting capacity bucket.  The Trainer's accumulation
+    path (``repro.train.trainer.make_chgnet_accum_step_fns``) sums the
+    per-microbatch grads, whose global-denominator losses make the summed
+    update exactly equal a single big-batch step.
+
+    Compared to :class:`BatchIterator` this trades one big compiled step
+    for ``num_micro`` smaller ones: the big-crystal microbatch pays the
+    big bucket, the rest don't — padded-slot waste and the straggler gap
+    both drop (``benchmarks/bench_scaling`` measures the latter).
+    """
+
+    def __init__(
+        self,
+        ds: SyntheticDataset,
+        global_batch: int,
+        num_devices: int,
+        caps: BatchCapacities | CapacityLadder,
+        *,
+        num_micro: int = 1,
+        cost_model: CostModel | None = None,
+        seed: int = 0,
+        stack: bool | None = None,
+        drop_last: bool = True,
+        validate_layout: bool = True,
+    ):
+        if num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+        if global_batch < num_devices:
+            raise ValueError(
+                f"global_batch {global_batch} < num_devices {num_devices}")
+        self.ds = ds
+        self.global_batch = global_batch
+        self.num_devices = num_devices
+        self.caps = caps
+        self.num_micro = max(1, num_micro)
+        self.cost_model = cost_model if cost_model is not None \
+            else DEFAULT_COST_MODEL
+        self.costs = self.cost_model.predict_dataset(ds)
+        self.atoms = np.array([c.num_atoms for c in ds.crystals])
+        self.rng = np.random.default_rng(seed)
+        self.stack = (num_devices > 1) if stack is None else stack
+        self.drop_last = drop_last
+        self.validate_layout = validate_layout
+        # static per-shard crystal-slot pad: fixed per (global_batch,
+        # num_micro, num_devices), so the jit cache sees ONE crystal-axis
+        # shape per bucket regardless of how LPT splits a given step
+        self.crystal_slots = crystal_slots_for(
+            global_batch, num_devices, self.num_micro)
+
+    def _caps_for(self, shards: list[np.ndarray]) -> BatchCapacities:
+        """Smallest bucket fitting this microbatch's largest shard."""
+        if isinstance(self.caps, BatchCapacities):
+            return self.caps
+        na = nb = ng = 0
+        for s in shards:
+            na = max(na, sum(self.ds.crystals[i].num_atoms for i in s))
+            nb = max(nb, sum(self.ds.graphs[i].num_bonds for i in s))
+            ng = max(ng, sum(self.ds.graphs[i].num_angles for i in s))
+        return self.caps.bucket_for(na, nb, ng)
+
+    def plan_step(self, idx: np.ndarray) -> StepPlan:
+        """Pack one global batch's indices into a balanced StepPlan."""
+        idx = np.asarray(idx)
+        plan = plan_microbatches(
+            self.costs[idx], self.num_devices, self.num_micro,
+            max_items=self.crystal_slots)
+        micro_batches = []
+        shard_costs = np.zeros((len(plan), self.num_devices), np.float64)
+        for m, shards_pos in enumerate(plan):
+            shards = [idx[pos] for pos in shards_pos]
+            caps = self._caps_for(shards)
+            batches = [
+                build_device_batch(
+                    self.ds, s, caps,
+                    num_crystal_slots=self.crystal_slots,
+                    validate=self.validate_layout,
+                )
+                for s in shards
+            ]
+            shard_costs[m] = shard_cost_totals(self.costs, shards)
+            if self.stack:
+                micro_batches.append(stack_device_batches(batches))
+            else:
+                assert len(batches) == 1
+                micro_batches.append(batches[0])
+        denoms = global_denominators(
+            len(idx), int(self.atoms[idx].sum()))
+        return StepPlan(micro=micro_batches, denoms=denoms,
+                        shard_costs=shard_costs, num_real=len(idx))
+
+    def __iter__(self):
+        n = len(self.ds)
+        perm = self.rng.permutation(n)
+        from .sampler import _epoch_slices
+        for s, e in _epoch_slices(n, self.global_batch, self.num_devices,
+                                  self.drop_last):
+            yield self.plan_step(perm[s:e])
 
 
 class Prefetcher:

@@ -10,10 +10,17 @@ LoadBalanceSampler: sort the global batch by feature count ascending, then
 repeatedly pair the smallest remaining with the largest remaining sample
 and deal the pairs to devices round-robin — each device gets an equal
 number of samples whose (small+large) pair sums are nearly constant.
+
+CostBalanceSampler (DESIGN.md §6): LPT bin packing over a per-crystal
+*cost model* (``repro.batching.cost``) instead of equal counts — shards
+may hold different numbers of samples, but their predicted step costs are
+tight, which is what actually sets the synchronous step time.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.batching.balance import lpt_pack
 
 
 def _validate_batch(batch_size: int, num_devices: int) -> None:
@@ -112,6 +119,39 @@ class LoadBalanceSampler:
     def epoch(self, batch_size: int, num_devices: int, *,
               drop_last: bool = True):
         """Like ``DefaultSampler.epoch`` (incl. ``drop_last``), balanced."""
+        _validate_batch(batch_size, num_devices)
+        n = self.counts.shape[0]
+        perm = self.rng.permutation(n)
+        for s, e in _epoch_slices(n, batch_size, num_devices, drop_last):
+            idx = perm[s:e]
+            yield idx, self.assign(idx, num_devices)
+
+
+class CostBalanceSampler:
+    """LPT bin packing over predicted per-crystal costs (DESIGN.md §6).
+
+    Unlike :class:`LoadBalanceSampler` (equal counts, paired magnitudes),
+    shards may hold *different sample counts* — a device can take one
+    giant crystal while another takes three small ones.  ``max_items``
+    caps the per-shard count so downstream packing can pad every shard to
+    a static number of crystal slots
+    (``repro.batching.balance.crystal_slots_for``).
+    """
+
+    def __init__(self, costs: np.ndarray, seed: int = 0,
+                 max_items: int | None = None):
+        self.counts = np.asarray(costs, np.float64)  # sampler-API name
+        self.rng = np.random.default_rng(seed)
+        self.max_items = max_items
+
+    def assign(self, idx: np.ndarray, num_devices: int) -> list[np.ndarray]:
+        shards = lpt_pack(self.counts[idx], num_devices,
+                          max_items=self.max_items)
+        return [np.asarray(idx)[s] for s in shards]
+
+    def epoch(self, batch_size: int, num_devices: int, *,
+              drop_last: bool = True):
+        """Same contract as the other samplers: (global_idx, shards)."""
         _validate_batch(batch_size, num_devices)
         n = self.counts.shape[0]
         perm = self.rng.permutation(n)

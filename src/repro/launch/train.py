@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import itertools
+from functools import partial
 
 import jax
 
@@ -59,11 +60,29 @@ def train_chgnet(args):
         tr = Trainer(model_cfg, train_cfg, mesh=mesh, ckpt_dir=args.ckpt,
                      ckpt_every=args.ckpt_every)
         tr.maybe_restore()
-        it = BatchIterator(ds, args.batch, n_dev, caps,
-                           stack=n_dev > 1, load_balance=True)
-        batches = Prefetcher(itertools.islice(
-            itertools.cycle(iter(it)), args.steps - tr.step))
-        hist = tr.train(batches)
+        if args.balance == "cost" or args.accum > 1:
+            # cost-model bin packing + gradient accumulation (DESIGN.md
+            # §6): StepPlans re-bin-pack over the surviving mesh if a
+            # device drops mid-run (elastic_train)
+            from repro.data import BalancedBatchIterator
+            from repro.runtime import elastic_train
+
+            def batches_fn(num_devices):
+                it = BalancedBatchIterator(
+                    ds, args.batch, num_devices, caps,
+                    num_micro=max(args.accum, 1),
+                    stack=tr.mesh is not None)
+                return Prefetcher(itertools.islice(
+                    itertools.cycle(iter(it)),
+                    max(args.steps - tr.step, 0)))
+
+            hist = elastic_train(tr, batches_fn, max_steps=args.steps)
+        else:
+            it = BatchIterator(ds, args.batch, n_dev, caps,
+                               stack=n_dev > 1, load_balance=True)
+            batches = Prefetcher(itertools.islice(
+                itertools.cycle(iter(it)), args.steps - tr.step))
+            hist = tr.train(batches)
         tr.save()
         if hist:
             print(f"steps {tr.step - len(hist)}..{tr.step}: "
@@ -92,7 +111,9 @@ def train_lm(args):
     rng = np.random.default_rng(0)
     kw = dict(ssd_chunk=8) if cfg.family == "hybrid" else {}
 
-    @jax.jit
+    # donate params/opt (rebound every iteration) so the weights and
+    # moments never exist twice — same contract as the CHGNet train steps
+    @partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt, *batch):
         loss, grads = jax.value_and_grad(
             lambda p: fns.loss(cfg, p, *batch, **kw))(params)
@@ -142,6 +163,16 @@ def main():
                          "and e^a/e^b run once per pair (Eu = E/2)")
     ap.add_argument("--grad-reduce", default="bucketed",
                     choices=["plain", "bucketed", "compressed"])
+    ap.add_argument("--balance", default="pair",
+                    choices=["pair", "cost"],
+                    help="DP sharding: pair = paper Fig. 4 "
+                         "smallest+largest pairing (equal counts); cost = "
+                         "LPT bin packing over the per-crystal cost model "
+                         "(DESIGN.md §6), with rebalance-on-fault")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="microbatches per optimizer step (DESIGN.md §6 "
+                         "gradient accumulation across capacity buckets); "
+                         ">1 implies the balanced StepPlan path")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--buckets", type=int, default=2,

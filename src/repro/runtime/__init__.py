@@ -1,10 +1,18 @@
 """Distributed runtime: checkpointing, elasticity, fault tolerance."""
 from .checkpoint import latest_step, list_checkpoints, restore_checkpoint, save_checkpoint
-from .elastic import elastic_restore, per_device_batch, reshard
-from .fault import FaultInjector, StragglerWatch, run_with_restarts
+from .elastic import (
+    elastic_restore, elastic_train, per_device_batch, reshard,
+    surviving_mesh,
+)
+from .fault import (
+    DeviceDropInjector, DeviceLossError, FaultInjector, StragglerWatch,
+    run_with_restarts,
+)
 
 __all__ = [
     "latest_step", "list_checkpoints", "restore_checkpoint", "save_checkpoint",
-    "elastic_restore", "per_device_batch", "reshard",
-    "FaultInjector", "StragglerWatch", "run_with_restarts",
+    "elastic_restore", "elastic_train", "per_device_batch", "reshard",
+    "surviving_mesh",
+    "DeviceDropInjector", "DeviceLossError", "FaultInjector",
+    "StragglerWatch", "run_with_restarts",
 ]

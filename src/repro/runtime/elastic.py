@@ -7,15 +7,24 @@ Checkpoints are mesh-independent (full host arrays), so elasticity is:
      (per-device batch = global_batch // num_devices; the global batch —
      and therefore the Eq. 14 LR — is preserved, so the optimizer
      trajectory is unchanged across scale events).
+
+In-run elasticity (DESIGN.md §6): a device drop surfaces as
+``fault.DeviceLossError``; ``surviving_mesh`` rebuilds the mesh from the
+survivors and ``elastic_train`` re-bin-packs the data over it (the
+balanced iterator is a function of ``num_devices``) and keeps training —
+params never touch disk, the global batch and Eq. 14 LR are preserved,
+only the per-device share grows.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Iterable
 
 import jax
-from jax.sharding import NamedSharding
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
 
 from .checkpoint import restore_checkpoint
+from .fault import DeviceLossError
 
 
 def reshard(tree: Any, mesh, spec_fn: Callable[[str, Any], Any]) -> Any:
@@ -51,3 +60,67 @@ def per_device_batch(global_batch: int, num_devices: int) -> int:
             f"global batch {global_batch} not divisible by {num_devices} devices"
         )
     return global_batch // num_devices
+
+
+def surviving_mesh(mesh: Mesh, failed_index: int) -> Mesh:
+    """1-D mesh over the survivors after losing ``failed_index``.
+
+    Axis names are preserved; device order is otherwise unchanged, so a
+    second drop can name positions in the *new* mesh.  Raises if the
+    index is out of range or no device survives.
+    """
+    devs = list(np.asarray(mesh.devices).flatten())
+    if not 0 <= failed_index < len(devs):
+        raise ValueError(
+            f"failed_index {failed_index} out of range for "
+            f"{len(devs)}-device mesh")
+    survivors = [d for i, d in enumerate(devs) if i != failed_index]
+    if not survivors:
+        raise ValueError("no surviving devices")
+    return Mesh(np.array(survivors), mesh.axis_names)
+
+
+def elastic_train(
+    trainer,
+    batches_fn: Callable[[int], Iterable],
+    *,
+    max_steps: int,
+    fault_injector=None,
+    max_shrinks: int | None = None,
+) -> list[dict]:
+    """Train to ``max_steps``, shrinking the mesh on every device drop.
+
+    ``batches_fn(num_devices)`` must build a fresh batch iterable for
+    that device count — with ``data.BalancedBatchIterator`` this is where
+    the re-bin-packing over the surviving mesh happens (DESIGN.md §6
+    rebalance-on-fault protocol).  On :class:`fault.DeviceLossError` the
+    trainer is re-targeted via ``Trainer.rebuild_mesh`` (params pulled to
+    host, step fns rebuilt from the compile cache) and the loop resumes
+    at the SAME step with the same optimizer state — no checkpoint
+    round-trip, no lost steps.
+    """
+    history: list[dict] = []
+    shrinks = 0
+    while trainer.step < max_steps:
+        before = trainer.step
+        try:
+            history.extend(trainer.train(
+                batches_fn(trainer.num_devices),
+                max_steps=max_steps,
+                fault_injector=fault_injector,
+            ))
+        except DeviceLossError as loss_err:
+            history.extend(getattr(loss_err, "partial_history", []))
+            shrinks += 1
+            if max_shrinks is not None and shrinks > max_shrinks:
+                raise
+            if trainer.mesh is None:
+                raise  # single-device runs have nothing to shrink to
+            mesh = surviving_mesh(trainer.mesh, loss_err.failed_index)
+            # a 1-device mesh still works under shard_map; keep it so the
+            # step-fn cache stays keyed consistently
+            trainer.rebuild_mesh(mesh)
+            continue
+        if trainer.step == before:
+            break  # exhausted batches without progress: caller's epoch ended
+    return history

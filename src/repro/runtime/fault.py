@@ -57,6 +57,42 @@ class FaultInjector:
             raise RuntimeError(f"injected fault at step {step}")
 
 
+class DeviceLossError(RuntimeError):
+    """A device dropped out of the mesh mid-run (DESIGN.md §6).
+
+    Carries which mesh position failed so the elastic path
+    (``runtime.elastic.surviving_mesh``) can rebuild the mesh from the
+    survivors and re-bin-pack the data over them — instead of the
+    restart-from-checkpoint path, which assumes the same device count
+    comes back.
+    """
+
+    def __init__(self, failed_index: int, msg: str | None = None):
+        super().__init__(msg or f"device {failed_index} lost")
+        self.failed_index = failed_index
+
+
+class DeviceDropInjector:
+    """Deterministic device-loss injection (duck-types FaultInjector).
+
+    Raises :class:`DeviceLossError` once at ``fail_at_step``, naming
+    ``device_index`` as the lost mesh position.
+    """
+
+    def __init__(self, fail_at_step: int, device_index: int = 0):
+        self.fail_at = fail_at_step
+        self.device_index = device_index
+        self.fired = False
+
+    def maybe_fail(self, step: int):
+        if not self.fired and step == self.fail_at:
+            self.fired = True
+            raise DeviceLossError(
+                self.device_index,
+                f"injected loss of device {self.device_index} "
+                f"at step {step}")
+
+
 def run_with_restarts(
     loop_fn: Callable[[int], Any],
     *,

@@ -2,6 +2,7 @@
 from .trainer import (
     TrainConfig,
     Trainer,
+    make_chgnet_accum_step_fns,
     make_chgnet_step_fns,
     make_dp_eval_step,
     make_dp_serve_step,
@@ -9,6 +10,7 @@ from .trainer import (
 )
 
 __all__ = [
-    "TrainConfig", "Trainer", "make_chgnet_step_fns",
-    "make_dp_eval_step", "make_dp_serve_step", "make_dp_train_step",
+    "TrainConfig", "Trainer", "make_chgnet_accum_step_fns",
+    "make_chgnet_step_fns", "make_dp_eval_step", "make_dp_serve_step",
+    "make_dp_train_step",
 ]

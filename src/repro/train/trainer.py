@@ -33,9 +33,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.batching import CompileCache, global_compile_cache
+from repro.batching.balance import StepPlan
 from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
 from repro.core.graph import CrystalGraphBatch
-from repro.core.losses import LossWeights, chgnet_loss
+from repro.core.losses import (
+    LossWeights,
+    chgnet_loss,
+    chgnet_loss_sums,
+    metrics_from_sums,
+)
 from repro.distributed.collectives import bucketed_psum, compressed_psum
 from repro.optim.adam import AdamConfig, adam_init, adam_update
 from repro.optim.grad import (
@@ -216,15 +222,19 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
 
 def make_dp_train_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
                        mesh: Mesh, axis: str = "data",
-                       *, cache: CompileCache | None = None):
+                       *, cache: CompileCache | None = None,
+                       donate: bool = True):
     """Train step over per-device graph shards (leading axis = devices).
 
     batch leaves: (num_devices, ...) sharded P(axis); params replicated.
+    ``donate`` mirrors the single-device contract (params/opt_state are
+    consumed) and is part of the compile-cache key.
     """
     if cache is not None:
         return cache.get(
-            ("chgnet_dp_train", model_cfg, train_cfg, mesh, axis),
-            lambda: make_dp_train_step(model_cfg, train_cfg, mesh, axis),
+            ("chgnet_dp_train", model_cfg, train_cfg, mesh, axis, donate),
+            lambda: make_dp_train_step(model_cfg, train_cfg, mesh, axis,
+                                       donate=donate),
         )
 
     def lr_at(step):
@@ -269,17 +279,28 @@ def make_dp_train_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
         check_rep=False,
     )
     # donate params/opt_state (same contract as the single-device step)
-    return jax.jit(sharded, donate_argnums=(0, 1))
+    return jax.jit(sharded, donate_argnums=(0, 1) if donate else ())
 
 
 def make_dp_eval_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
                       mesh: Mesh, axis: str = "data",
-                      *, cache: CompileCache | None = None):
-    """Replicated-params eval over per-device graph shards -> pmean metrics."""
+                      *, cache: CompileCache | None = None,
+                      donate: bool = False):
+    """Replicated-params eval over per-device graph shards -> pmean metrics.
+
+    ``donate`` (default OFF, matching single-device eval: eval batches are
+    legitimately reused) consumes the batch — opt in for one-shot eval
+    sweeps where every packed batch is fresh.  Note eval outputs are
+    scalar metrics, so XLA can never actually *alias* a donated batch
+    buffer here — donation only releases the buffers early; the flag
+    still rides the compile-cache key so donated/undonated builds never
+    collide.
+    """
     if cache is not None:
         return cache.get(
-            ("chgnet_dp_eval", model_cfg, train_cfg, mesh, axis),
-            lambda: make_dp_eval_step(model_cfg, train_cfg, mesh, axis),
+            ("chgnet_dp_eval", model_cfg, train_cfg, mesh, axis, donate),
+            lambda: make_dp_eval_step(model_cfg, train_cfg, mesh, axis,
+                                      donate=donate),
         )
 
     def local_eval(params, batch):
@@ -291,17 +312,24 @@ def make_dp_eval_step(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
     return jax.jit(shard_map(
         local_eval, mesh=mesh,
         in_specs=(P(), P(axis)), out_specs=P(), check_rep=False,
-    ))
+    ), donate_argnums=(1,) if donate else ())
 
 
 def make_dp_serve_step(model_cfg: CHGNetConfig, mesh: Mesh,
                        axis: str = "data",
-                       *, cache: CompileCache | None = None):
-    """Replicated-params inference; outputs keep the leading device axis."""
+                       *, cache: CompileCache | None = None,
+                       donate: bool = True):
+    """Replicated-params inference; outputs keep the leading device axis.
+
+    ``donate`` (default on, same contract as single-device serve): each
+    packed batch is consumed exactly once per prediction, so its float
+    buffers can back the outputs; params are never donated.
+    """
     if cache is not None:
         return cache.get(
-            ("chgnet_dp_serve", model_cfg, mesh, axis),
-            lambda: make_dp_serve_step(model_cfg, mesh, axis),
+            ("chgnet_dp_serve", model_cfg, mesh, axis, donate),
+            lambda: make_dp_serve_step(model_cfg, mesh, axis,
+                                       donate=donate),
         )
 
     def local_serve(params, batch):
@@ -312,7 +340,111 @@ def make_dp_serve_step(model_cfg: CHGNetConfig, mesh: Mesh,
     return jax.jit(shard_map(
         local_serve, mesh=mesh,
         in_specs=(P(), P(axis)), out_specs=P(axis), check_rep=False,
-    ))
+    ), donate_argnums=(1,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation across uneven capacity buckets (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def make_chgnet_accum_step_fns(model_cfg: CHGNetConfig,
+                               train_cfg: TrainConfig,
+                               *, mesh: Mesh | None = None,
+                               axis: str = "data",
+                               cache: CompileCache | None = None,
+                               donate: bool = True):
+    """Returns ``(grad_step, apply_step)`` for bucketed accumulation.
+
+    One optimizer step = several microbatches, each packed to its OWN
+    (smallest-fitting) capacity bucket by the balancer
+    (``repro.batching.balance.plan_microbatches``):
+
+      - ``grad_step(params, batch, denoms, scale) -> (grads, sums)``
+        computes the gradient of this microbatch's *partial* loss —
+        masked Huber sums over the step-global ``denoms``
+        (``losses.global_denominators``) times ``scale`` (the loss-scale
+        value, 1.0 on the f32 path).  Because the denominators are
+        global, microbatch losses/grads are exactly additive: summing
+        them reproduces the single-big-batch gradient bit-for-bit in
+        expectation and to ~1e-6 in f32 practice (reassociation only).
+        In mesh mode the shard_map psum performs the *device* half of
+        that same sum (no ``/num_devices`` — the global denominators
+        already normalize), so idle all-padding shards add exact zeros.
+      - ``apply_step(params, opt_state, grads, sums, denoms, step)``
+        runs the shared update tail (unscale -> clip -> Adam ->
+        skip-on-nonfinite -> scaler update).  Skip-on-inf composes across
+        microbatches for free: an inf/nan in ANY microbatch poisons the
+        accumulated sum, so the one finite-check in ``_apply_grads``
+        rejects the whole step and backs the scale off, exactly like a
+        single-batch overflow.
+
+    ``donate``: apply_step donates params/opt_state (the Trainer rebinds
+    both).  grad_step donates NOTHING: its outputs are param-shaped
+    grads plus scalar sums, so no batch buffer could ever back an output
+    — donating the batch would only emit unusable-donation warnings.
+    """
+    if cache is not None:
+        key = ("chgnet_accum", model_cfg, train_cfg, mesh, axis, donate)
+        return cache.get(key, lambda: make_chgnet_accum_step_fns(
+            model_cfg, train_cfg, mesh=mesh, axis=axis, donate=donate))
+
+    def lr_at(step):
+        return cosine_annealing(
+            step, train_cfg.total_steps, train_cfg.init_lr,
+            warmup_steps=train_cfg.warmup_steps,
+        )
+
+    scale_kind = train_cfg.loss_scale.resolved_kind(model_cfg.precision)
+
+    def local_grads(params, batch, denoms, scale):
+        def loss_fn(p):
+            pred = chgnet_apply(p, model_cfg, batch)
+            loss, sums = chgnet_loss_sums(pred, batch, train_cfg.loss,
+                                          denoms)
+            return loss * scale.astype(loss.dtype), sums
+
+        (_, sums), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return grads, sums
+
+    if mesh is None:
+        grad_step = jax.jit(local_grads)
+    else:
+        def local_step(params, batch, denoms, scale):
+            local_batch = jax.tree.map(lambda x: x[0], batch)
+            grads, sums = local_grads(params, local_batch, denoms, scale)
+            # device dimension of the global sum: psum partial grads/sums,
+            # NO division — global denominators already normalize, and
+            # all-padding shards (devices idled by a small microbatch)
+            # contribute exact zeros
+            if train_cfg.grad_reduce == "plain":
+                grads = jax.lax.psum(grads, axis)
+            elif train_cfg.grad_reduce == "bucketed":
+                grads = bucketed_psum(grads, axis)
+            elif train_cfg.grad_reduce == "compressed":
+                grads = compressed_psum(grads, axis)
+            else:
+                raise ValueError(train_cfg.grad_reduce)
+            sums = jax.lax.psum(sums, axis)
+            return grads, sums
+
+        grad_step = jax.jit(shard_map(
+            local_step, mesh=mesh,
+            in_specs=(P(), P(axis), P(), P()),
+            out_specs=(P(), P()),
+            check_rep=False,
+        ))
+
+    # donate params/opt_state only: grads' buffers can't back any output
+    # (params/opt_state already alias them all), so donating them would
+    # just emit unusable-donation warnings every trace
+    @partial(jax.jit, donate_argnums=(0, 1) if donate else ())
+    def apply_step(params, opt_state, grads, sums, denoms, step):
+        params, opt_state, extra = _apply_grads(
+            grads, opt_state, params, lr_at(step), train_cfg, scale_kind)
+        metrics = metrics_from_sums(sums, denoms)
+        return params, opt_state, dict(metrics, **extra)
+
+    return grad_step, apply_step
 
 
 def _strip_precision_state(state: dict) -> dict:
@@ -367,23 +499,49 @@ class Trainer:
         cache = compile_cache if compile_cache is not None \
             else global_compile_cache()
         self.compile_cache = cache
-        if mesh is not None:
+        self._build_steps()
+        from repro.runtime.fault import StragglerWatch
+
+        self.straggler = StragglerWatch()
+
+    def _build_steps(self):
+        """(Re)build the step functions for the current ``self.mesh``."""
+        cache, model_cfg, train_cfg = (self.compile_cache, self.model_cfg,
+                                       self.train_cfg)
+        if self.mesh is not None:
             # build all three steps: a mesh-mode Trainer must be able to
             # eval and serve too (previously only _train_step existed, so
             # multi-device eval/serve hit undefined attributes)
-            self._train_step = make_dp_train_step(model_cfg, train_cfg, mesh,
-                                                  cache=cache)
-            self._eval_step = make_dp_eval_step(model_cfg, train_cfg, mesh,
-                                                cache=cache)
-            self._serve_step = make_dp_serve_step(model_cfg, mesh,
+            self._train_step = make_dp_train_step(model_cfg, train_cfg,
+                                                  self.mesh, cache=cache)
+            self._eval_step = make_dp_eval_step(model_cfg, train_cfg,
+                                                self.mesh, cache=cache)
+            self._serve_step = make_dp_serve_step(model_cfg, self.mesh,
                                                   cache=cache)
         else:
             self._train_step, self._eval_step, self._serve_step = (
                 make_chgnet_step_fns(model_cfg, train_cfg, cache=cache)
             )
-        from repro.runtime.fault import StragglerWatch
+        # accumulation steps are built lazily on the first StepPlan
+        self._accum_fns = None
 
-        self.straggler = StragglerWatch()
+    @property
+    def num_devices(self) -> int:
+        return int(self.mesh.devices.size) if self.mesh is not None else 1
+
+    def rebuild_mesh(self, mesh: Mesh | None):
+        """Re-target the trainer at a (possibly shrunken) mesh.
+
+        The elastic path (``runtime.elastic.elastic_train``) calls this
+        after a device drop: params/opt_state are pulled to host first so
+        nothing references the dead device's buffers, then the step
+        functions are rebuilt (compile-cache keyed by mesh, so returning
+        to a previously-seen mesh retraces nothing).
+        """
+        self.params = jax.device_get(self.params)
+        self.opt_state = jax.device_get(self.opt_state)
+        self.mesh = mesh
+        self._build_steps()
 
     # -- checkpoint hooks ---------------------------------------------------
     def state(self):
@@ -477,22 +635,69 @@ class Trainer:
         """One inference step (E/F/sigma/magmom); Table II's workload."""
         return self._serve_step(self.params, batch)
 
+    # -- gradient accumulation (DESIGN.md §6) --------------------------------
+    def _get_accum_fns(self):
+        if self._accum_fns is None:
+            self._accum_fns = make_chgnet_accum_step_fns(
+                self.model_cfg, self.train_cfg, mesh=self.mesh,
+                cache=self.compile_cache)
+        return self._accum_fns
+
+    def _step_plan(self, plan: StepPlan):
+        """One optimizer step over a balanced multi-bucket StepPlan:
+        per-microbatch grads (global-denominator partial losses) are
+        summed on device, then applied once — numerically the same update
+        a single big-batch step would take (tests: test_balance)."""
+        grad_step, apply_step = self._get_accum_fns()
+        scaler = self.opt_state.get("loss_scale")
+        scale = scaler["scale"] if scaler is not None \
+            else jnp.asarray(1.0, jnp.float32)
+        denoms = {k: jnp.asarray(v) for k, v in plan.denoms.items()}
+        gsum = ssum = None
+        for micro in plan.micro:
+            grads, sums = grad_step(self.params, micro, denoms, scale)
+            if gsum is None:
+                gsum, ssum = grads, sums
+            else:
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                ssum = jax.tree.map(jnp.add, ssum, sums)
+        return apply_step(self.params, self.opt_state, gsum, ssum, denoms,
+                          jnp.asarray(self.step))
+
     # -- loop -----------------------------------------------------------------
     def train(self, batches, max_steps: int | None = None,
               fault_injector=None) -> list[dict]:
         history = []
+        try:
+            return self._train_loop(batches, history, max_steps,
+                                    fault_injector)
+        except Exception as exc:
+            # steps completed before the failure are real progress — let
+            # recovery paths (runtime.elastic.elastic_train) keep their
+            # metrics instead of losing them with the raise
+            exc.partial_history = history
+            raise
+
+    def _train_loop(self, batches, history, max_steps, fault_injector):
         for batch in batches:
             if max_steps is not None and self.step >= max_steps:
                 break
             t0 = time.perf_counter()
             if fault_injector is not None:
                 fault_injector.maybe_fail(self.step)
-            self.params, self.opt_state, metrics = self._train_step(
-                self.params, self.opt_state, batch, jnp.asarray(self.step)
-            )
+            if isinstance(batch, StepPlan):
+                self.params, self.opt_state, metrics = self._step_plan(batch)
+            else:
+                self.params, self.opt_state, metrics = self._train_step(
+                    self.params, self.opt_state, batch,
+                    jnp.asarray(self.step)
+                )
             loss = float(metrics["loss"])
-            if not jnp.isfinite(loss):
-                # NaN guard: roll back rather than poison the run
+            if not jnp.isfinite(loss) and metrics.get("grads_finite", 1.0):
+                # NaN guard: roll back rather than poison the run.  A
+                # scaler-skipped overflow step (grads_finite == 0) is NOT
+                # poison: the update was rejected and the scale backed
+                # off, so params are untouched (DESIGN.md §4)
                 if self.maybe_restore():
                     continue
                 raise FloatingPointError(f"non-finite loss at step {self.step}")

@@ -110,15 +110,17 @@ def test_mirror_maps_self_image_bonds():
 
 
 def test_mirror_maps_capped_asymmetry_falls_back():
-    """max_nbr_per_atom keeps the closest neighbors per CENTER, which can
-    drop one direction of a pair — unmatched bonds must become singleton
-    undirected entries (sign +1, own orientation), keeping the maps exact.
+    """cap_mode="per_center" keeps the closest neighbors per CENTER, which
+    can drop one direction of a pair — unmatched bonds must become
+    singleton undirected entries (sign +1, own orientation), keeping the
+    maps exact.  (The default cap_mode="symmetric" never breaks symmetry;
+    see test_symmetric_cap_preserves_pair_symmetry.)
     """
     rng = np.random.default_rng(7)
     found_asym = False
     for i in range(12):
         c = _crystal(rng, int(rng.integers(4, 10)), labels=False)
-        g = build_graph(c, max_nbr_per_atom=3)
+        g = build_graph(c, max_nbr_per_atom=3, cap_mode="per_center")
         _check_maps(g.bond_center, g.bond_nbr, g.bond_image,
                     g.bond_pair, g.bond_sign, g.und_rep)
         assert g.num_bonds / 2 <= g.num_undirected <= g.num_bonds
@@ -132,14 +134,44 @@ def test_mirror_maps_capped_asymmetry_falls_back():
     assert found_asym, "cap never broke symmetry; weak test inputs"
 
 
+def test_symmetric_cap_preserves_pair_symmetry():
+    """Default cap_mode="symmetric" (DESIGN.md §6): a pair survives
+    max_nbr_per_atom iff both directions do — Eu == E/2 exactly, packing
+    needs no und_bonds override, and the kept set is a subset of the
+    per-center cap's (degree can undershoot, never overshoot)."""
+    rng = np.random.default_rng(7)
+    checked_pack = False
+    for i in range(8):
+        c = _crystal(rng, int(rng.integers(4, 10)), labels=False)
+        g = build_graph(c, max_nbr_per_atom=3)
+        _check_maps(g.bond_center, g.bond_nbr, g.bond_image,
+                    g.bond_pair, g.bond_sign, g.und_rep)
+        assert 2 * g.num_undirected == g.num_bonds
+        # every directed bond's mirror is present
+        fwd = {(int(a), int(b), *map(int, n))
+               for a, b, n in zip(g.bond_center, g.bond_nbr, g.bond_image)}
+        assert all((b, a, *[-x for x in n]) in fwd for a, b, *n in
+                   ((t[0], t[1], *t[2:]) for t in fwd))
+        # subset of the per-center keep, and degree never above the cap
+        gp = build_graph(c, max_nbr_per_atom=3, cap_mode="per_center")
+        assert g.num_bonds <= gp.num_bonds
+        assert np.bincount(g.bond_center).max(initial=0) <= 3
+        if g.num_bonds and not checked_pack:
+            # default bonds//2-derived und capacity fits (no override)
+            caps = BatchCapacities(16, g.num_bonds, g.num_angles + 4)
+            validate_layout(batch_crystals([c], [g], caps))
+            checked_pack = True
+    assert checked_pack
+
+
 def test_capped_asymmetric_pack_needs_und_override():
-    """Eu > bonds//2 after capping: default caps raise with a pointed
-    message; an explicit und_bonds override packs and validates."""
+    """Eu > bonds//2 after per-center capping: default caps raise with a
+    pointed message; an explicit und_bonds override packs and validates."""
     rng = np.random.default_rng(11)
     cs, gs = [], []
     for _ in range(6):
         c = _crystal(rng, 8, labels=False)
-        g = build_graph(c, max_nbr_per_atom=3)
+        g = build_graph(c, max_nbr_per_atom=3, cap_mode="per_center")
         if 2 * g.num_undirected != g.num_bonds:
             cs.append(c)
             gs.append(g)
@@ -189,10 +221,11 @@ if HAVE_HYP:
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=30, deadline=None)
-    @given(st.integers(0, 2**31 - 1), st.integers(1, 9), st.booleans())
-    def test_mirror_maps_hypothesis_sweep(seed, n, cap):
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 9),
+           st.sampled_from([None, "symmetric", "per_center"]))
+    def test_mirror_maps_hypothesis_sweep(seed, n, cap_mode):
         """Ragged sweep over random cells: odd image vectors (skewed tiny
-        cells), self-image bonds (n=1), and capped asymmetry all keep the
+        cells), self-image bonds (n=1), and both cap modes all keep the
         maps total and exact."""
         rng = np.random.default_rng(seed)
         lat = np.eye(3) * rng.uniform(2.2, 6.0) \
@@ -201,10 +234,12 @@ if HAVE_HYP:
             lat += np.eye(3) * 2.0
         c = Crystal(lattice=lat, frac_coords=rng.random((n, 3)),
                     atomic_numbers=rng.integers(1, 90, n))
-        g = build_graph(c, max_nbr_per_atom=4 if cap else None)
+        g = build_graph(c, max_nbr_per_atom=None if cap_mode is None else 4,
+                        cap_mode=cap_mode or "symmetric")
         _check_maps(g.bond_center, g.bond_nbr, g.bond_image,
                     g.bond_pair, g.bond_sign, g.und_rep)
-        if not cap:
+        if cap_mode != "per_center":
+            # uncapped AND symmetric-capped graphs are pair-symmetric
             assert 2 * g.num_undirected == g.num_bonds
         # expansion through the maps reproduces every directed bond's
         # geometry exactly (the property the model relies on)
