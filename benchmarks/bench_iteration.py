@@ -395,6 +395,104 @@ def _check_precision_bar(rows, enforce: bool | None = None):
               f"{f32_peak:,} peak temp bytes")
 
 
+def run_stress_mode_sweep(
+    batch_size: int = 16,
+    iters: int = 3,
+    stress_modes: tuple = ("mlp", "bond_virial"),
+    conv_impls: tuple = ("unfused", "fused"),
+    check: bool = True,
+):
+    """stress_mode x conv_impl sweep of one train step at FIXED capacities.
+
+    The DESIGN.md §7 claim as a tracked trajectory: per combo, step wall
+    time, atoms/s, and compiled peak temp memory for the mlp stress head
+    vs the unfused bond-virial reference vs the fused-epilogue bond
+    virial.  Acceptance bars:
+
+      - ENFORCED everywhere (interpret mode / CPU too — the whole path is
+        f32, no emulation caveat): the fused bond-virial row must not
+        exceed the unfused bond-virial row's peak temp memory — the
+        epilogue reuses the force readout's VMEM-resident operands, so
+        the (E, 3, 3) outer-product workspace must never appear;
+      - atoms/s vs the mlp head is a <= 5% regression bar, enforced on
+        TPU only (interpret-mode wall clock measures the Pallas
+        interpreter, not Mosaic) and reported elsewhere.
+    """
+    ds, caps, batch = _bench_batch(batch_size)
+    real_atoms = int(sum(c.num_atoms for c in ds.crystals))
+
+    w = LossWeights()
+    rows = []
+    for conv in conv_impls:
+        for mode in stress_modes:
+            cfg = CHGNetConfig(readout="direct", conv_impl=conv,
+                               stress_mode=mode)
+            params = chgnet_init(jax.random.PRNGKey(0), cfg)
+            grad_fn = jax.jit(jax.grad(
+                lambda p, b, cfg=cfg: chgnet_loss_fn(p, cfg, b, w)[0]))
+            compiled = grad_fn.lower(params, batch).compile()
+            mem = compiled.memory_analysis()
+            step_s = _time(grad_fn, params, batch, iters=iters)
+            rows.append({
+                "name": f"iter_stress_{mode}_conv_{conv}",
+                "stress_mode": mode,
+                "conv_impl": conv,
+                "step_us": step_s * 1e6,
+                "atoms_per_s": real_atoms / step_s,
+                "peak_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                          None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "note": (f"B={batch_size} atoms={real_atoms} "
+                         f"caps=({caps.atoms},{caps.bonds},{caps.angles})"),
+            })
+    if check:
+        _check_stress_mode_bar(rows)
+    return rows
+
+
+def _check_stress_mode_bar(rows, enforce_throughput: bool | None = None):
+    """DESIGN.md §7 bars (see run_stress_mode_sweep docstring): the memory
+    bar FAILS the bench step on every backend; the atoms/s bar fails on
+    TPU and reports elsewhere."""
+    if enforce_throughput is None:
+        enforce_throughput = jax.default_backend() == "tpu"
+    by = {(r["stress_mode"], r["conv_impl"]): r for r in rows}
+    fused = by.get(("bond_virial", "fused"))
+    unfused = by.get(("bond_virial", "unfused"))
+    if fused is not None and unfused is not None:
+        fp, up = fused["peak_temp_bytes"], unfused["peak_temp_bytes"]
+        if fp is None or up is None:
+            print("WARNING: no memory_analysis on this backend; "
+                  "§7 memory bar not checked")
+        elif fp > up:
+            raise RuntimeError(
+                f"fused bond-virial peak temp memory exceeds the unfused "
+                f"reference: {fp:,} > {up:,} bytes — DESIGN.md §7 requires "
+                f"the epilogue to add no workspace (the (E,3,3) outer-"
+                f"product tensor must never materialize)")
+        else:
+            print(f"stress-mode memory bar OK: fused virial {fp:,} <= "
+                  f"unfused virial {up:,} peak temp bytes")
+    for conv in ("unfused", "fused"):
+        vir, mlp = by.get(("bond_virial", conv)), by.get(("mlp", conv))
+        if vir is None or mlp is None:
+            continue
+        if vir["atoms_per_s"] < 0.95 * mlp["atoms_per_s"]:
+            msg = (f"bond_virial atoms/s regressed >5% vs the mlp stress "
+                   f"head: {vir['atoms_per_s']:.0f} vs "
+                   f"{mlp['atoms_per_s']:.0f} (conv_impl={conv!r}) — "
+                   f"DESIGN.md §7")
+            if enforce_throughput:
+                raise RuntimeError(msg)
+            print(f"NOTE ({jax.default_backend()} backend, throughput bar "
+                  f"not enforced): " + msg)
+        else:
+            print(f"stress-mode throughput OK (conv={conv}): virial "
+                  f"{vir['atoms_per_s']:.0f} vs mlp "
+                  f"{mlp['atoms_per_s']:.0f} atoms/s")
+
+
 def _check_memory_bar(rows):
     """Enforce the §3 bar so a regression FAILS the CI bench step instead
     of silently landing in the artifact: every fused row must undercut its
@@ -433,6 +531,11 @@ if __name__ == "__main__":
                          "memory + Eu/E bond-tensor bytes per store x "
                          "conv_impl, with the undirected<directed bars "
                          "enforced (DESIGN.md §5)")
+    ap.add_argument("--stress-mode", default=None, metavar="MODES",
+                    help="comma-separated stress modes to sweep (e.g. "
+                         "mlp,bond_virial); atoms/s + compiled peak memory "
+                         "per mode x conv_impl, with the fused-virial <= "
+                         "unfused-virial memory bar enforced (DESIGN.md §7)")
     args = ap.parse_args()
     bs, iters = (8, 1) if args.quick else (16, 3)
     stage_rows = [] if args.sweep_only else run(batch_size=bs, iters=iters)
@@ -446,12 +549,15 @@ if __name__ == "__main__":
         batch_size=bs, iters=iters,
         bond_stores=tuple(args.bond_store.split(",")),
         conv_impls=("unfused",) if args.quick else ("unfused", "fused"))
+    stress_rows = [] if args.stress_mode is None else run_stress_mode_sweep(
+        batch_size=bs, iters=iters,
+        stress_modes=tuple(args.stress_mode.split(",")))
     # the probe's two extra train-step compiles only pay off when the
     # numbers land in the artifact
     donation_rows = run_donation_probe(batch_size=bs) if args.json else []
     for r in stage_rows:
         print(",".join(map(str, r)))
-    for r in sweep_rows + precision_rows + store_rows:
+    for r in sweep_rows + precision_rows + store_rows + stress_rows:
         print(f"{r['name']},{r['step_us']},peak_temp={r['peak_temp_bytes']}"
               f",atoms_per_s={r['atoms_per_s']:.0f}")
     for r in donation_rows:
@@ -464,6 +570,7 @@ if __name__ == "__main__":
             "sweep": sweep_rows,
             "precision": precision_rows,
             "bond_store": store_rows,
+            "stress_mode": stress_rows,
             "donation": donation_rows,
         }
         with open(args.json, "w") as f:

@@ -31,6 +31,11 @@ def main():
     ap.add_argument("--bond-store", default="directed",
                     choices=["directed", "undirected"],
                     help="undirected = half-graph bond store (DESIGN.md §5)")
+    ap.add_argument("--stress-mode", default="mlp",
+                    choices=["mlp", "bond_virial"],
+                    help="direct-readout stress tier (DESIGN.md §7): "
+                         "bond_virial = per-bond virial from the force "
+                         "head's n_ij, no stress parameters")
     ap.add_argument("--ckpt", default="/tmp/chgnet_ckpt")
     ap.add_argument("--inject-fault", action="store_true")
     args = ap.parse_args()
@@ -39,7 +44,8 @@ def main():
     caps = capacity_for(ds, args.batch)
     model_cfg = (C.FAST_FS_HEAD if args.readout == "direct"
                  else C.FAST_WO_HEAD).with_(precision=args.precision,
-                                            bond_store=args.bond_store)
+                                            bond_store=args.bond_store,
+                                            stress_mode=args.stress_mode)
     train_cfg = TrainConfig(global_batch=args.batch,
                             total_steps=args.steps, loss=C.LOSS)
     print(f"init LR (Eq. 14): {train_cfg.init_lr:.2e}")

@@ -175,6 +175,12 @@ class StepPlan:
     denoms: dict[str, np.ndarray]
     shard_costs: np.ndarray
     num_real: int = 0
+    # (num_micro, 3) REAL atom/bond/angle totals per microbatch, filled by
+    # BalancedBatchIterator.plan_step — the feature columns that pair with
+    # the Trainer's measured per-microbatch wall times when it refits the
+    # cost model live (cost.fit_cost_model); None when the producer does
+    # not track sizes
+    micro_sizes: np.ndarray | None = None
 
     @property
     def straggler(self) -> float:

@@ -41,6 +41,15 @@ FAST_HALF = FAST_FS_HEAD.with_(bond_store="undirected")
 FAST_FUSED_HALF = FAST_FUSED.with_(bond_store="undirected")
 FAST_FUSED_HALF_MIXED = FAST_FUSED_MIXED.with_(bond_store="undirected")
 
+# + per-bond virial stress (DESIGN.md §7): sigma from the force head's own
+# n_ij — sigma = 1/(2V) sum n_ij d_ij x_hat⊗x_hat — instead of the pooled
+# S-head MLP; no stress parameters, geometry-aware by construction.  In
+# FAST_FUSED_VIRIAL the accumulation runs inside the force-readout
+# megakernel epilogue: force + stress in ONE kernel launch, zero extra HBM
+# reads of e/vec, the (E, 3, 3) outer-product tensor never materializes.
+FAST_VIRIAL = FAST_FS_HEAD.with_(stress_mode="bond_virial")
+FAST_FUSED_VIRIAL = FAST_FUSED.with_(stress_mode="bond_virial")
+
 LOSS = LossWeights(energy=2.0, force=1.5, stress=0.1, magmom=0.1,
                    huber_delta=0.1)
 

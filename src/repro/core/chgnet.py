@@ -36,7 +36,7 @@ from .interaction import (
 )
 
 MAX_Z = 95  # elements supported (MPtrj has 89)
-EV_A3_TO_GPA = 160.21766  # eV/A^3 -> GPa
+EV_A3_TO_GPA = heads.EV_A3_TO_GPA  # eV/A^3 -> GPa (defined once in heads)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +84,14 @@ class CHGNetConfig:
     envelope_impl: str = "factored"  # "factored" | "reference"
     # end-to-end precision policy (DESIGN.md §4), see class docstring
     precision: str = "f32"       # "f32" | "bf16" | "mixed"
+    # Direct-readout stress tier (DESIGN.md §7).  "mlp": per-crystal MLP on
+    # pooled atom features (FastCHGNet S head; extra stress_head params).
+    # "bond_virial": physically-motivated per-bond virial
+    # sigma = 1/(2V) sum_ij n_ij d_ij x_hat⊗x_hat sharing the force head's
+    # n_ij — NO stress parameters; with conv_impl="fused" the accumulation
+    # runs inside the force-readout megakernel epilogue (single launch).
+    # Ignored under readout="autodiff" (stress comes from dE/d(strain)).
+    stress_mode: str = "mlp"     # "mlp" | "bond_virial"
     stress_scale: float = 0.1
 
     def with_(self, **kw) -> "CHGNetConfig":
@@ -121,9 +129,12 @@ def chgnet_init(key, cfg: CHGNetConfig, dtype=None):
         params["force_head"] = heads.force_head_init(
             ks[6 + cfg.num_blocks], cfg.dim, dtype
         )
-        params["stress_head"] = heads.stress_head_init(
-            ks[7 + cfg.num_blocks], cfg.dim, cfg.stress_scale, dtype
-        )
+        if cfg.stress_mode == "mlp":
+            params["stress_head"] = heads.stress_head_init(
+                ks[7 + cfg.num_blocks], cfg.dim, cfg.stress_scale, dtype
+            )
+        # stress_mode="bond_virial" shares the force head's n_ij — no
+        # stress parameters exist in that tier (DESIGN.md §7)
     return params
 
 
@@ -148,15 +159,16 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
     # expanded to the directed store (it seeds e, which bond_conv updates
     # per directed bond) — e^a/e^b stay at Eu for the whole trunk.
     if cfg.bond_store == "undirected":
-        _vec_u, dist_u, vec, dist, _cos, theta = \
+        vec_und, dist_und, vec, dist, _cos, theta = \
             basis.compute_geometry_undirected(
                 graph, displacement=displacement, strain=strain
             )
-        rbf_dist = dist_u
+        rbf_dist = dist_und
     elif cfg.bond_store == "directed":
         vec, dist, _cos, theta = basis.compute_geometry(
             graph, displacement=displacement, strain=strain
         )
+        vec_und = dist_und = None
         rbf_dist = dist
     else:
         raise ValueError(f"unknown bond store {cfg.bond_store!r}")
@@ -216,7 +228,9 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
         mlp_impl=cfg.mlp_impl, agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
         bond_store=cfg.bond_store,
     )
-    return v, e, a, vec, dist
+    # vec_und/dist_und (None for the directed store) ride along for the
+    # bond_virial stress tier's undirected half-geometry path (§5/§7)
+    return v, e, a, vec, dist, vec_und, dist_und
 
 
 def _volume(lattice):
@@ -245,21 +259,32 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
         return {k: policy.cast_output(x) for k, x in d.items()}
 
     if cfg.readout == "direct":
-        v, e, a, vec, dist = _trunk(params, cfg, graph)
+        v, e, a, vec, dist, vec_und, dist_und = _trunk(params, cfg, graph)
         energy = heads.energy_head_apply(params["energy_head"], graph, v)
         magmom = heads.magmom_head_apply(params["magmom_head"], graph, v)
-        forces = heads.force_head_apply(params["force_head"], graph, e, vec,
-                                        dist, agg_impl=cfg.agg_impl,
-                                        conv_impl=cfg.conv_impl)
-        stress = heads.stress_head_apply(params["stress_head"], graph, v)
+        if cfg.stress_mode == "bond_virial":
+            # single-pass force + stress (DESIGN.md §7): with conv_impl=
+            # "fused" both come out of ONE megakernel launch
+            forces, stress = heads.force_virial_head_apply(
+                params["force_head"], graph, e, vec, dist,
+                vec_und=vec_und, dist_und=dist_und,
+                agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
+                bond_store=cfg.bond_store)
+        elif cfg.stress_mode == "mlp":
+            forces = heads.force_head_apply(params["force_head"], graph, e,
+                                            vec, dist, agg_impl=cfg.agg_impl,
+                                            conv_impl=cfg.conv_impl)
+            stress = heads.stress_head_apply(params["stress_head"], graph, v)
+        else:
+            raise ValueError(f"unknown stress mode {cfg.stress_mode!r}")
         return _out({"energy": energy, "forces": forces, "stress": stress,
                      "magmom": magmom})
 
     if cfg.readout == "autodiff":
         def energy_of(disp, strain):
-            v, _e, _a, _vec, _dist = _trunk(
+            v = _trunk(
                 params, cfg, graph, displacement=disp, strain=strain
-            )
+            )[0]
             e_tot = heads.energy_head_apply(params["energy_head"], graph, v)
             return jnp.sum(e_tot), v
 

@@ -10,6 +10,15 @@ Force/Stress heads (FastCHGNet C1) replace the reference autodiff readout:
   Stress head (Eq. 9): sigma = sum_i (scale * MLP9(v_i)) ⊙ N(L),
       N(L) = sum_{a,b} L_a/|L_a| ⊗ L_b/|L_b|  (3x3 lattice-normal matrix).
 
+  Bond-virial stress (``stress_mode="bond_virial"``, DESIGN.md §7): the
+  per-bond forces of the force head assembled into the physical virial
+      sigma = (1/2V) sum_ij n_ij d_ij x_hat_ij ⊗ x_hat_ij  [-> GPa],
+  i.e. sigma = (1/2V) sum_ij r_ij ⊗ f_ij with f_ij = n_ij x_hat_ij — no
+  stress parameters at all; forces and stress share one set of per-bond
+  scalars, so the head is exact on any pair potential the forces fit
+  (tests/test_virial.py).  With ``conv_impl="fused"`` the 3x3 accumulation
+  runs inside the force-readout megakernel epilogue (single launch).
+
 Precision (DESIGN.md §4): head MLPs run at the feature (compute) dtype;
 the per-crystal energy/stress reductions are pinned to f32 — a crystal's
 site-energy sum is exactly the kind of long low-magnitude accumulation
@@ -23,6 +32,24 @@ import jax.numpy as jnp
 
 from .graph import CrystalGraphBatch
 from .interaction import _glorot, linear_apply, linear_init, segment_aggregate
+
+EV_A3_TO_GPA = 160.21766  # eV/A^3 -> GPa (re-exported by core.chgnet)
+
+# one epsilon for every unit-vector normalization in the model: heads and
+# kernel wrappers must agree bit-for-bit or the fused/unfused stress tiers
+# drift apart (DESIGN.md §7 tolerance budget)
+_UNIT_EPS = 1e-12
+
+
+def bond_unit_vectors(bond_vec, bond_dist, dtype=None):
+    """x_hat = vec / (dist + eps), the ONE shared normalization.
+
+    Geometry arrives f32; ``dtype`` (usually the bond-feature compute
+    dtype) sets the cast boundary AFTER the f32 division, so every caller
+    — unfused heads, kernel wrappers, oracles — sees identical values.
+    """
+    x_hat = bond_vec / (bond_dist[..., None] + _UNIT_EPS)
+    return x_hat if dtype is None else x_hat.astype(dtype)
 
 
 def mlp_init(key, dims, dtype=jnp.float32):
@@ -88,7 +115,7 @@ def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
     # x_hat is derived from f32 geometry; cast it to the bond-feature
     # (compute) dtype at this boundary so the contrib product and the
     # reduction operands share one dtype (DESIGN.md §4)
-    x_hat = (bond_vec / (bond_dist[..., None] + 1e-12)).astype(e.dtype)
+    x_hat = bond_unit_vectors(bond_vec, bond_dist, e.dtype)
     if conv_impl == "fused":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
@@ -131,3 +158,105 @@ def stress_head_apply(p, graph: CrystalGraphBatch, v):
         per_atom, graph.atom_crystal, num_segments=graph.num_crystals
     ).reshape(-1, 3, 3)
     return p["scale"].astype(jnp.float32) * per_crystal * normal
+
+
+# ------------------------- bond-virial stress ------------------------------
+
+def _per_crystal_aggregate(values, ids, num_crystals, mask, agg_impl):
+    """Bond/pair -> crystal reduction through the §2 aggregation engine.
+
+    ``ids`` are sorted over the real prefix (crystals pack sequentially,
+    bonds sort by center — repro.batching.pack), so the "sorted" tier
+    applies directly.  ``"pallas"`` maps to "sorted": the CSR kernel wants
+    per-row offsets, which exist for atoms/bonds but not for the (tiny,
+    B-row) crystal axis — a dedicated launch would cost more than the
+    reduction (DESIGN.md §7).
+    """
+    impl = "sorted" if agg_impl == "pallas" else agg_impl
+    return segment_aggregate(values, ids, num_crystals, mask, impl)
+
+
+def _virial_raw_to_gpa(raw, graph: CrystalGraphBatch):
+    """(B, 3, 3) accumulated sum n d x_hat⊗x_hat  ->  stress [GPa].
+
+    sigma = (1/2V) * raw * EV_A3_TO_GPA, volume from the lattice
+    determinant; padded crystal slots (identity lattices) mask to zero.
+    """
+    vol = jnp.abs(jnp.linalg.det(graph.lattice.astype(jnp.float32)))
+    scale = EV_A3_TO_GPA / (2.0 * vol + _UNIT_EPS) * graph.crystal_mask
+    return raw.astype(jnp.float32) * scale[:, None, None]
+
+
+def force_virial_head_apply(p, graph: CrystalGraphBatch, e, bond_vec,
+                            bond_dist, *, vec_und=None, dist_und=None,
+                            agg_impl: str = "scatter",
+                            conv_impl: str = "unfused",
+                            bond_store: str = "directed"):
+    """Single-pass force + bond-virial stress readout (DESIGN.md §7).
+
+    Returns ``(forces (A, 3), stress (B, 3, 3) [GPa, f32])``.  Both come
+    from ONE set of per-bond scalars n_ij = MLP(e_ij):
+
+        F_i   = sum_j n_ij x_hat_ij                          (Eq. 7)
+        sigma = (1/2V) sum_ij n_ij d_ij x_hat_ij ⊗ x_hat_ij  [* GPa]
+
+    (n d x_hat⊗x_hat == (n/d) vec⊗vec, the per-bond virial r_ij ⊗ f_ij).
+    The stress carries NO parameters of its own — it is determined by the
+    force field, so it is symmetric, translation invariant, and rotates as
+    sigma -> R sigma R^T for free (tests/test_virial.py).
+
+    conv_impl="fused": one megakernel launch computes both outputs — the
+    (B, 3, 3) partials accumulate in the force-readout epilogue while
+    n_ij and x_hat are still in VMEM; the (E, 3, 3) outer-product tensor
+    never materializes (kernels/fused_message_passing.py).
+
+    Unfused reference: the same math through ``segment_aggregate``.  With
+    ``bond_store="undirected"`` (DESIGN.md §5) the outer products are
+    computed ONCE per undirected pair from ``vec_und``/``dist_und``
+    (x_hat⊗x_hat is bond_sign-invariant): the directed n d weights reduce
+    onto Eu rows through the ``bond_pair`` mirror map first, so the Eu
+    store pays half the geometry reads here too.
+    """
+    x_hat = bond_unit_vectors(bond_vec, bond_dist, e.dtype)
+    if conv_impl == "fused":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        l0, l1 = p["mlp"]  # force head is fixed at (dim -> dim -> 1)
+        forces, raw = kops.fused_force_virial_readout(
+            e, x_hat, bond_dist, l0["w"].astype(e.dtype),
+            l0["b"].astype(e.dtype), l1["w"].astype(e.dtype),
+            l1["b"].astype(e.dtype), graph.bond_center, graph.bond_crystal,
+            graph.bond_offsets, graph.atom_cap, graph.num_crystals,
+        )
+        forces = forces * graph.atom_mask[..., None].astype(forces.dtype)
+        return forces, _virial_raw_to_gpa(raw, graph)
+
+    n_ij = mlp_apply(p["mlp"], e)[..., 0]  # (Nb,); masked by the aggregate
+    contrib = n_ij[..., None] * x_hat  # (Nb, 3)
+    forces = segment_aggregate(
+        contrib, graph.bond_center, graph.atom_cap, graph.bond_mask,
+        agg_impl, offsets=graph.bond_offsets,
+    )
+    forces = forces * graph.atom_mask[..., None].astype(forces.dtype)
+    # per-bond virial weight w = n d (f32 accumulation from here on, §4)
+    w = n_ij.astype(jnp.float32) * bond_dist.astype(jnp.float32) \
+        * graph.bond_mask
+    if bond_store == "undirected":
+        # mirror-map bypass: x_hat⊗x_hat is sign-invariant, so reduce the
+        # directed weights onto Eu rows (scatter: bond_pair is not sorted)
+        # and build the outer products once per pair from und geometry
+        w_u = jax.ops.segment_sum(
+            w, graph.bond_pair, num_segments=graph.und_cap)
+        xh_u = bond_unit_vectors(vec_und.astype(jnp.float32),
+                                 dist_und.astype(jnp.float32))
+        outer = (xh_u[:, :, None] * xh_u[:, None, :]).reshape(-1, 9)
+        raw = _per_crystal_aggregate(
+            w_u[:, None] * outer, graph.und_crystal, graph.num_crystals,
+            graph.und_mask, agg_impl)
+    else:
+        xh32 = x_hat.astype(jnp.float32)
+        outer = (xh32[:, :, None] * xh32[:, None, :]).reshape(-1, 9)
+        raw = _per_crystal_aggregate(
+            w[:, None] * outer, graph.bond_crystal, graph.num_crystals,
+            graph.bond_mask, agg_impl)
+    return forces, _virial_raw_to_gpa(raw.reshape(-1, 3, 3), graph)

@@ -222,6 +222,17 @@ class BalancedBatchIterator:
             ng = max(ng, sum(self.ds.graphs[i].num_angles for i in s))
         return self.caps.bucket_for(na, nb, ng)
 
+    def update_cost_model(self, model: CostModel) -> None:
+        """Swap in a refit cost model (live refits, DESIGN.md §6).
+
+        Called between steps by ``Trainer`` (via ``on_cost_model``) after
+        it refits the model from measured per-microbatch wall times; every
+        subsequent ``plan_step`` LPT-packs with the new coefficients.
+        Cheap and host-side only (one predict over the dataset).
+        """
+        self.cost_model = model
+        self.costs = model.predict_dataset(self.ds)
+
     def plan_step(self, idx: np.ndarray) -> StepPlan:
         """Pack one global batch's indices into a balanced StepPlan."""
         idx = np.asarray(idx)
@@ -230,6 +241,7 @@ class BalancedBatchIterator:
             max_items=self.crystal_slots)
         micro_batches = []
         shard_costs = np.zeros((len(plan), self.num_devices), np.float64)
+        micro_sizes = np.zeros((len(plan), 3), np.float64)
         for m, shards_pos in enumerate(plan):
             shards = [idx[pos] for pos in shards_pos]
             caps = self._caps_for(shards)
@@ -242,6 +254,14 @@ class BalancedBatchIterator:
                 for s in shards
             ]
             shard_costs[m] = shard_cost_totals(self.costs, shards)
+            # real feature totals, host-side (no device syncs): the live
+            # cost-model refit pairs these with measured micro wall times
+            flat = np.concatenate(shards)
+            micro_sizes[m] = (
+                sum(self.ds.crystals[i].num_atoms for i in flat),
+                sum(self.ds.graphs[i].num_bonds for i in flat),
+                sum(self.ds.graphs[i].num_angles for i in flat),
+            )
             if self.stack:
                 micro_batches.append(stack_device_batches(batches))
             else:
@@ -250,7 +270,8 @@ class BalancedBatchIterator:
         denoms = global_denominators(
             len(idx), int(self.atoms[idx].sum()))
         return StepPlan(micro=micro_batches, denoms=denoms,
-                        shard_costs=shard_costs, num_real=len(idx))
+                        shard_costs=shard_costs, num_real=len(idx),
+                        micro_sizes=micro_sizes)
 
     def __iter__(self):
         n = len(self.ds)

@@ -383,7 +383,18 @@ def fused_bond_conv_pallas(
 
 # ---------------------------------------------------------------------------
 # direct-force readout megakernel: bonds -> atoms (Eq. 7)
+# + optional bond-virial stress epilogue: bonds -> crystals (DESIGN.md §7)
 # ---------------------------------------------------------------------------
+
+def _bond_scalar_mlp(e_c, w1_ref, b1_ref, w2_ref, b2_ref):
+    """(chunk, DP) bond features -> (chunk, 1) per-bond scalars n_ij."""
+    h = jax.nn.silu(_mm(e_c, w1_ref[...])
+                    + b1_ref[...].astype(jnp.float32))         # (chunk, DP)
+    # n_ij is a SCALAR per bond (Eq. 8 equivariance proof): a lane
+    # reduction instead of a 1-column matmul; f32 accumulation (§4)
+    return jnp.sum(h * w2_ref[...].astype(jnp.float32), axis=-1,
+                   keepdims=True) + b2_ref[0, 0].astype(jnp.float32)
+
 
 def _force_kernel(offs_ref, seg_ref, e_ref, xhat_ref, w1_ref, b1_ref,
                   w2_ref, b2_ref, out_ref, *, block_rows: int, chunk: int):
@@ -398,14 +409,64 @@ def _force_kernel(offs_ref, seg_ref, e_ref, xhat_ref, w1_ref, b1_ref,
         seg = seg_ref[pl.ds(base, chunk), :]
         oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
         e_c = e_ref[pl.ds(base, chunk), :]
-        h = jax.nn.silu(_mm(e_c, w1_ref[...])
-                        + b1_ref[...].astype(jnp.float32))     # (chunk, DP)
-        # n_ij is a SCALAR per bond (Eq. 8 equivariance proof): a lane
-        # reduction instead of a 1-column matmul; f32 accumulation (§4)
-        n = jnp.sum(h * w2_ref[...].astype(jnp.float32), axis=-1,
-                    keepdims=True) + b2_ref[0, 0].astype(jnp.float32)
+        n = _bond_scalar_mlp(e_c, w1_ref, b1_ref, w2_ref, b2_ref)
         contrib = n * xhat_ref[pl.ds(base, chunk), :].astype(jnp.float32)
         out_ref[...] += _mm_t(oh_w, contrib).astype(out_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
+
+
+def _force_virial_kernel(offs_ref, seg_ref, cry_ref, e_ref, xhat_ref,
+                         dist_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref,
+                         sig_ref, *, block_rows: int, chunk: int):
+    """Force readout + fused per-crystal virial epilogue (DESIGN.md §7).
+
+    The force tile walk is identical to ``_force_kernel``; while n_ij and
+    x_hat sit in registers, the epilogue also accumulates
+
+        sig[c] += sum_{edges of this tile in crystal c} n d x_hat⊗x_hat
+
+    into the SHARED (Bp, 3*128) accumulator block.  Its index_map is
+    constant, so the block stays resident across the (sequential) grid and
+    the per-program partials sum in place — the classic Pallas reduction
+    pattern (init at program 0 via ``pl.when``).  Each real edge belongs
+    to exactly one row tile (the same [start, end) CSR ownership as the
+    force path), so nothing double-counts; the padded tail is past every
+    row's end and never contributes.  Outer products are built as three
+    MXU contractions per chunk — sig[m, :] += (oh_c ⊙ w)ᵀ @ (x_hat ⊙
+    x_hat_m) — so the (E, 3, 3) tensor never exists, not even tiled.
+    """
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    bp = sig_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        sig_ref[...] = jnp.zeros(sig_ref.shape, sig_ref.dtype)
+
+    def body(k, carry):
+        base = k * chunk
+        seg = seg_ref[pl.ds(base, chunk), :]
+        oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
+        e_c = e_ref[pl.ds(base, chunk), :]
+        n = _bond_scalar_mlp(e_c, w1_ref, b1_ref, w2_ref, b2_ref)
+        xh = xhat_ref[pl.ds(base, chunk), :].astype(jnp.float32)
+        out_ref[...] += _mm_t(oh_w, n * xh).astype(out_ref.dtype)
+        # --- virial epilogue: everything below reuses n / xh from above
+        # ownership mask: same [start, end) window as the force one-hot
+        e_ids = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        valid = ((e_ids >= start) & (e_ids < end)).astype(jnp.float32)
+        w = n * dist_ref[pl.ds(base, chunk), :].astype(jnp.float32) * valid
+        cry = cry_ref[pl.ds(base, chunk), :]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, bp), 1)
+        oh_c = (cry == rows).astype(jnp.float32) * w       # (chunk, Bp)
+        for m in range(3):
+            sig_ref[:, m * 128:(m + 1) * 128] += _mm_t(
+                oh_c, xh * xh[:, m:m + 1])
         return carry
 
     jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
@@ -421,33 +482,72 @@ def fused_force_readout_pallas(
     w2: jnp.ndarray,       # (1, DP) row vector (the (D, 1) head transposed)
     b2: jnp.ndarray,       # (1, XP) scalar bias broadcast, read at [0, 0]
     *,
+    cry: jnp.ndarray | None = None,   # (E, 1) int32 bond_crystal (virial)
+    dist: jnp.ndarray | None = None,  # (E, 1) f32 bond distances (virial)
+    num_crystals: int = 0,            # Bp, a block_rows multiple (virial)
+    virial: bool = False,
     block_rows: int = 8,
     chunk: int = 256,
     interpret: bool = True,
-) -> jnp.ndarray:
+):
+    """Fused Eq. 7 force readout; with ``virial=True`` the SAME launch also
+    returns the (Bp, 3*128) per-crystal virial accumulator (lanes
+    ``m*128 + n`` hold sum n d x_hat_m x_hat_n; DESIGN.md §7)."""
     e_rows, dp = e.shape
     xp = x_hat.shape[1]
     a_rows = offsets.shape[0] - 1
     assert e_rows % chunk == 0, (e_rows, chunk)
     assert a_rows % block_rows == 0, (a_rows, block_rows)
     grid = (a_rows // block_rows,)
+    in_specs = [
+        pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+    ]
+    operands = [offsets, seg]
+    if virial:
+        assert cry is not None and dist is not None
+        assert num_crystals % block_rows == 0, (num_crystals, block_rows)
+        in_specs.append(pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)))
+        operands.append(cry)
+    in_specs += [
+        pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
+        pl.BlockSpec((e_rows, xp), lambda i, offs: (0, 0)),
+    ]
+    operands += [e, x_hat]
+    if virial:
+        in_specs.append(pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)))
+        operands.append(dist)
+    in_specs += [
+        pl.BlockSpec((dp, dp), lambda i, offs: (0, 0)),
+        pl.BlockSpec((1, dp), lambda i, offs: (0, 0)),
+        pl.BlockSpec((1, dp), lambda i, offs: (0, 0)),
+        pl.BlockSpec((1, xp), lambda i, offs: (0, 0)),
+    ]
+    operands += [w1, b1, w2, b2]
+    out_specs = pl.BlockSpec((block_rows, xp), lambda i, offs: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((a_rows, xp), jnp.float32)
+    if virial:
+        # constant index_map: one VMEM-resident accumulator block shared
+        # by every grid step (sequential on TPU -> race-free reduction)
+        out_specs = (out_specs,
+                     pl.BlockSpec((num_crystals, 3 * 128),
+                                  lambda i, offs: (0, 0)))
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((num_crystals, 3 * 128),
+                                          jnp.float32))
+        kernel = functools.partial(_force_virial_kernel,
+                                   block_rows=block_rows, chunk=chunk)
+    else:
+        kernel = functools.partial(_force_kernel, block_rows=block_rows,
+                                   chunk=chunk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
-            pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
-            pl.BlockSpec((e_rows, xp), lambda i, offs: (0, 0)),
-            pl.BlockSpec((dp, dp), lambda i, offs: (0, 0)),
-            pl.BlockSpec((1, dp), lambda i, offs: (0, 0)),
-            pl.BlockSpec((1, dp), lambda i, offs: (0, 0)),
-            pl.BlockSpec((1, xp), lambda i, offs: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, xp), lambda i, offs: (i, 0)),
+        in_specs=in_specs,
+        out_specs=out_specs,
     )
     return pl.pallas_call(
-        functools.partial(_force_kernel, block_rows=block_rows, chunk=chunk),
+        kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((a_rows, xp), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
-    )(offsets, seg, e, x_hat, w1, b1, w2, b2)
+    )(*operands)

@@ -761,6 +761,135 @@ def fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center, bond_offsets,
                                 bond_offsets, num_atoms, block_rows, chunk)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12, 13))
+def _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
+                                bond_crystal, offsets, num_atoms,
+                                num_crystals, block_rows, chunk):
+    e_rows, dim = e.shape
+    dp = _round_up(dim, _LANE)
+    xp = _LANE
+    ap = _round_up(num_atoms, block_rows)
+    bp = _round_up(num_crystals, block_rows)
+    ep = _round_up(e_rows, chunk)
+    dist_p = jnp.pad(dist.astype(jnp.float32), (0, ep - e_rows))[:, None]
+    out, sig = fused_force_readout_pallas(
+        _pad2(e, ep, dp), _pad2(x_hat, ep, xp),
+        _pad_ids(bond_center, ep), _pad_offsets(offsets, ap),
+        _pad2(w1, dp, dp), _pad2(b1[None, :], 1, dp),
+        _pad2(w2.T, 1, dp), jnp.full((1, xp), b2[0], b2.dtype),
+        cry=_pad_ids(bond_crystal, ep), dist=dist_p, num_crystals=bp,
+        virial=True, block_rows=block_rows, chunk=chunk,
+        interpret=_interpret(),
+    )
+    forces = out[:num_atoms, :x_hat.shape[1]].astype(e.dtype)
+    # accumulator lanes are [m*128 + n] (DESIGN.md §7); stays f32 (§4)
+    raw = sig[:num_crystals].reshape(num_crystals, 3, _LANE)[:, :, :3]
+    return forces, raw
+
+
+def _fused_force_virial_readout_fwd(e, x_hat, dist, w1, b1, w2, b2,
+                                    bond_center, bond_crystal, offsets,
+                                    num_atoms, num_crystals, block_rows,
+                                    chunk):
+    out = _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2,
+                                      bond_center, bond_crystal, offsets,
+                                      num_atoms, num_crystals, block_rows,
+                                      chunk)
+    return out, (e, x_hat, dist, w1, b1, w2, b2, bond_center, bond_crystal,
+                 offsets)
+
+
+def _fused_force_virial_readout_bwd(num_atoms, num_crystals, block_rows,
+                                    chunk, res, g):
+    """Tile-wise recompute backward over bond chunks with DUAL cotangents:
+    each chunk re-derives its (chunk, 3) force and (chunk, 9) virial
+    contributions with one chunk-local jax.vjp, gathers the force
+    cotangent through bond_center and the stress cotangent through
+    bond_crystal, and masks both by edge validity (DESIGN.md §7)."""
+    (e, x_hat, dist, w1, b1, w2, b2, bond_center, bond_crystal,
+     offsets) = res
+    g_f, g_s = g
+    e_rows = e.shape[0]
+    ep = _round_up(e_rows, chunk)
+    seg_p = _pad_rows_i32(bond_center, ep)
+    cry_p = _pad_rows_i32(bond_crystal, ep)
+    e_p = _pad_rows_f32(e, ep)
+    xh_p = _pad_rows_f32(x_hat, ep)
+    dist_p = jnp.pad(dist.astype(jnp.float32), (0, ep - e_rows))
+    f32 = lambda x: x.astype(jnp.float32)
+    w1_32, b1_32, w2_32, b2_32 = f32(w1), f32(b1), f32(w2), f32(b2)
+    gf32 = f32(g_f)
+    gs32 = f32(g_s).reshape(num_crystals, 9)
+    n_real = offsets[-1].astype(jnp.int32)
+
+    def body(k, carry):
+        dep_, dxhp, ddp, dw1, db1, dw2, db2 = carry
+        i0 = k * chunk
+        seg_c = _chunk_of(seg_p, i0, chunk)
+        cry_c = _chunk_of(cry_p, i0, chunk)
+
+        def contribs(ec, xc, dc, w1_, b1_, w2_, b2_):
+            h = jax.nn.silu(ec @ w1_ + b1_)
+            n = h @ w2_ + b2_                       # (chunk, 1)
+            outer = (xc[:, :, None] * xc[:, None, :]).reshape(chunk, 9)
+            return n * xc, (n * dc[:, None]) * outer
+
+        _, vjp = jax.vjp(contribs, _chunk_of(e_p, i0, chunk),
+                         _chunk_of(xh_p, i0, chunk),
+                         _chunk_of(dist_p, i0, chunk),
+                         w1_32, b1_32, w2_32, b2_32)
+        valid = (i0 + jnp.arange(chunk)) < n_real
+        gm_f = jnp.where(valid[:, None], gf32[seg_c], 0.0)
+        gm_s = jnp.where(valid[:, None], gs32[cry_c], 0.0)
+        dec, dxc, ddc, dw1c, db1c, dw2c, db2c = vjp((gm_f, gm_s))
+        return (jax.lax.dynamic_update_slice(dep_, dec, (i0, 0)),
+                jax.lax.dynamic_update_slice(dxhp, dxc, (i0, 0)),
+                jax.lax.dynamic_update_slice(ddp, ddc, (i0,)),
+                dw1 + dw1c, db1 + db1c, dw2 + dw2c, db2 + db2c)
+
+    init = (jnp.zeros_like(e_p), jnp.zeros_like(xh_p),
+            jnp.zeros_like(dist_p),
+            jnp.zeros_like(w1_32), jnp.zeros_like(b1_32),
+            jnp.zeros_like(w2_32), jnp.zeros_like(b2_32))
+    # static trip count -> scan -> reverse-differentiable (see atom_conv)
+    dep_, dxhp, ddp, dw1, db1, dw2, db2 = jax.lax.fori_loop(
+        0, ep // chunk, body, init)
+    f0 = jax.dtypes.float0
+    return (dep_[:e_rows].astype(e.dtype), dxhp[:e_rows].astype(x_hat.dtype),
+            ddp[:e_rows].astype(dist.dtype),
+            dw1.astype(w1.dtype), db1.astype(b1.dtype),
+            dw2.astype(w2.dtype), db2.astype(b2.dtype),
+            np.zeros(bond_center.shape, f0),
+            np.zeros(bond_crystal.shape, f0),
+            np.zeros(offsets.shape, f0))
+
+
+_fused_force_virial_readout.defvjp(_fused_force_virial_readout_fwd,
+                                   _fused_force_virial_readout_bwd)
+
+
+def fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
+                               bond_crystal, bond_offsets, num_atoms: int,
+                               num_crystals: int, *, block_rows: int = 8,
+                               chunk: int = 256):
+    """Single-pass Eq. 7 force readout + per-bond virial stress epilogue.
+
+    One kernel launch produces BOTH outputs (DESIGN.md §7): the (A, 3)
+    forces of ``fused_force_readout`` and the raw (B, 3, 3) f32 per-crystal
+    virial partials ``sum n_ij d_ij x_hat ⊗ x_hat`` — accumulated in the
+    same tile walk while ``n_ij``/``x_hat`` are VMEM-resident, so the
+    stress path costs zero extra HBM reads of ``e``/``vec`` and the
+    (E, 3, 3) outer-product tensor never materializes.  Volume
+    normalization / unit conversion live in ``core.heads`` (the kernel
+    boundary carries raw sums only).  Differentiable via a chunked
+    recompute custom VJP emitting cotangents for both outputs.
+    """
+    return _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2,
+                                       bond_center, bond_crystal,
+                                       bond_offsets, num_atoms, num_crystals,
+                                       block_rows, chunk)
+
+
 def fused_swiglu(x, w_gate, w_up, w_down, *, activation: str = "silu",
                  block_m: int = 128, block_f: int = 256):
     """LM gated MLP: (M, D) -> (M, D), whole MLP in one kernel."""

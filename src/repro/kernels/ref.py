@@ -134,6 +134,32 @@ def fused_force_readout_ref(e, x_hat, w1, b1, w2, b2, bond_center, offsets,
     return jax.ops.segment_sum(contrib, bond_center, num_segments=num_atoms)
 
 
+def fused_force_virial_readout_ref(e, x_hat, dist, w1, b1, w2, b2,
+                                   bond_center, bond_crystal, offsets,
+                                   num_atoms, num_crystals):
+    """Unfused single-pass force + bond-virial stress (DESIGN.md §7).
+
+    Same per-bond scalar MLP as ``fused_force_readout_ref``; the second
+    output accumulates the per-crystal virial partials
+
+        raw_c = sum_{ij in c} n_ij d_ij x_hat_ij ⊗ x_hat_ij   (B, 3, 3)
+
+    (== sum (n/d) vec⊗vec — the kernel reuses the VMEM-resident x_hat and
+    the scalar d instead of reading vec).  Volume normalization and unit
+    conversion happen in ``core.heads``, outside the kernel boundary.
+    """
+    h = jax.nn.silu(e @ w1 + b1)
+    n = (h @ w2 + b2)[..., 0]
+    contrib = _mask_real_edges(n[:, None] * x_hat, offsets)
+    forces = jax.ops.segment_sum(contrib, bond_center,
+                                 num_segments=num_atoms)
+    outer = (x_hat[:, :, None] * x_hat[:, None, :]).reshape(-1, 9)
+    s_contrib = _mask_real_edges((n * dist)[:, None] * outer, offsets)
+    raw = jax.ops.segment_sum(s_contrib, bond_crystal,
+                              num_segments=num_crystals)
+    return forces, raw.reshape(-1, 3, 3)
+
+
 def fused_swiglu_ref(x, w_gate, w_up, w_down):
     """LM SwiGLU MLP: (silu(x@w_gate) * (x@w_up)) @ w_down."""
     return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down

@@ -49,12 +49,15 @@ def train_chgnet(args):
     # params/accum, bf16 compute + dynamic loss scaling)
     model_cfg = model_cfg.with_(conv_impl=args.conv_impl,
                                 precision=args.precision,
-                                bond_store=args.bond_store)
+                                bond_store=args.bond_store,
+                                stress_mode=args.stress_mode)
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
-                            loss=C.LOSS, grad_reduce=args.grad_reduce)
+                            loss=C.LOSS, grad_reduce=args.grad_reduce,
+                            cost_refit_every=args.cost_refit_every)
     print(f"devices={n_dev} init_lr={train_cfg.init_lr:.2e} "
           f"readout={args.readout} conv_impl={args.conv_impl} "
-          f"precision={args.precision} bond_store={args.bond_store}")
+          f"precision={args.precision} bond_store={args.bond_store} "
+          f"stress_mode={args.stress_mode}")
 
     def loop(start):
         tr = Trainer(model_cfg, train_cfg, mesh=mesh, ckpt_dir=args.ckpt,
@@ -72,6 +75,10 @@ def train_chgnet(args):
                     ds, args.batch, num_devices, caps,
                     num_micro=max(args.accum, 1),
                     stack=tr.mesh is not None)
+                # live cost-model refits (DESIGN.md §6): the Trainer times
+                # each microbatch and pushes the refit coefficients back
+                # into the iterator's LPT bin packing
+                tr.on_cost_model = it.update_cost_model
                 return Prefetcher(itertools.islice(
                     itertools.cycle(iter(it)),
                     max(args.steps - tr.step, 0)))
@@ -161,8 +168,19 @@ def main():
                     help="undirected = half-graph bond store with mirror "
                          "maps (DESIGN.md §5): geometry/RBF/embed GEMM "
                          "and e^a/e^b run once per pair (Eu = E/2)")
+    ap.add_argument("--stress-mode", default="mlp",
+                    choices=["mlp", "bond_virial"],
+                    help="direct-readout stress tier (DESIGN.md §7): mlp = "
+                         "pooled S-head MLP; bond_virial = per-bond virial "
+                         "from the force head's n_ij (no stress params; "
+                         "fused into the force megakernel epilogue when "
+                         "--conv-impl fused)")
     ap.add_argument("--grad-reduce", default="bucketed",
                     choices=["plain", "bucketed", "compressed"])
+    ap.add_argument("--cost-refit-every", type=int, default=0,
+                    help="refit the LPT cost model from live per-microbatch "
+                         "step timings every K optimizer steps (0 = off; "
+                         "only meaningful with --balance cost / --accum)")
     ap.add_argument("--balance", default="pair",
                     choices=["pair", "cost"],
                     help="DP sharding: pair = paper Fig. 4 "

@@ -74,6 +74,17 @@ class TrainConfig:
     # loss scaling (DESIGN.md §4): "auto" enables the dynamic scaler iff
     # the model policy computes below f32, so the f32 path is unchanged
     loss_scale: LossScaleConfig = LossScaleConfig()
+    # live cost-model refits (DESIGN.md §6): every K optimizer steps the
+    # Trainer refits batching/cost.fit_cost_model from measured
+    # per-microbatch wall times (block_until_ready per micro — only paid
+    # when enabled) and hands the result to ``Trainer.on_cost_model``
+    # (the launcher wires that to BalancedBatchIterator.update_cost_model,
+    # closing the predict -> pack -> measure -> refit loop).  0 = off.
+    cost_refit_every: int = 0
+    # optimizer steps to discard before sampling (compile-inflated timings
+    # would otherwise dominate the fit) and the bounded sample window
+    cost_refit_warmup: int = 2
+    cost_refit_window: int = 256
 
     @property
     def init_lr(self) -> float:
@@ -503,6 +514,14 @@ class Trainer:
         from repro.runtime.fault import StragglerWatch
 
         self.straggler = StragglerWatch()
+        # live cost-model refit state (TrainConfig.cost_refit_every):
+        # (micro_sizes, wall_time) samples, the latest refit CostModel, and
+        # the consumer callback (the launcher wires it to
+        # BalancedBatchIterator.update_cost_model)
+        self._cost_samples: list[tuple[Any, float]] = []
+        self._profiled_plans = 0
+        self.cost_model = None
+        self.on_cost_model: Callable[[Any], None] | None = None
 
     def _build_steps(self):
         """(Re)build the step functions for the current ``self.mesh``."""
@@ -653,16 +672,49 @@ class Trainer:
         scale = scaler["scale"] if scaler is not None \
             else jnp.asarray(1.0, jnp.float32)
         denoms = {k: jnp.asarray(v) for k, v in plan.denoms.items()}
+        # per-microbatch timing for the live cost-model refit: only when
+        # enabled (the block_until_ready sync breaks async dispatch, so
+        # the default path stays fully pipelined), only past the compile
+        # warmup, and only for plans that carry their real feature sizes
+        profile = (self.train_cfg.cost_refit_every > 0
+                   and plan.micro_sizes is not None)
         gsum = ssum = None
-        for micro in plan.micro:
+        for i, micro in enumerate(plan.micro):
+            t0 = time.perf_counter() if profile else 0.0
             grads, sums = grad_step(self.params, micro, denoms, scale)
+            if profile:
+                jax.block_until_ready(grads)
+                if self._profiled_plans >= self.train_cfg.cost_refit_warmup:
+                    self._cost_samples.append(
+                        (plan.micro_sizes[i], time.perf_counter() - t0))
             if gsum is None:
                 gsum, ssum = grads, sums
             else:
                 gsum = jax.tree.map(jnp.add, gsum, grads)
                 ssum = jax.tree.map(jnp.add, ssum, sums)
+        if profile:
+            self._profiled_plans += 1
+            del self._cost_samples[:-self.train_cfg.cost_refit_window]
         return apply_step(self.params, self.opt_state, gsum, ssum, denoms,
                           jnp.asarray(self.step))
+
+    def _maybe_refit_cost_model(self):
+        """Refit the LPT cost model from recorded (sizes, time) samples
+        every ``cost_refit_every`` optimizer steps and push it to
+        ``on_cost_model`` (DESIGN.md §6).  Needs >= 4 samples (the affine
+        fit has 4 coefficients); nonneg-clamped lstsq, host-side only."""
+        every = self.train_cfg.cost_refit_every
+        if every <= 0 or self.step % every or len(self._cost_samples) < 4:
+            return
+        import numpy as np
+
+        from repro.batching.cost import fit_cost_model
+
+        sizes = np.asarray([s for s, _ in self._cost_samples], np.float64)
+        times = np.asarray([t for _, t in self._cost_samples], np.float64)
+        self.cost_model = fit_cost_model(sizes, times)
+        if self.on_cost_model is not None:
+            self.on_cost_model(self.cost_model)
 
     # -- loop -----------------------------------------------------------------
     def train(self, batches, max_steps: int | None = None,
@@ -703,6 +755,7 @@ class Trainer:
                 raise FloatingPointError(f"non-finite loss at step {self.step}")
             self.step += 1
             self.straggler.record(time.perf_counter() - t0)
+            self._maybe_refit_cost_model()
             history.append({k: float(v) for k, v in metrics.items()})
             if self.ckpt_dir is not None and self.step % self.ckpt_every == 0:
                 self.save()

@@ -1,0 +1,303 @@
+"""Per-bond virial stress tier (DESIGN.md §7): fused kernel vs oracle,
+fused-vs-unfused model equivalence across implementation tiers, physics
+(rotation covariance, translation invariance, exact-virial recovery on
+the analytic pair-potential labels), and the single-launch guarantee.
+All run on CPU via REPRO_KERNELS_INTERPRET=1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batching import BatchCapacities, batch_crystals
+from repro.core import basis, heads
+from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
+from repro.core.interaction import segment_aggregate
+from repro.core.losses import LossWeights, chgnet_loss
+from repro.core.neighbors import Crystal, build_graph
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# op level: fused force+virial kernel vs oracle on raw sorted layouts
+# ---------------------------------------------------------------------------
+
+def _virial_op_inputs(rng, a, b_crys, e_rows, d, n_real):
+    ids = np.sort(rng.integers(0, a, n_real)).astype(np.int32)
+    seg = np.zeros(e_rows, np.int32)
+    seg[:n_real] = ids
+    offs = np.searchsorted(ids, np.arange(a + 1)).astype(np.int32)
+    cry = np.zeros(e_rows, np.int32)
+    cry[:n_real] = rng.integers(0, b_crys, n_real)
+    e = jnp.asarray(rng.normal(0, 1, (e_rows, d)), jnp.float32)
+    xh = rng.normal(0, 1, (e_rows, 3)).astype(np.float32)
+    xh /= np.maximum(np.linalg.norm(xh, axis=1, keepdims=True), 1e-6)
+    dist = jnp.asarray(rng.uniform(0.5, 4.0, e_rows), jnp.float32)
+    w1 = jnp.asarray(rng.normal(0, .1, (d, d)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(0, .1, (d,)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(0, .1, (d, 1)), jnp.float32)
+    b2 = jnp.asarray(rng.normal(0, .1, (1,)), jnp.float32)
+    return (e, jnp.asarray(xh), dist, w1, b1, w2, b2,
+            jnp.asarray(seg), jnp.asarray(cry), jnp.asarray(offs), a, b_crys)
+
+
+@pytest.mark.parametrize("a,b_crys,e_rows,n_real", [
+    (16, 4, 300, 260),   # padded tail
+    (9, 3, 64, 64),      # no padding, unaligned rows
+    (8, 2, 32, 0),       # all edges padded
+    (14, 1, 180, 150),   # single crystal
+])
+def test_fused_force_virial_matches_oracle(a, b_crys, e_rows, n_real):
+    rng = np.random.default_rng(a + n_real)
+    args = _virial_op_inputs(rng, a, b_crys, e_rows, 32, n_real)
+    f_k, s_k = ops.fused_force_virial_readout(*args)
+    f_r, s_r = ref.fused_force_virial_readout_ref(*args)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+    # the stress output is symmetric by construction (x_hat ⊗ x_hat)
+    np.testing.assert_allclose(np.asarray(s_k),
+                               np.transpose(np.asarray(s_k), (0, 2, 1)),
+                               atol=1e-6)
+
+
+def test_fused_force_virial_gradients_match_oracle():
+    """Dual-cotangent backward: grads w.r.t. every differentiable operand
+    (e, x_hat, dist, all four MLP params) through BOTH outputs."""
+    rng = np.random.default_rng(11)
+    e, xh, dist, w1, b1, w2, b2, seg, cry, offs, a, b_crys = \
+        _virial_op_inputs(rng, 12, 3, 160, 32, 130)
+    cot_f = jnp.asarray(rng.normal(0, 1, (a, 3)), jnp.float32)
+    cot_s = jnp.asarray(rng.normal(0, 1, (b_crys, 3, 3)), jnp.float32)
+
+    def loss(fn, e_, xh_, d_, w1_, b1_, w2_, b2_):
+        f, s = fn(e_, xh_, d_, w1_, b1_, w2_, b2_, seg, cry, offs, a, b_crys)
+        return jnp.vdot(f, cot_f) + jnp.vdot(s, cot_s)
+
+    argnums = tuple(range(1, 8))
+    g_k = jax.grad(loss, argnums=argnums)(
+        ops.fused_force_virial_readout, e, xh, dist, w1, b1, w2, b2)
+    g_r = jax.grad(loss, argnums=argnums)(
+        ref.fused_force_virial_readout_ref, e, xh, dist, w1, b1, w2, b2)
+    for got, want in zip(g_k, g_r):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        num_atoms=st.integers(1, 24),
+        num_crystals=st.integers(1, 6),
+        n_real=st.integers(0, 90),
+        pad=st.integers(0, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fused_force_virial_ragged_property(num_atoms, num_crystals,
+                                                n_real, pad, seed):
+        rng = np.random.default_rng(seed)
+        args = _virial_op_inputs(rng, num_atoms, num_crystals,
+                                 n_real + pad + 1, 16, n_real)
+        f_k, s_k = ops.fused_force_virial_readout(*args)
+        f_r, s_r = ref.fused_force_virial_readout_ref(*args)
+        np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                   rtol=1e-5, atol=1e-5)
+except ImportError:  # pragma: no cover - bare envs skip the property sweep
+    pass
+
+
+# ---------------------------------------------------------------------------
+# model level: stress_mode="bond_virial" across implementation tiers
+# ---------------------------------------------------------------------------
+
+def _crystal(rng, n, **labels):
+    return Crystal(lattice=np.eye(3) * 4.4 + rng.normal(0, .05, (3, 3)),
+                   frac_coords=rng.random((n, 3)),
+                   atomic_numbers=rng.integers(1, 60, n), **labels)
+
+
+def _packed_batch(seed=0, sizes=(5, 7, 4), pad=(8, 32, 48)):
+    rng = np.random.default_rng(seed)
+    cs = [_crystal(rng, n, energy=float(rng.normal()),
+                   forces=rng.normal(0, .1, (n, 3)),
+                   stress=rng.normal(0, .1, (3, 3)),
+                   magmoms=np.abs(rng.normal(0, 1, n))) for n in sizes]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(sum(sizes) + pad[0],
+                           sum(g.num_bonds for g in gs) + pad[1],
+                           sum(g.num_angles for g in gs) + pad[2])
+    return batch_crystals(cs, gs, caps)
+
+
+BASE = CHGNetConfig(stress_mode="bond_virial")
+
+TIERS = [
+    dict(conv_impl="fused"),
+    dict(conv_impl="fused", agg_impl="pallas"),
+    dict(conv_impl="unfused", agg_impl="sorted"),
+    dict(conv_impl="unfused", agg_impl="matmul"),
+    dict(conv_impl="unfused", bond_store="undirected"),
+    dict(conv_impl="fused", bond_store="undirected", agg_impl="pallas"),
+]
+
+
+@pytest.mark.parametrize("tier", TIERS,
+                         ids=lambda t: "-".join(f"{k}={v}"
+                                                for k, v in t.items()))
+def test_bond_virial_tiers_match_reference_forward(tier):
+    """Acceptance: every agg/conv/bond_store tier of the bond-virial path
+    matches the scatter-aggregated directed reference <= 1e-5."""
+    batch = _packed_batch()
+    params = chgnet_init(jax.random.PRNGKey(0), BASE)
+    want = chgnet_apply(params, BASE, batch)
+    got = chgnet_apply(params, BASE.with_(**tier), batch)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-5, err_msg=f"{tier}/{k}")
+
+
+@pytest.mark.parametrize("tier", [
+    dict(conv_impl="fused"),
+    dict(conv_impl="unfused", bond_store="undirected"),
+])
+def test_bond_virial_param_gradients_match_reference(tier):
+    """Acceptance: training gradients through the fused dual-output custom
+    VJP (and the undirected half-geometry path) match autodiff through the
+    unfused directed graph <= 1e-5."""
+    batch = _packed_batch()
+    params = chgnet_init(jax.random.PRNGKey(0), BASE)
+
+    def loss(p, cfg):
+        pred = chgnet_apply(p, cfg, batch)
+        return chgnet_loss(pred, batch, LossWeights())[0]
+
+    g_ref = jax.grad(loss)(params, BASE)
+    g_got = jax.grad(loss)(params, BASE.with_(**tier))
+    for path, got, want in zip(
+            jax.tree_util.tree_flatten_with_path(g_got)[0],
+            jax.tree.leaves(g_got), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5,
+            err_msg=f"{tier}/{jax.tree_util.keystr(path[0])}")
+
+
+def test_bond_virial_has_no_stress_params():
+    params = chgnet_init(jax.random.PRNGKey(0), BASE)
+    assert "stress_head" not in params
+    assert "stress_head" in chgnet_init(jax.random.PRNGKey(0),
+                                        BASE.with_(stress_mode="mlp"))
+
+
+def test_bond_virial_single_kernel_launch():
+    """Acceptance: stress_mode="bond_virial" + conv_impl="fused" adds ZERO
+    kernel launches over the mlp stress tier — the virial rides the force
+    readout's epilogue, so the jaxpr pallas_call count is identical."""
+    batch = _packed_batch()
+    fused_mlp = BASE.with_(conv_impl="fused", stress_mode="mlp")
+    fused_vir = BASE.with_(conv_impl="fused")
+
+    def count(cfg):
+        params = chgnet_init(jax.random.PRNGKey(0), cfg)
+        jaxpr = jax.make_jaxpr(
+            lambda p, b: chgnet_apply(p, cfg, b))(params, batch)
+        return str(jaxpr).count("pallas_call")
+
+    n_mlp, n_vir = count(fused_mlp), count(fused_vir)
+    assert n_vir > 0, "fused path must lower to pallas_call"
+    assert n_vir == n_mlp, (n_vir, n_mlp)
+
+
+# ---------------------------------------------------------------------------
+# physics: covariance, invariance, exact-virial recovery
+# ---------------------------------------------------------------------------
+
+def _random_rotation(rng) -> np.ndarray:
+    a = rng.normal(size=(3, 3))
+    q, r = np.linalg.qr(a)
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def _single_batch(c):
+    g = build_graph(c)
+    caps = BatchCapacities(c.num_atoms + 3, g.num_bonds + 4,
+                           g.num_angles + 4)
+    return batch_crystals([c], [g], caps), g
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bond_virial_rotation_covariance(seed):
+    """sigma(R x) = R sigma(x) R^T — exact for the per-bond virial because
+    n_ij is a rotation-invariant scalar and x_hat rotates with the frame."""
+    rng = np.random.default_rng(seed)
+    c = _crystal(rng, 6)
+    rot = _random_rotation(rng)
+    cfg = BASE
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    batch, g = _single_batch(c)
+    s1 = np.asarray(chgnet_apply(params, cfg, batch)["stress"])[0]
+    c2 = Crystal(lattice=c.lattice @ rot.T, frac_coords=c.frac_coords,
+                 atomic_numbers=c.atomic_numbers)
+    batch2, g2 = _single_batch(c2)
+    assert g2.num_bonds == g.num_bonds  # rotation preserves topology
+    s2 = np.asarray(chgnet_apply(params, cfg, batch2)["stress"])[0]
+    # cart' = cart @ rot.T (row vectors) -> column-form sigma' = R sigma R^T
+    np.testing.assert_allclose(s2, rot @ s1 @ rot.T, atol=2e-4)
+
+
+def test_bond_virial_translation_invariance():
+    """Rigid translation (with PBC wrap) leaves the stress unchanged."""
+    rng = np.random.default_rng(3)
+    c = _crystal(rng, 6)
+    cfg = BASE
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    batch, g = _single_batch(c)
+    s1 = np.asarray(chgnet_apply(params, cfg, batch)["stress"])[0]
+    c2 = Crystal(lattice=c.lattice,
+                 frac_coords=(c.frac_coords + 0.23) % 1.0,
+                 atomic_numbers=c.atomic_numbers)
+    batch2, g2 = _single_batch(c2)
+    assert g2.num_bonds == g.num_bonds
+    s2 = np.asarray(chgnet_apply(params, cfg, batch2)["stress"])[0]
+    np.testing.assert_allclose(s2, s1, atol=2e-4)
+
+
+def test_exact_virial_recovery_on_synthetic_labels():
+    """With n_ij = phi'(d_ij), the bond-virial formula reproduces the
+    analytic stress labels of the pair-potential fixture exactly — the
+    sign/scale convention check for the whole tier."""
+    from repro.data.synthetic import SyntheticConfig, _morse_dr, make_dataset
+
+    ds = make_dataset(SyntheticConfig(num_crystals=3, max_atoms=12, seed=0))
+    gs = ds.graphs
+    caps = BatchCapacities(sum(c.num_atoms for c in ds.crystals) + 4,
+                           sum(g.num_bonds for g in gs) + 8,
+                           sum(g.num_angles for g in gs) + 8)
+    batch = batch_crystals(ds.crystals, gs, caps)
+    vec, dist, _cos, _theta = basis.compute_geometry(batch)
+    # ideal per-bond scalar: the analytic pair force magnitude phi'(d)
+    n_ij = jnp.asarray(_morse_dr(np.asarray(dist, np.float64)), jnp.float32)
+    x_hat = heads.bond_unit_vectors(vec, dist)
+    w = n_ij * dist * batch.bond_mask
+    outer = (x_hat[:, :, None] * x_hat[:, None, :]).reshape(-1, 9)
+    raw = segment_aggregate(w[:, None] * outer, batch.bond_crystal,
+                            batch.num_crystals, batch.bond_mask, "scatter")
+    sigma = np.asarray(heads._virial_raw_to_gpa(
+        raw.reshape(-1, 3, 3), batch))
+    want = np.asarray(batch.stress)
+    np.testing.assert_allclose(sigma, want, rtol=1e-3, atol=1e-4)
+
+
+def test_virial_raw_to_gpa_masks_padded_crystals():
+    batch = _packed_batch()
+    raw = jnp.ones((batch.num_crystals, 3, 3), jnp.float32)
+    out = np.asarray(heads._virial_raw_to_gpa(raw, batch))
+    mask = np.asarray(batch.crystal_mask)
+    assert np.all(out[mask == 0] == 0)
+    assert np.all(np.isfinite(out))
