@@ -1,0 +1,303 @@
+"""Fault-injection benchmark (DESIGN.md §8).
+
+Two phases, both driven by the ``repro.runtime.chaos`` harness against a
+tiny CHGNet so the numbers isolate the resilience machinery, not the
+model:
+
+  A. Checkpoint overhead: wall time of the same training run with no
+     checkpoints, sync checkpoints, and async checkpoints at
+     ``ckpt_every=1`` (worst case), plus an equivalence check — the sync
+     and async runs must restore to bit-identical params (the async
+     writer snapshots on the loop thread and serializes the same bytes).
+     Report-only: CPU timing noise makes an async<sync bar flaky, but
+     the JSON artifact tracks the trajectory.
+
+  B. Recovery matrix (ENFORCED): for each scenario — step-loop crash,
+     corrupt-newest-checkpoint fallback, NaN-streak rollback, SIGTERM
+     preemption — run to completion through the restart/rollback/resume
+     machinery and measure
+
+       rework = (optimizer steps executed) - (final step)
+
+     i.e. how many steps were replayed or wasted.  The bar
+     ``rework <= budget`` (budget = ckpt_every, doubled when the newest
+     checkpoint was corrupted, + the injected streak length for the NaN
+     scenario) is ENFORCED: exit code 1 on violation.  This is the
+     at-least-once-with-bounded-rework contract the checkpoint cadence
+     promises.
+
+    PYTHONPATH=src python benchmarks/bench_fault.py --quick \
+        --json bench_fault.json
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.batching import capacity_for  # noqa: E402
+from repro.core.chgnet import CHGNetConfig  # noqa: E402
+from repro.data import (  # noqa: E402
+    BatchIterator, SyntheticConfig, make_dataset,
+)
+from repro.runtime import (  # noqa: E402
+    ChaosMonkey, ChaosSchedule, GracefulShutdown, PreemptionError,
+    restore_checkpoint,
+)
+from repro.train import TrainConfig, Trainer  # noqa: E402
+
+BATCH = 4
+
+
+def _setup(quick: bool):
+    ds = make_dataset(SyntheticConfig(
+        num_crystals=16, max_atoms=10 if quick else 16, seed=0))
+    caps = capacity_for(ds, BATCH)
+    model_cfg = CHGNetConfig(dim=16, num_blocks=1)
+    return ds, caps, model_cfg
+
+
+def _trainer(model_cfg, *, steps, ckpt_dir, ckpt_every, async_ckpt=False,
+             rollback=False, shutdown=None):
+    train_cfg = TrainConfig(
+        global_batch=BATCH, total_steps=steps,
+        rollback_on_divergence=rollback, divergence_nan_streak=2)
+    return Trainer(model_cfg, train_cfg, ckpt_dir=ckpt_dir,
+                   ckpt_every=ckpt_every, async_ckpt=async_ckpt,
+                   shutdown=shutdown)
+
+
+def _run_to_completion(ds, caps, model_cfg, *, steps, ckpt_dir, ckpt_every,
+                       chaos=None, rollback=False, async_ckpt=False,
+                       max_attempts=10):
+    """Drive a run through faults until it reaches ``steps`` optimizer
+    steps, replicating the launcher's restart loop but counting every
+    executed step so rework is measurable."""
+    monkey = ChaosMonkey(ChaosSchedule.parse(chaos or ""),
+                         ckpt_dir=ckpt_dir)
+    shutdown = GracefulShutdown().install()
+    executed = attempts = 0
+    recovery_s = 0.0
+    t0 = time.perf_counter()
+    try:
+        while True:
+            attempts += 1
+            if attempts > max_attempts:
+                raise RuntimeError(
+                    f"no completion after {max_attempts} attempts")
+            r0 = time.perf_counter()
+            tr = _trainer(model_cfg, steps=steps, ckpt_dir=ckpt_dir,
+                          ckpt_every=ckpt_every, async_ckpt=async_ckpt,
+                          rollback=rollback, shutdown=shutdown)
+            tr.maybe_restore()
+            if attempts > 1:
+                recovery_s += time.perf_counter() - r0
+            it = BatchIterator(ds, BATCH, 1, caps, seed=0,
+                               tag_indices=rollback)
+            tr.on_quarantine = it.add_quarantine
+            stream = monkey.wrap_batches(
+                itertools.islice(itertools.cycle(iter(it)),
+                                 max(steps - tr.step, 0)),
+                start_step=tr.step)
+            try:
+                hist = tr.train(stream, fault_injector=monkey)
+                executed += len(hist)
+            except PreemptionError as exc:
+                executed += len(getattr(exc, "partial_history", []))
+                shutdown.requested = False  # "scheduler relaunch"
+                continue
+            except Exception as exc:  # noqa: BLE001 — injected faults
+                executed += len(getattr(exc, "partial_history", []))
+                tr.close()  # land any queued async write before restore
+                continue
+            finally:
+                # trip steps execute a train step but never reach history
+                if tr.sentinel is not None:
+                    executed += tr.sentinel.trips
+            if tr.step >= steps:
+                tr.save(wait=True)
+                tr.close()
+                break
+            # rollback consumed stream batches: new attempt, fresh stream
+    finally:
+        shutdown.uninstall()
+    return {
+        "final_step": tr.step,
+        "executed": executed,
+        "rework": executed - tr.step,
+        "attempts": attempts,
+        "recovery_s": round(recovery_s, 4),
+        "wall_s": round(time.perf_counter() - t0, 4),
+        "chaos_fired": [f"{k}@{s}" for k, s in monkey.log_events],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Phase A: checkpoint overhead + sync/async equivalence
+# ---------------------------------------------------------------------------
+
+def run_overhead(ds, caps, model_cfg, *, steps, workdir) -> dict:
+    # warm the shared compile cache first so the "none" baseline measures
+    # steps, not the one-time trace
+    warm = _trainer(model_cfg, steps=2, ckpt_dir=None, ckpt_every=1)
+    warm.train(itertools.islice(
+        itertools.cycle(iter(BatchIterator(ds, BATCH, 1, caps, seed=0))), 2))
+
+    def one(mode):
+        ckpt_dir = (None if mode == "none"
+                    else os.path.join(workdir, f"ovh_{mode}"))
+        tr = _trainer(model_cfg, steps=steps, ckpt_dir=ckpt_dir,
+                      ckpt_every=1, async_ckpt=mode == "async")
+        it = BatchIterator(ds, BATCH, 1, caps, seed=0)
+        stream = itertools.islice(itertools.cycle(iter(it)), steps)
+        t0 = time.perf_counter()
+        tr.train(stream)
+        loop_s = time.perf_counter() - t0
+        tr.flush_checkpoints()
+        total_s = time.perf_counter() - t0
+        tr.close()
+        return {"loop_s": round(loop_s, 4), "total_s": round(total_s, 4),
+                "ckpt_dir": ckpt_dir}
+
+    out = {m: one(m) for m in ("none", "sync", "async")}
+    # equivalence: same seed + same data => the sync and async runs end in
+    # the same state, and the async files restore to the same bytes
+    template = _trainer(model_cfg, steps=steps, ckpt_dir=None,
+                        ckpt_every=1).state()
+    sync_state, sync_step, _ = restore_checkpoint(
+        out["sync"]["ckpt_dir"], template)
+    async_state, async_step, _ = restore_checkpoint(
+        out["async"]["ckpt_dir"], template)
+    leaves_s = jax.tree.leaves(sync_state)
+    leaves_a = jax.tree.leaves(async_state)
+    identical = sync_step == async_step and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(leaves_s, leaves_a))
+    base = out["none"]["loop_s"]
+    return {
+        "steps": steps,
+        "none_s": out["none"]["loop_s"],
+        "sync_s": out["sync"]["total_s"],
+        "async_loop_s": out["async"]["loop_s"],
+        "async_total_s": out["async"]["total_s"],
+        "sync_overhead": round(out["sync"]["total_s"] - base, 4),
+        "async_overhead": round(out["async"]["loop_s"] - base, 4),
+        "sync_async_identical": bool(identical),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Phase B: recovery matrix (ENFORCED rework bars)
+# ---------------------------------------------------------------------------
+
+def run_recovery(ds, caps, model_cfg, *, steps, ckpt_every,
+                 workdir) -> list[dict]:
+    mid = (steps // 2) | 1  # odd: never aligned with the ckpt cadence
+    scenarios = [
+        # (name, chaos spec, rollback?, rework budget)
+        ("crash", f"crash@{mid}", False, ckpt_every),
+        ("ckpt_corrupt", f"ckpt_truncate@{mid},crash@{mid}", False,
+         2 * ckpt_every),
+        ("nan_rollback", f"nan@{mid},nan@{mid + 1}", True,
+         ckpt_every + 2),  # +2: the injected NaN steps themselves
+        ("sigterm", f"sigterm@{mid}", False, ckpt_every),
+    ]
+    rows = []
+    for name, spec, rollback, budget in scenarios:
+        ckpt_dir = os.path.join(workdir, f"rec_{name}")
+        res = _run_to_completion(
+            ds, caps, model_cfg, steps=steps, ckpt_dir=ckpt_dir,
+            ckpt_every=ckpt_every, chaos=spec, rollback=rollback)
+        res.update(scenario=name, chaos=spec, budget=budget,
+                   ok=res["rework"] <= budget and res["final_step"] >= steps)
+        rows.append(res)
+    return rows
+
+
+def run(quick: bool = True):
+    """Bench-suite entry point: (name, us, note) rows from Phase B."""
+    ds, caps, model_cfg = _setup(quick)
+    workdir = tempfile.mkdtemp(prefix="bench_fault_")
+    try:
+        rows = run_recovery(ds, caps, model_cfg, steps=8 if quick else 16,
+                            ckpt_every=2, workdir=workdir)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    return [(f"fault_{r['scenario']}", r["wall_s"] * 1e6,
+             f"rework={r['rework']}/{r['budget']} ok={r['ok']}")
+            for r in rows]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, help="write results to file")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=2)
+    ap.add_argument("--skip-overhead", action="store_true",
+                    help="phase B only")
+    args = ap.parse_args()
+    steps = args.steps or (8 if args.quick else 16)
+
+    ds, caps, model_cfg = _setup(args.quick)
+    workdir = tempfile.mkdtemp(prefix="bench_fault_")
+    try:
+        overhead = None
+        if not args.skip_overhead:
+            overhead = run_overhead(ds, caps, model_cfg, steps=steps,
+                                    workdir=workdir)
+            print(f"overhead: none={overhead['none_s']:.2f}s "
+                  f"sync={overhead['sync_s']:.2f}s "
+                  f"async(loop)={overhead['async_loop_s']:.2f}s "
+                  f"identical={overhead['sync_async_identical']}")
+        recovery = run_recovery(ds, caps, model_cfg, steps=steps,
+                                ckpt_every=args.ckpt_every, workdir=workdir)
+        for r in recovery:
+            print(f"{r['scenario']}: rework={r['rework']}/{r['budget']} "
+                  f"attempts={r['attempts']} wall={r['wall_s']:.2f}s "
+                  f"fired={r['chaos_fired']} "
+                  f"{'OK' if r['ok'] else 'FAIL'}")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    violations = [r["scenario"] for r in recovery if not r["ok"]]
+    equiv_ok = overhead is None or overhead["sync_async_identical"]
+    result = {
+        "overhead": overhead,
+        "recovery": recovery,
+        "enforced": {
+            "rework_within_budget": not violations,
+            "sync_async_identical": equiv_ok,
+        },
+    }
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(result, fh, indent=2)
+        print(f"wrote {args.json}")
+
+    if violations or not equiv_ok:
+        if violations:
+            print(f"FAIL: rework over budget in {violations}",
+                  file=sys.stderr)
+        if not equiv_ok:
+            print("FAIL: sync and async checkpoints restored different "
+                  "states", file=sys.stderr)
+        return 1
+    print("recovery bars OK: rework <= budget in every scenario"
+          + ("" if overhead is None else "; sync == async restore"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,18 +14,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: iteration,sampler,md,serve,"
-                         "convergence,scaling,roofline,kernels")
+                         "convergence,scaling,roofline,kernels,fault")
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer iters")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
-        bench_convergence, bench_iteration, bench_kernels, bench_md,
-        bench_sampler, bench_scaling, bench_serve, roofline,
+        bench_convergence, bench_fault, bench_iteration, bench_kernels,
+        bench_md, bench_sampler, bench_scaling, bench_serve, roofline,
     )
 
     suites = {
+        "fault": lambda: bench_fault.run(quick=args.quick),
         "sampler": lambda: bench_sampler.run(),
         "kernels": lambda: bench_kernels.run(quick=args.quick),
         "md": lambda: bench_md.run(iters=3 if args.quick else 5),

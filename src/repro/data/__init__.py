@@ -4,8 +4,9 @@ Capacity sizing / packing policy lives in ``repro.batching``;
 ``capacity_for`` / ``ladder_for`` are re-exported here for convenience.
 """
 from .pipeline import (
-    BalancedBatchIterator, BatchIterator, Prefetcher, build_device_batch,
-    capacity_for, ladder_for, stack_device_batches,
+    BalancedBatchIterator, BatchIterator, Prefetcher, TaggedBatch,
+    TransientSampleError, build_device_batch, capacity_for, ladder_for,
+    stack_device_batches,
 )
 from .sampler import (
     CostBalanceSampler, DefaultSampler, LoadBalanceSampler,
@@ -15,6 +16,7 @@ from .synthetic import SyntheticConfig, SyntheticDataset, make_dataset
 
 __all__ = [
     "BalancedBatchIterator", "BatchIterator", "Prefetcher",
+    "TaggedBatch", "TransientSampleError",
     "build_device_batch", "capacity_for", "ladder_for",
     "stack_device_batches", "CostBalanceSampler", "DefaultSampler",
     "LoadBalanceSampler", "cov_of_device_loads", "device_loads",

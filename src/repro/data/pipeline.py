@@ -20,9 +20,12 @@ the consumer, not swallowed.
 """
 from __future__ import annotations
 
+import logging
 import math
 import queue
 import threading
+import time
+from typing import Any, NamedTuple
 
 import jax
 import numpy as np
@@ -44,14 +47,30 @@ from repro.batching.balance import (
 from repro.batching.cost import DEFAULT_COST_MODEL, CostModel
 from repro.core.graph import CrystalGraphBatch
 from repro.core.losses import global_denominators
+from repro.runtime.fault import TransientSampleError
 from .sampler import CostBalanceSampler, DefaultSampler, LoadBalanceSampler
 from .synthetic import SyntheticDataset
 
 __all__ = [
-    "BatchIterator", "BalancedBatchIterator", "Prefetcher",
-    "build_device_batch", "stack_device_batches", "capacity_for",
-    "ladder_for",
+    "BatchIterator", "BalancedBatchIterator", "Prefetcher", "TaggedBatch",
+    "TransientSampleError", "build_device_batch", "stack_device_batches",
+    "capacity_for", "ladder_for",
 ]
+
+log = logging.getLogger("repro.data")
+
+
+class TaggedBatch(NamedTuple):
+    """A packed batch plus the dataset indices it was built from.
+
+    The Trainer unwraps it before the jitted step and keeps the indices
+    in a ring buffer, so a divergence rollback can quarantine the streak's
+    source samples (DESIGN.md §8).  Being a NamedTuple it is a pytree —
+    ``jax.device_put`` in the Prefetcher passes through it fine.
+    """
+
+    indices: np.ndarray
+    batch: Any
 
 
 def build_device_batch(
@@ -87,6 +106,7 @@ class BatchIterator:
         drop_last: bool = True,
         validate_layout: bool = True,
         cost_model: CostModel | None = None,
+        tag_indices: bool = False,
     ):
         if num_devices < 1:
             raise ValueError(f"num_devices must be >= 1, got {num_devices}")
@@ -99,6 +119,12 @@ class BatchIterator:
         self.num_devices = num_devices
         self.caps = caps
         self.drop_last = drop_last
+        # quarantine (DESIGN.md §8): indices here are dropped from every
+        # subsequent batch (the crystal-slot pad absorbs the shorter
+        # shards); tag_indices wraps each yield in a TaggedBatch so the
+        # Trainer can trace a divergence back to its source samples
+        self.tag_indices = tag_indices
+        self.quarantine: set[int] = set()
         # per-batch sorted-segment layout check (DESIGN.md §1); steady-state
         # epoch loops over a trusted dataset can turn it off — packing
         # establishes the invariant either way
@@ -138,10 +164,29 @@ class BatchIterator:
             ng = max(ng, sum(self.ds.graphs[i].num_angles for i in s))
         return self.caps.bucket_for(na, nb, ng)
 
+    def add_quarantine(self, indices) -> None:
+        """Exclude dataset indices from all future batches (the Trainer's
+        ``on_quarantine`` hook points here)."""
+        self.quarantine.update(int(i) for i in np.asarray(indices).ravel())
+
+    def _filter_quarantined(self, shards: list[np.ndarray]):
+        """Drop quarantined indices; None if any shard would go empty
+        (skip the step — shapes must stay stackable)."""
+        if not self.quarantine:
+            return shards
+        q = np.fromiter(self.quarantine, dtype=np.int64)
+        out = [s[~np.isin(s, q)] for s in shards]
+        if any(len(s) == 0 for s in out):
+            return None
+        return out
+
     def __iter__(self):
         for _idx, shards in self.sampler.epoch(
             self.global_batch, self.num_devices, drop_last=self.drop_last
         ):
+            shards = self._filter_quarantined(shards)
+            if shards is None:
+                continue
             caps = self._caps_for(shards)
             batches = [
                 build_device_batch(
@@ -151,10 +196,14 @@ class BatchIterator:
                 for s in shards
             ]
             if self.stack:
-                yield stack_device_batches(batches)
+                out = stack_device_batches(batches)
             else:
                 assert len(batches) == 1
-                yield batches[0]
+                out = batches[0]
+            if self.tag_indices:
+                yield TaggedBatch(np.concatenate(shards), out)
+            else:
+                yield out
 
 
 class BalancedBatchIterator:
@@ -210,6 +259,11 @@ class BalancedBatchIterator:
         # shape per bucket regardless of how LPT splits a given step
         self.crystal_slots = crystal_slots_for(
             global_batch, num_devices, self.num_micro)
+        self.quarantine: set[int] = set()
+
+    def add_quarantine(self, indices) -> None:
+        """Exclude dataset indices from all future StepPlans."""
+        self.quarantine.update(int(i) for i in np.asarray(indices).ravel())
 
     def _caps_for(self, shards: list[np.ndarray]) -> BatchCapacities:
         """Smallest bucket fitting this microbatch's largest shard."""
@@ -279,7 +333,13 @@ class BalancedBatchIterator:
         from .sampler import _epoch_slices
         for s, e in _epoch_slices(n, self.global_batch, self.num_devices,
                                   self.drop_last):
-            yield self.plan_step(perm[s:e])
+            idx = perm[s:e]
+            if self.quarantine:
+                q = np.fromiter(self.quarantine, dtype=np.int64)
+                idx = idx[~np.isin(idx, q)]
+                if len(idx) < self.num_devices:
+                    continue  # too few survivors to fill every shard
+            yield self.plan_step(idx)
 
 
 class Prefetcher:
@@ -287,35 +347,100 @@ class Prefetcher:
 
     A worker-thread exception is captured and re-raised in the consumer at
     the point of failure — a bad batch must fail the epoch loudly, not
-    silently truncate it.
+    silently truncate it.  Two exceptions (DESIGN.md §8):
+
+      - :class:`~repro.runtime.fault.TransientSampleError` from the source
+        is retried with bounded exponential backoff: the offending index
+        is logged + recorded in ``self.quarantined`` and the stream moves
+        on (the source must be resumable across the raise — e.g. the
+        chaos wrapper; a plain generator dies on its first raise).  Only
+        ``max_retries`` CONSECUTIVE transient failures escalate to the
+        consumer.
+      - Early consumer exit: breaking out of the ``for`` loop (or any
+        ``close()``) unblocks a worker stuck on the full queue and joins
+        it with a timeout — the old implementation leaked a thread
+        blocked on ``q.put`` forever.
     """
 
     _STOP = object()
 
-    def __init__(self, iterator, depth: int = 2, device=None):
+    def __init__(self, iterator, depth: int = 2, device=None, *,
+                 max_retries: int = 3, backoff: float = 0.02):
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.device = device
         self._error: BaseException | None = None
-
-        def worker():
-            try:
-                for item in iterator:
-                    if self.device is not None:
-                        item = jax.device_put(item, self.device)
-                    self.q.put(item)
-            except BaseException as e:  # re-raised in the consumer
-                self._error = e
-            finally:
-                self.q.put(self._STOP)
-
-        self.thread = threading.Thread(target=worker, daemon=True)
+        self.max_retries = max_retries
+        self.backoff = backoff
+        self.quarantined: list[int | None] = []
+        self._closed = threading.Event()
+        self._source = iter(iterator)
+        self.thread = threading.Thread(target=self._worker, daemon=True)
         self.thread.start()
 
+    def _put(self, item) -> bool:
+        """put that gives up when the consumer closed us."""
+        while not self._closed.is_set():
+            try:
+                self.q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _worker(self):
+        retries = 0
+        try:
+            while not self._closed.is_set():
+                try:
+                    item = next(self._source)
+                except StopIteration:
+                    break
+                except TransientSampleError as exc:
+                    retries += 1
+                    self.quarantined.append(exc.index)
+                    log.warning(
+                        "prefetch: transient sample failure (index=%s), "
+                        "quarantined; retry %d/%d", exc.index, retries,
+                        self.max_retries)
+                    if retries > self.max_retries:
+                        self._error = exc
+                        break
+                    time.sleep(self.backoff * (2 ** (retries - 1)))
+                    continue
+                retries = 0
+                if self.device is not None:
+                    item = jax.device_put(item, self.device)
+                if not self._put(item):
+                    return  # closed mid-put: consumer is gone
+        except BaseException as e:  # re-raised in the consumer
+            self._error = e
+        self._put(self._STOP)
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the worker: signal, drain the queue (unblocking a full
+        ``put``), join with ``timeout``.  Idempotent; called automatically
+        when the consumer's iteration ends for ANY reason."""
+        self._closed.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self.thread.join(timeout)
+
     def __iter__(self):
-        while True:
-            item = self.q.get()
-            if item is self._STOP:
-                if self._error is not None:
-                    raise self._error
-                return
-            yield item
+        try:
+            while True:
+                try:
+                    item = self.q.get(timeout=0.1)
+                except queue.Empty:
+                    if self._closed.is_set() or not self.thread.is_alive():
+                        break  # worker gone without a sentinel
+                    continue
+                if item is self._STOP:
+                    break
+                yield item
+            if self._error is not None:
+                raise self._error
+        finally:
+            self.close()

@@ -29,7 +29,11 @@ def train_chgnet(args):
         BatchIterator, Prefetcher, SyntheticConfig, make_dataset,
     )
     from repro.launch.mesh import make_host_mesh
-    from repro.runtime import latest_step, run_with_restarts
+    from repro.runtime import (
+        ChaosMonkey, ChaosSchedule, GracefulShutdown, PreemptionError,
+        clear_resume_marker, latest_valid_step, read_resume_marker,
+        run_with_restarts,
+    )
     from repro.train import TrainConfig, Trainer
 
     n_dev = jax.device_count()
@@ -53,16 +57,28 @@ def train_chgnet(args):
                                 stress_mode=args.stress_mode)
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
                             loss=C.LOSS, grad_reduce=args.grad_reduce,
-                            cost_refit_every=args.cost_refit_every)
+                            cost_refit_every=args.cost_refit_every,
+                            rollback_on_divergence=args.rollback_on_divergence)
     print(f"devices={n_dev} init_lr={train_cfg.init_lr:.2e} "
           f"readout={args.readout} conv_impl={args.conv_impl} "
           f"precision={args.precision} bond_store={args.bond_store} "
-          f"stress_mode={args.stress_mode}")
+          f"stress_mode={args.stress_mode} async_ckpt={args.async_ckpt}")
+    if args.ckpt:
+        marker = read_resume_marker(args.ckpt)
+        if marker:
+            print(f"resuming after preemption at step {marker['step']} "
+                  f"({marker.get('reason', '?')})")
+            clear_resume_marker(args.ckpt)
+    # one monkey for the whole run: `fired` persists across restarts so
+    # each scheduled fault fires exactly once (DESIGN.md §8)
+    monkey = None
+    if args.chaos:
+        monkey = ChaosMonkey(
+            ChaosSchedule.parse(args.chaos, seed=args.chaos_seed),
+            ckpt_dir=args.ckpt)
+    shutdown = GracefulShutdown().install()
 
-    def loop(start):
-        tr = Trainer(model_cfg, train_cfg, mesh=mesh, ckpt_dir=args.ckpt,
-                     ckpt_every=args.ckpt_every)
-        tr.maybe_restore()
+    def one_pass(tr):
         if args.balance == "cost" or args.accum > 1:
             # cost-model bin packing + gradient accumulation (DESIGN.md
             # §6): StepPlans re-bin-pack over the surviving mesh if a
@@ -79,28 +95,66 @@ def train_chgnet(args):
                 # each microbatch and pushes the refit coefficients back
                 # into the iterator's LPT bin packing
                 tr.on_cost_model = it.update_cost_model
-                return Prefetcher(itertools.islice(
-                    itertools.cycle(iter(it)),
-                    max(args.steps - tr.step, 0)))
+                tr.on_quarantine = it.add_quarantine
+                stream = itertools.islice(
+                    itertools.cycle(iter(it)), max(args.steps - tr.step, 0))
+                if monkey is not None:
+                    # wrap INSIDE the Prefetcher so transient faults hit
+                    # the worker's retry/quarantine path (DESIGN.md §8)
+                    stream = monkey.wrap_batches(stream, start_step=tr.step)
+                return Prefetcher(stream)
 
-            hist = elastic_train(tr, batches_fn, max_steps=args.steps)
+            hist = elastic_train(tr, batches_fn, max_steps=args.steps,
+                                 fault_injector=monkey)
         else:
             it = BatchIterator(ds, args.batch, n_dev, caps,
-                               stack=n_dev > 1, load_balance=True)
-            batches = Prefetcher(itertools.islice(
-                itertools.cycle(iter(it)), args.steps - tr.step))
-            hist = tr.train(batches)
-        tr.save()
+                               stack=n_dev > 1, load_balance=True,
+                               tag_indices=args.rollback_on_divergence)
+            tr.on_quarantine = it.add_quarantine
+            stream = itertools.islice(
+                itertools.cycle(iter(it)), args.steps - tr.step)
+            if monkey is not None:
+                stream = monkey.wrap_batches(stream, start_step=tr.step)
+            hist = tr.train(Prefetcher(stream), fault_injector=monkey)
+        return hist
+
+    def loop(start):
+        tr = Trainer(model_cfg, train_cfg, mesh=mesh, ckpt_dir=args.ckpt,
+                     ckpt_every=args.ckpt_every,
+                     async_ckpt=args.async_ckpt, shutdown=shutdown)
+        tr.maybe_restore()
+        hist = []
+        while True:
+            before = tr.step
+            hist = one_pass(tr)
+            # a divergence rollback consumes stream batches while moving
+            # tr.step backwards, so an exhausted stream can leave the run
+            # short of --steps: rebuild the stream and keep going as long
+            # as each pass makes net progress
+            if tr.step >= args.steps or tr.step <= before:
+                break
+        tr.save(wait=True)
+        tr.close()
         if hist:
             print(f"steps {tr.step - len(hist)}..{tr.step}: "
                   f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}; "
                   f"stragglers={tr.straggler.flags}")
         return tr.step
 
-    return run_with_restarts(
-        loop, resume_step_fn=lambda: (latest_step(args.ckpt) or 0)
-        if args.ckpt else 0,
-        max_restarts=3)
+    try:
+        # resume from the newest VALID checkpoint: a crash mid-write (or a
+        # chaos ckpt_* event) leaves a corrupt newest file that restore
+        # skips, so the resume step must skip it too
+        return run_with_restarts(
+            loop, resume_step_fn=lambda: (latest_valid_step(args.ckpt) or 0)
+            if args.ckpt else 0,
+            max_restarts=3)
+    except PreemptionError as exc:
+        print(f"preempted at step {exc.step}; checkpoint + resume marker "
+              f"written to {args.ckpt}")
+        return exc.step
+    finally:
+        shutdown.uninstall()
 
 
 def train_lm(args):
@@ -193,6 +247,22 @@ def main():
                          ">1 implies the balanced StepPlan path")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="write checkpoints from a background thread "
+                         "(DESIGN.md §8): the step loop only pays for the "
+                         "host snapshot; serialize/fsync/prune overlap "
+                         "training")
+    ap.add_argument("--rollback-on-divergence", action="store_true",
+                    help="NaN/loss-spike streaks restore the newest valid "
+                         "checkpoint, halve the LR, and quarantine the "
+                         "streak's batches (DESIGN.md §8)")
+    ap.add_argument("--chaos", default=None,
+                    help="fault-injection schedule, e.g. "
+                         "'nan@5,sigterm@12,ckpt_bitflip@20,drop@7:0' "
+                         "(runtime.chaos; kinds: crash drop sigterm "
+                         "straggler ckpt_truncate ckpt_bitflip nan "
+                         "transient prefetch_crash)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--buckets", type=int, default=2,
                     help="capacity buckets (1 = single worst-case pad)")
     args = ap.parse_args()

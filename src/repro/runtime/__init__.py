@@ -1,18 +1,39 @@
-"""Distributed runtime: checkpointing, elasticity, fault tolerance."""
-from .checkpoint import latest_step, list_checkpoints, restore_checkpoint, save_checkpoint
+"""Distributed runtime: verified checkpointing, elasticity, fault
+tolerance, chaos injection (DESIGN.md §6/§8)."""
+from .async_ckpt import AsyncCheckpointWriter
+from .chaos import (
+    ChaosError, ChaosEvent, ChaosMonkey, ChaosSchedule, bitflip_file,
+    corrupt_newest_checkpoint, poison_nan, truncate_file,
+)
+from .checkpoint import (
+    CheckpointCorruptError, MissingLeafError, host_snapshot, latest_step,
+    latest_valid_step, list_checkpoints, prune_checkpoints,
+    restore_checkpoint, save_checkpoint, verify_checkpoint,
+)
 from .elastic import (
     elastic_restore, elastic_train, per_device_batch, reshard,
     surviving_mesh,
 )
 from .fault import (
-    DeviceDropInjector, DeviceLossError, FaultInjector, StragglerWatch,
-    run_with_restarts,
+    DeviceDropInjector, DeviceLossError, DivergenceSentinel, FaultInjector,
+    GracefulShutdown, PreemptionError, StragglerWatch, TransientSampleError,
+    clear_resume_marker, read_resume_marker, run_with_restarts,
+    write_resume_marker,
 )
 
 __all__ = [
-    "latest_step", "list_checkpoints", "restore_checkpoint", "save_checkpoint",
+    "AsyncCheckpointWriter",
+    "ChaosError", "ChaosEvent", "ChaosMonkey", "ChaosSchedule",
+    "bitflip_file", "corrupt_newest_checkpoint", "poison_nan",
+    "truncate_file",
+    "CheckpointCorruptError", "MissingLeafError", "host_snapshot",
+    "latest_step", "latest_valid_step", "list_checkpoints",
+    "prune_checkpoints", "restore_checkpoint", "save_checkpoint",
+    "verify_checkpoint",
     "elastic_restore", "elastic_train", "per_device_batch", "reshard",
     "surviving_mesh",
-    "DeviceDropInjector", "DeviceLossError", "FaultInjector",
-    "StragglerWatch", "run_with_restarts",
+    "DeviceDropInjector", "DeviceLossError", "DivergenceSentinel",
+    "FaultInjector", "GracefulShutdown", "PreemptionError",
+    "StragglerWatch", "TransientSampleError", "clear_resume_marker",
+    "read_resume_marker", "run_with_restarts", "write_resume_marker",
 ]

@@ -1,0 +1,124 @@
+"""Asynchronous checkpoint writer (DESIGN.md §8).
+
+The step loop must not stall on serialization + fsync.  The split:
+
+  - ``save(step, tree)`` runs on the CALLER thread and only snapshots the
+    pytree to host numpy arrays (``checkpoint.host_snapshot`` — for jax
+    arrays a device_get that the trailing optimizer step has usually
+    already forced; always a copy, so later donation/mutation of the live
+    tree can't tear the snapshot);
+  - msgpack packing, CRC32 manifest, file write, fsync and pruning run on
+    ONE background thread through the same :func:`checkpoint.save_checkpoint`
+    used by the sync path — async and sync files are byte-identical for
+    identical state, and pruning can never race another writer because
+    there is only one.
+
+State machine: idle -> (save) queued -> writing -> idle.  The queue is
+bounded (default: one pending snapshot) and there is at most one write in
+flight; a ``save`` arriving while the queue is full blocks the caller —
+backpressure instead of unbounded snapshot memory.  A worker failure is
+captured and re-raised on the next ``save``/``flush``/``close`` call.
+``close`` is also registered atexit, so an exiting process flushes any
+queued snapshot (flush-on-exit) instead of dropping it.
+
+Sync mode (``runtime.checkpoint.save_checkpoint`` directly) is kept as the
+default for tests and remains the reference implementation.
+"""
+from __future__ import annotations
+
+import atexit
+import logging
+import queue
+import threading
+from typing import Any
+
+from .checkpoint import host_snapshot, save_checkpoint
+
+log = logging.getLogger("repro.ckpt")
+
+
+class AsyncCheckpointWriter:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 queue_depth: int = 1):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, queue_depth))
+        self._error: BaseException | None = None
+        self._closed = False
+        self._last_written: int | None = None
+        self._writes = 0
+        self._thread = threading.Thread(
+            target=self._worker, name="ckpt-writer", daemon=True)
+        self._thread.start()
+        atexit.register(self.close)
+
+    # -- background side ----------------------------------------------------
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, tree, extra_meta = item
+                try:
+                    save_checkpoint(self.directory, step, tree,
+                                    keep=self.keep, extra_meta=extra_meta)
+                    self._last_written = step
+                    self._writes += 1
+                except BaseException as exc:  # surfaced on the caller side
+                    log.error("async checkpoint write for step %s failed: %s",
+                              step, exc)
+                    self._error = exc
+            finally:
+                self._q.task_done()
+
+    # -- caller side --------------------------------------------------------
+    def _raise_pending(self):
+        if self._error is not None:
+            exc, self._error = self._error, None
+            raise RuntimeError(
+                "async checkpoint write failed (state NOT durable past step "
+                f"{self._last_written})") from exc
+
+    def save(self, step: int, tree: Any, *,
+             extra_meta: dict | None = None) -> None:
+        """Snapshot now, write in the background.
+
+        Blocks only when a previous snapshot is still queued (at-most-one
+        pending; the in-flight write itself never blocks new saves).
+        """
+        self._raise_pending()
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointWriter is closed")
+        self._q.put((step, host_snapshot(tree), extra_meta))
+
+    def flush(self) -> None:
+        """Block until every queued snapshot is durably written."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Flush queued writes and stop the worker (idempotent)."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+            self._thread.join()
+            try:
+                atexit.unregister(self.close)
+            except Exception:
+                pass
+        self._raise_pending()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc_info):
+        self.close()
+
+    @property
+    def last_written_step(self) -> int | None:
+        return self._last_written
+
+    @property
+    def writes(self) -> int:
+        return self._writes

@@ -1,12 +1,22 @@
-"""Fault-tolerant checkpointing (msgpack + numpy, no external deps).
+"""Fault-tolerant verified checkpointing (msgpack + numpy, no external deps).
 
-Design goals (1000+-node deployability):
-  - **atomic**: write to ``<name>.tmp`` then ``os.replace`` — a crash never
-    leaves a half-written "latest" checkpoint;
+Design goals (1000+-node deployability, DESIGN.md §8):
+  - **atomic**: write to ``<name>.tmp`` then ``os.replace``, with fsync of
+    the file AND its directory — a crash never leaves a half-written
+    "latest" checkpoint, and the rename itself is durable;
+  - **verified**: every array carries a CRC32 checksum in a manifest
+    inside the payload; ``verify_checkpoint`` / restore detect truncation
+    and bit-flips instead of restoring garbage;
+  - **fallback**: restore with ``step=None`` walks newest -> oldest and
+    restores the newest *valid* checkpoint (``latest_valid_step``) —
+    a corrupted latest file costs one checkpoint interval, not the run;
   - **mesh-independent**: arrays are gathered to host as full ndarrays, so
     a checkpoint written on a 256-chip mesh restores onto any device count
     (elastic scaling, runtime/elastic.py);
-  - **keep-K**: bounded disk usage; ``latest_step`` scans for auto-resume;
+  - **keep-K**: bounded disk usage counting only checksummed-COMPLETE
+    files toward K (a corrupt file must never displace a good one from
+    the kept set), deleted oldest-first; ``latest_step`` scans for
+    auto-resume;
   - arrays are stored by flattened-pytree path with dtype/shape, verified
     on restore against the template pytree: a shape mismatch raises, a
     dtype mismatch warns and CASTS to the template dtype (so e.g. a
@@ -14,17 +24,46 @@ Design goals (1000+-node deployability):
     versa, DESIGN.md §4 — never a silent bit reinterpretation);
   - extension dtypes (bfloat16 & friends, whose numpy ``.str`` is an
     opaque void like ``<V2``) are stored by NAME so they round-trip.
+
+Async writes live in :mod:`repro.runtime.async_ckpt`; the sync path here
+is the reference implementation and stays the default for tests.
 """
 from __future__ import annotations
 
 import os
 import re
 import warnings
+import zlib
 from typing import Any
 
 import jax
 import msgpack
 import numpy as np
+
+# payload format version: 2 added the per-array CRC32 ``manifest``;
+# format-1 files (no manifest) still restore, with an "unverified" warning
+CKPT_FORMAT = 2
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file failed verification (truncated payload, CRC
+    mismatch, or structural damage)."""
+
+
+def _ckpt_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:010d}.msgpack")
+
+
+def _fsync_dir(directory: str) -> None:
+    """fsync the directory so the ``os.replace`` rename is durable."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return  # platforms that can't open directories: best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _leaf_paths(tree: Any) -> list[str]:
@@ -32,6 +71,17 @@ def _leaf_paths(tree: Any) -> list[str]:
     for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
         paths.append(jax.tree_util.keystr(path))
     return paths
+
+
+def host_snapshot(tree: Any) -> Any:
+    """Copy a pytree to host numpy arrays.
+
+    Always copies (``np.array(copy=True)``) so the snapshot is isolated
+    from later in-place mutation of numpy leaves — the contract the async
+    writer relies on to snapshot on the caller thread and serialize later.
+    """
+    return jax.tree.map(
+        lambda leaf: np.array(jax.device_get(leaf), copy=True), tree)
 
 
 def save_checkpoint(
@@ -42,10 +92,12 @@ def save_checkpoint(
     keep: int = 3,
     extra_meta: dict | None = None,
 ) -> str:
-    """Atomically write ``ckpt_<step>.msgpack``; prune to ``keep`` newest."""
+    """Atomically write ``ckpt_<step>.msgpack``; prune to ``keep`` newest
+    VALID checkpoints (corrupt files never count toward K)."""
     os.makedirs(directory, exist_ok=True)
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {}
+    manifest = {}
     for path, leaf in leaves_with_paths:
         arr = np.asarray(jax.device_get(leaf))
         # numpy renders extension dtypes (ml_dtypes bfloat16 etc.) as raw
@@ -54,31 +106,63 @@ def save_checkpoint(
         dtype_tag = arr.dtype.str
         if "V" in dtype_tag:
             dtype_tag = arr.dtype.name
-        arrays[jax.tree_util.keystr(path)] = {
+        data = arr.tobytes()
+        key = jax.tree_util.keystr(path)
+        arrays[key] = {
             "dtype": dtype_tag,
             "shape": list(arr.shape),
-            "data": arr.tobytes(),
+            "data": data,
         }
+        manifest[key] = zlib.crc32(data)
     payload = msgpack.packb(
-        {"step": step, "meta": extra_meta or {}, "arrays": arrays},
+        {
+            "format": CKPT_FORMAT,
+            "step": step,
+            "meta": extra_meta or {},
+            "manifest": manifest,
+            "arrays": arrays,
+        },
         use_bin_type=True,
     )
-    final = os.path.join(directory, f"ckpt_{step:010d}.msgpack")
+    final = _ckpt_path(directory, step)
     tmp = final + ".tmp"
     with open(tmp, "wb") as f:
         f.write(payload)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, final)
-
-    # prune
-    ckpts = sorted(list_checkpoints(directory))
-    for old in ckpts[:-keep]:
-        try:
-            os.remove(os.path.join(directory, f"ckpt_{old:010d}.msgpack"))
-        except OSError:
-            pass
+    _fsync_dir(directory)
+    prune_checkpoints(directory, keep)
     return final
+
+
+def prune_checkpoints(directory: str, keep: int) -> list[int]:
+    """Keep the newest ``keep`` checksummed-COMPLETE checkpoints.
+
+    Only verified-complete files count toward K and only they (plus
+    corrupt files older than the oldest kept one — useless even as a
+    fallback) are deleted, oldest-first.  A corrupt *newer* file is left
+    in place: it may be another writer's in-flight data or wanted for
+    forensics, and restore skips it anyway.  Concurrent-restore safety is
+    the restorer's job: ``restore_checkpoint(step=None)`` tolerates a
+    file vanishing between selection and open by falling back to the
+    next-newest valid one.  Returns the deleted steps.
+    """
+    steps = list_checkpoints(directory)
+    valid = [s for s in steps if verify_checkpoint(_ckpt_path(directory, s))]
+    kept = set(valid[-keep:]) if keep > 0 else set()
+    cutoff = min(kept) if kept else None
+    deleted = []
+    for s in steps:
+        if s in kept:
+            continue
+        if s in valid or (cutoff is not None and s < cutoff):
+            try:
+                os.remove(_ckpt_path(directory, s))
+                deleted.append(s)
+            except OSError:
+                pass  # already gone (concurrent prune): fine
+    return deleted
 
 
 def list_checkpoints(directory: str) -> list[int]:
@@ -97,6 +181,66 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def _read_payload(path: str, *, verify: bool = True) -> dict:
+    """Read + structurally validate one checkpoint file.
+
+    Raises :class:`CheckpointCorruptError` on truncation (msgpack can't
+    unpack), structural damage (missing keys), or — for format-2 files —
+    any per-array CRC32 mismatch.  Format-1 files (no manifest) pass with
+    a warning: there is nothing to verify against.
+    """
+    with open(path, "rb") as f:
+        raw = f.read()
+    try:
+        payload = msgpack.unpackb(raw, raw=False)
+    except Exception as exc:  # msgpack raises several unrelated types
+        raise CheckpointCorruptError(
+            f"{path}: unreadable payload ({type(exc).__name__}: {exc})"
+        ) from exc
+    if not isinstance(payload, dict) or "arrays" not in payload \
+            or "step" not in payload:
+        raise CheckpointCorruptError(f"{path}: malformed payload structure")
+    if not verify:
+        return payload
+    manifest = payload.get("manifest")
+    if manifest is None:
+        warnings.warn(
+            f"{path}: legacy (format-1) checkpoint has no checksum "
+            "manifest; restoring UNVERIFIED", stacklevel=3)
+        return payload
+    arrays = payload["arrays"]
+    if set(manifest) != set(arrays):
+        raise CheckpointCorruptError(
+            f"{path}: manifest/array key mismatch")
+    for key, crc in manifest.items():
+        rec = arrays[key]
+        if not isinstance(rec, dict) or "data" not in rec:
+            raise CheckpointCorruptError(f"{path}: malformed record {key}")
+        if zlib.crc32(rec["data"]) != crc:
+            raise CheckpointCorruptError(
+                f"{path}: CRC32 mismatch for {key} (bit-flip or torn write)")
+    return payload
+
+
+def verify_checkpoint(path: str) -> bool:
+    """True iff the file parses and every array matches its checksum."""
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            _read_payload(path)
+        return True
+    except (CheckpointCorruptError, OSError):
+        return False
+
+
+def latest_valid_step(directory: str) -> int | None:
+    """Newest step whose checkpoint file passes verification."""
+    for s in reversed(list_checkpoints(directory)):
+        if verify_checkpoint(_ckpt_path(directory, s)):
+            return s
+    return None
+
+
 class MissingLeafError(KeyError):
     """A template leaf absent from the checkpoint; carries the leaf path so
     callers (e.g. layout migrations) don't parse the message text."""
@@ -106,22 +250,9 @@ class MissingLeafError(KeyError):
         self.leaf_path = leaf_path
 
 
-def restore_checkpoint(
-    directory: str,
-    template: Any,
-    *,
-    step: int | None = None,
-) -> tuple[Any, int, dict]:
-    """Restore into the template's structure. Returns (tree, step, meta)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"ckpt_{step:010d}.msgpack")
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+def _materialize(payload: dict, template: Any) -> tuple[Any, int, dict]:
+    """Apply a verified payload onto the template pytree."""
     arrays = payload["arrays"]
-
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     new_leaves = []
     for kpath, leaf in leaves_with_paths:
@@ -151,3 +282,47 @@ def restore_checkpoint(
         new_leaves.append(arr.copy())
     tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
     return tree, payload["step"], payload.get("meta", {})
+
+
+def restore_checkpoint(
+    directory: str,
+    template: Any,
+    *,
+    step: int | None = None,
+    fallback: bool | None = None,
+) -> tuple[Any, int, dict]:
+    """Restore into the template's structure. Returns (tree, step, meta).
+
+    ``step=None`` (auto-resume) walks checkpoints newest -> oldest and
+    restores the newest file that passes CRC verification — a truncated or
+    bit-flipped latest checkpoint is skipped with a warning instead of
+    killing the restore (DESIGN.md §8).  An explicit ``step`` never falls
+    back (``fallback`` overrides either default).  Template mismatches
+    (:class:`MissingLeafError`, shape errors) are NOT fallback events:
+    they indicate the wrong template, not a damaged file, and re-raise.
+    """
+    if fallback is None:
+        fallback = step is None
+    if step is None:
+        candidates = list(reversed(list_checkpoints(directory)))
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    else:
+        candidates = [step]
+    last_exc: Exception | None = None
+    for s in candidates:
+        path = _ckpt_path(directory, s)
+        try:
+            payload = _read_payload(path)
+        except (CheckpointCorruptError, OSError) as exc:
+            if not fallback:
+                raise
+            warnings.warn(
+                f"skipping invalid checkpoint step {s}: {exc}; "
+                "falling back to the next-newest valid one", stacklevel=2)
+            last_exc = exc
+            continue
+        return _materialize(payload, template)
+    raise CheckpointCorruptError(
+        f"no valid checkpoint in {directory} "
+        f"(tried {len(candidates)}; last error: {last_exc})")

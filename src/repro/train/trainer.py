@@ -85,6 +85,22 @@ class TrainConfig:
     # would otherwise dominate the fit) and the bounded sample window
     cost_refit_warmup: int = 2
     cost_refit_window: int = 256
+    # divergence rollback (DESIGN.md §8): when on, a streak of non-finite
+    # losses (divergence_nan_streak) or of losses > divergence_spike_factor
+    # x the trailing-median (divergence_spike_streak over a
+    # divergence_window history) restores the newest VALID checkpoint,
+    # multiplies the LR by rollback_lr_factor (cumulative, rides in
+    # ``opt_state["lr_scale"]`` so it checkpoints; 1.0 = keep LR), and
+    # quarantines the streak's batch indices via ``Trainer.on_quarantine``.
+    # Scaler-skipped steps (§4 overflow rejections) never count.  Off by
+    # default: the legacy single-NaN restore-or-raise guard applies.
+    rollback_on_divergence: bool = False
+    divergence_nan_streak: int = 2
+    divergence_spike_factor: float = 10.0
+    divergence_spike_streak: int = 4
+    divergence_window: int = 32
+    rollback_lr_factor: float = 0.5
+    max_rollbacks: int = 8
 
     @property
     def init_lr(self) -> float:
@@ -112,15 +128,21 @@ def _apply_grads(grads, opt_state, params, lr, train_cfg: TrainConfig,
     Adam -> skip-on-nonfinite -> scaler update (DESIGN.md §4).
 
     ``opt_state`` may carry a ``"loss_scale"`` subtree; its presence (a
-    trace-time structure property) turns on the scaled path.  Returns
-    (params, opt_state, extra_metrics).
+    trace-time structure property) turns on the scaled path.  An
+    ``opt_state["lr_scale"]`` scalar (divergence rollback, DESIGN.md §8)
+    multiplies the schedule LR and passes through ``adam_update`` like any
+    extra state key.  Returns (params, opt_state, extra_metrics).
     """
+    lr_scale = opt_state.get("lr_scale")
+    if lr_scale is not None:
+        lr = lr * lr_scale
     scaler = opt_state.get("loss_scale")
     if scaler is None:
         grads = clip_by_global_norm(grads, train_cfg.grad_clip)
         params, opt_state = adam_update(grads, opt_state, params, lr,
                                         train_cfg.adam)
-        return params, opt_state, {}
+        extra = {} if lr_scale is None else {"lr_scale": lr_scale}
+        return params, opt_state, extra
 
     adam_state = {k: v for k, v in opt_state.items() if k != "loss_scale"}
     # unscale to f32 BEFORE clipping so the clip threshold is in true
@@ -141,6 +163,8 @@ def _apply_grads(grads, opt_state, params, lr, train_cfg: TrainConfig,
     opt_state = dict(adam_state, loss_scale=scaler)
     extra = {"loss_scale": scaler["scale"],
              "grads_finite": finite.astype(jnp.float32)}
+    if lr_scale is not None:
+        extra["lr_scale"] = lr_scale
     return params, opt_state, extra
 
 
@@ -459,11 +483,13 @@ def make_chgnet_accum_step_fns(model_cfg: CHGNetConfig,
 
 
 def _strip_precision_state(state: dict) -> dict:
-    """Trainer-state template minus the mixed-precision-only leaves
-    (``opt_state["loss_scale"]`` / ``opt_state["master"]``) — the shape a
-    legacy f32 checkpoint has (DESIGN.md §4 migration)."""
+    """Trainer-state template minus the policy-dependent leaves
+    (``opt_state["loss_scale"]`` / ``opt_state["master"]`` from DESIGN.md
+    §4, ``opt_state["lr_scale"]`` from the §8 rollback policy) — the shape
+    a checkpoint written under different flags has.  The restore path
+    re-grows whichever of them this trainer wants."""
     opt = {k: v for k, v in state["opt_state"].items()
-           if k not in ("loss_scale", "master")}
+           if k not in ("loss_scale", "master", "lr_scale")}
     return dict(state, opt_state=opt)
 
 
@@ -483,6 +509,8 @@ class Trainer:
         ckpt_every: int = 100,
         keep: int = 3,
         compile_cache: CompileCache | None = None,
+        async_ckpt: bool = False,
+        shutdown=None,
     ):
         self.model_cfg = model_cfg
         self.train_cfg = train_cfg
@@ -505,15 +533,47 @@ class Trainer:
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.keep = keep
+        # async checkpoints (DESIGN.md §8): snapshot on the loop thread,
+        # serialize/fsync/prune on a background writer; sync mode (the
+        # default) keeps the reference single-threaded path for tests
+        self._ckpt_writer = None
+        if async_ckpt and ckpt_dir is not None:
+            from repro.runtime.async_ckpt import AsyncCheckpointWriter
+
+            self._ckpt_writer = AsyncCheckpointWriter(ckpt_dir, keep=keep)
+        # preemption (DESIGN.md §8): a runtime.fault.GracefulShutdown whose
+        # flag is polled every step; on SIGTERM the loop writes a final
+        # checkpoint + resume marker and raises PreemptionError
+        self.shutdown = shutdown
         # step functions go through the shared repro.batching compile cache
         # so a restarted Trainer (fault tolerance path) reuses traced steps
         cache = compile_cache if compile_cache is not None \
             else global_compile_cache()
         self.compile_cache = cache
         self._build_steps()
-        from repro.runtime.fault import StragglerWatch
+        from repro.runtime.fault import DivergenceSentinel, StragglerWatch
 
         self.straggler = StragglerWatch()
+        # divergence rollback (DESIGN.md §8): the sentinel trips on
+        # NaN/spike streaks; lr_scale rides in opt_state so the halved LR
+        # survives checkpoints; quarantine bookkeeping maps the streak
+        # back to dataset indices when batches arrive tagged
+        if train_cfg.rollback_on_divergence:
+            self.sentinel = DivergenceSentinel(
+                window=train_cfg.divergence_window,
+                nan_streak=train_cfg.divergence_nan_streak,
+                spike_factor=train_cfg.divergence_spike_factor,
+                spike_streak=train_cfg.divergence_spike_streak)
+            self.opt_state["lr_scale"] = jnp.asarray(1.0, jnp.float32)
+        else:
+            self.sentinel = None
+        self._lr_scale = 1.0
+        self.rollbacks = 0
+        self.quarantined: set[int] = set()
+        self.on_quarantine: Callable[[list[int]], None] | None = None
+        from collections import deque
+
+        self._recent_indices: deque = deque(maxlen=max(2 * ckpt_every, 64))
         # live cost-model refit state (TrainConfig.cost_refit_every):
         # (micro_sizes, wall_time) samples, the latest refit CostModel, and
         # the consumer callback (the launcher wires it to
@@ -566,19 +626,42 @@ class Trainer:
     def state(self):
         return {"params": self.params, "opt_state": self.opt_state}
 
-    def save(self):
+    def save(self, *, wait: bool = False):
+        """Checkpoint the current state (async when the Trainer was built
+        with ``async_ckpt=True``; ``wait`` forces durability — used for
+        final/preemption saves)."""
         if self.ckpt_dir is None:
+            return
+        meta = {"model_cfg": dataclasses.asdict(self.model_cfg)}
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.save(self.step, self.state(), extra_meta=meta)
+            if wait:
+                self._ckpt_writer.flush()
             return
         from repro.runtime.checkpoint import save_checkpoint
 
         save_checkpoint(
             self.ckpt_dir, self.step, self.state(), keep=self.keep,
-            extra_meta={"model_cfg": dataclasses.asdict(self.model_cfg)},
+            extra_meta=meta,
         )
+
+    def flush_checkpoints(self):
+        """Block until every queued async checkpoint is durably written."""
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.flush()
+
+    def close(self):
+        """Flush + stop the async checkpoint writer (idempotent)."""
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.close()
 
     def maybe_restore(self) -> bool:
         if self.ckpt_dir is None:
             return False
+        # land any in-flight async write first, so "newest valid" below
+        # includes it; restore_checkpoint(step=None) then walks newest ->
+        # oldest past corrupt/truncated files (DESIGN.md §8)
+        self.flush_checkpoints()
         from repro.runtime.checkpoint import latest_step, restore_checkpoint
 
         if latest_step(self.ckpt_dir) is None:
@@ -597,7 +680,7 @@ class Trainer:
         # and any failure of a migration attempt — re-raises the FIRST
         # error so the real mismatch surfaces, not a misleading one.
         packed_keys = ("['w']", "['b']", "['ln_scale']", "['ln_bias']")
-        precision_keys = ("['loss_scale']", "['master']")
+        precision_keys = ("['loss_scale']", "['master']", "['lr_scale']")
         from repro.core.interaction import (
             gated_mlp_legacy_template, pack_gated_mlp_params)
 
@@ -641,6 +724,12 @@ class Trainer:
             if self._scale_kind != "none":
                 self.opt_state["loss_scale"] = loss_scale_init(
                     self.train_cfg.loss_scale)
+            if self.train_cfg.rollback_on_divergence:
+                # legacy checkpoint without lr_scale: re-grow it at the
+                # trainer's CURRENT cumulative rollback factor, so a
+                # post-rollback restore keeps the backed-off LR
+                self.opt_state["lr_scale"] = jnp.asarray(
+                    self._lr_scale, jnp.float32)
         self.step = step
         return True
 
@@ -716,6 +805,50 @@ class Trainer:
         if self.on_cost_model is not None:
             self.on_cost_model(self.cost_model)
 
+    # -- divergence rollback / preemption (DESIGN.md §8) ---------------------
+    def _rollback(self):
+        """Sentinel tripped: quarantine the streak's batches, restore the
+        newest valid checkpoint, and (optionally) back the LR off."""
+        self.rollbacks += 1
+        if self.rollbacks > self.train_cfg.max_rollbacks:
+            raise FloatingPointError(
+                f"divergence persists after {self.train_cfg.max_rollbacks} "
+                f"rollbacks (step {self.step})")
+        # the streak's batches are the prime suspects: quarantine their
+        # dataset indices so the iterator skips them after the restore
+        trip_len = self.sentinel.last_trip_len if self.sentinel else 0
+        fresh: set[int] = set()
+        for _, idx in list(self._recent_indices)[-max(trip_len, 1):]:
+            fresh.update(int(i) for i in idx)
+        fresh -= self.quarantined
+        if fresh:
+            self.quarantined |= fresh
+            if self.on_quarantine is not None:
+                self.on_quarantine(sorted(fresh))
+        if not self.maybe_restore():
+            raise FloatingPointError(
+                f"divergence at step {self.step} with no checkpoint to "
+                "roll back to (ckpt_dir unset or empty)")
+        factor = self.train_cfg.rollback_lr_factor
+        if factor < 1.0:
+            self._lr_scale *= factor
+            self.opt_state["lr_scale"] = jnp.asarray(
+                self._lr_scale, jnp.float32)
+
+    def _preempt(self):
+        """SIGTERM (or any GracefulShutdown signal): durably checkpoint,
+        drop a resume marker, and raise PreemptionError — which
+        ``run_with_restarts`` never retries (handing control to the
+        scheduler is the point)."""
+        from repro.runtime.fault import PreemptionError, write_resume_marker
+
+        if self.ckpt_dir is not None:
+            self.save(wait=True)
+            signum = self.shutdown.signum if self.shutdown else None
+            write_resume_marker(self.ckpt_dir, self.step,
+                                reason=f"signal {signum}")
+        raise PreemptionError(self.step)
+
     # -- loop -----------------------------------------------------------------
     def train(self, batches, max_steps: int | None = None,
               fault_injector=None) -> list[dict]:
@@ -731,12 +864,21 @@ class Trainer:
             raise
 
     def _train_loop(self, batches, history, max_steps, fault_injector):
+        import numpy as np
+
+        from repro.data.pipeline import TaggedBatch
+
         for batch in batches:
             if max_steps is not None and self.step >= max_steps:
                 break
+            if self.shutdown is not None and self.shutdown.requested:
+                self._preempt()
             t0 = time.perf_counter()
             if fault_injector is not None:
                 fault_injector.maybe_fail(self.step)
+            indices = None
+            if isinstance(batch, TaggedBatch):
+                indices, batch = batch.indices, batch.batch
             if isinstance(batch, StepPlan):
                 self.params, self.opt_state, metrics = self._step_plan(batch)
             else:
@@ -744,12 +886,20 @@ class Trainer:
                     self.params, self.opt_state, batch,
                     jnp.asarray(self.step)
                 )
+            if indices is not None:
+                self._recent_indices.append(
+                    (self.step, np.asarray(indices)))
             loss = float(metrics["loss"])
-            if not jnp.isfinite(loss) and metrics.get("grads_finite", 1.0):
-                # NaN guard: roll back rather than poison the run.  A
-                # scaler-skipped overflow step (grads_finite == 0) is NOT
-                # poison: the update was rejected and the scale backed
-                # off, so params are untouched (DESIGN.md §4)
+            # a scaler-skipped overflow step (grads_finite == 0) is NOT
+            # poison: the update was rejected and the scale backed off,
+            # so params are untouched (DESIGN.md §4)
+            skipped = not bool(metrics.get("grads_finite", 1.0))
+            if self.sentinel is not None:
+                if self.sentinel.record(loss, scaler_skipped=skipped):
+                    self._rollback()
+                    continue
+            elif not jnp.isfinite(loss) and not skipped:
+                # legacy NaN guard: roll back rather than poison the run
                 if self.maybe_restore():
                     continue
                 raise FloatingPointError(f"non-finite loss at step {self.step}")
@@ -758,5 +908,8 @@ class Trainer:
             self._maybe_refit_cost_model()
             history.append({k: float(v) for k, v in metrics.items()})
             if self.ckpt_dir is not None and self.step % self.ckpt_every == 0:
-                self.save()
+                # only checkpoint states the sentinel considers healthy,
+                # so every file on disk is a known-good rollback target
+                if self.sentinel is None or not self.sentinel.suspicious:
+                    self.save()
         return history
