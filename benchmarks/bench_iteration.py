@@ -514,6 +514,115 @@ def _check_memory_bar(rows):
                 f"DESIGN.md §3 requires strictly lower")
 
 
+def run_residency_sweep(
+    batch_size: int = 16,
+    iters: int = 3,
+    residencies: tuple = ("vmem", "hbm"),
+    conv_impls: tuple = ("unfused", "fused"),
+    rungs: tuple = (1, 2, 4),
+    check: bool = True,
+):
+    """table_residency x conv_impl x capacity-rung sweep (DESIGN.md §9).
+
+    One jitted train step per combo; capacity rungs pack the SAME real
+    crystals at k-scaled padded capacities, walking the batch toward the
+    ladder shapes a 10k-atom structure lands on.  ``agg_impl="pallas"``
+    keeps a residency-sensitive kernel in the unfused rows too.  Per row:
+    atoms/s, compiled peak temp bytes (informational off-TPU), the padded
+    operand-table bytes, and the DETERMINISTIC resident-VMEM estimate
+    (``repro.kernels.ops.resident_vmem_estimate``) — interpret mode has
+    no physical VMEM, so the enforced bar compares the same closed form
+    the auto-selection heuristic trusts (kept honest against the wrapper
+    padding math by tests/test_hbm_residency.py).
+
+    ENFORCED bar (``_check_residency_bar``): at the LARGEST rung whose
+    vmem-tier operand tables still fit the budget, every hbm row must
+    show strictly lower resident VMEM than its vmem counterpart at the
+    same (conv_impl, rung).
+    """
+    from repro.kernels.ops import (
+        estimate_table_bytes,
+        resident_vmem_estimate,
+        vmem_budget_bytes,
+    )
+
+    ds, base_caps, _ = _bench_batch(batch_size)
+    real_atoms = int(sum(c.num_atoms for c in ds.crystals))
+    w = LossWeights()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    budget = vmem_budget_bytes()
+    rows = []
+    for k in rungs:
+        caps = base_caps.scaled(k)
+        batch = batch_crystals(ds.crystals, ds.graphs, caps)
+        dim = CHGNetConfig().dim
+        table_bytes = estimate_table_bytes(caps.atoms, caps.bonds,
+                                           caps.angles, dim)
+        for conv in conv_impls:
+            for resid in residencies:
+                cfg = CHGNetConfig(readout="direct", conv_impl=conv,
+                                   agg_impl="pallas",
+                                   table_residency=resid)
+                grad_fn = jax.jit(jax.grad(
+                    lambda p, b, cfg=cfg: chgnet_loss_fn(p, cfg, b, w)[0]))
+                compiled = grad_fn.lower(params, batch).compile()
+                mem = compiled.memory_analysis()
+                step_s = _time(grad_fn, params, batch, iters=iters)
+                rows.append({
+                    "name": f"iter_resid_{resid}_conv_{conv}_x{k}",
+                    "table_residency": resid,
+                    "conv_impl": conv,
+                    "rung": k,
+                    "step_us": step_s * 1e6,
+                    "atoms_per_s": real_atoms / step_s,
+                    "peak_temp_bytes": getattr(mem, "temp_size_in_bytes",
+                                               None),
+                    "table_bytes": table_bytes,
+                    "fits_vmem": table_bytes <= budget,
+                    "resident_vmem_bytes": resident_vmem_estimate(
+                        resid, caps.atoms, caps.bonds, caps.angles, dim),
+                    "note": (f"B={batch_size} atoms={real_atoms} caps="
+                             f"({caps.atoms},{caps.bonds},{caps.angles}) "
+                             f"budget={budget}"),
+                })
+    if check:
+        _check_residency_bar(rows)
+    return rows
+
+
+def _check_residency_bar(rows):
+    """DESIGN.md §9 bar, enforced so a regression FAILS the CI bench step:
+    at the largest capacity rung the vmem tier still fits, the hbm tier's
+    resident VMEM (double-buffered scratch only) must be strictly below
+    the vmem tier's (whole operand tables)."""
+    fitting = [r["rung"] for r in rows
+               if r["table_residency"] == "vmem" and r["fits_vmem"]]
+    if not fitting:
+        rung = min(r["rung"] for r in rows)
+        print(f"WARNING: no rung fits the vmem budget; §9 bar checked at "
+              f"the smallest rung x{rung} instead")
+    else:
+        rung = max(fitting)
+    by = {(r["table_residency"], r["conv_impl"]): r
+          for r in rows if r["rung"] == rung}
+    for (resid, conv), r in by.items():
+        if resid != "hbm":
+            continue
+        v = by.get(("vmem", conv))
+        if v is None:
+            continue
+        hb, vb = r["resident_vmem_bytes"], v["resident_vmem_bytes"]
+        if hb >= vb:
+            raise RuntimeError(
+                f"table_residency='hbm' resident VMEM not below vmem tier "
+                f"at rung x{rung}: {hb:,} >= {vb:,} bytes "
+                f"(conv_impl={conv!r}) — DESIGN.md §9 requires strictly "
+                f"lower")
+        print(f"residency bar OK (conv={conv}, rung x{rung}): "
+              f"hbm {hb:,} < vmem {vb:,} resident bytes "
+              f"(tables {r['table_bytes']:,})")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -531,6 +640,12 @@ if __name__ == "__main__":
                          "memory + Eu/E bond-tensor bytes per store x "
                          "conv_impl, with the undirected<directed bars "
                          "enforced (DESIGN.md §5)")
+    ap.add_argument("--table-residency", default=None, metavar="TIERS",
+                    help="comma-separated residency tiers to sweep (e.g. "
+                         "vmem,hbm); atoms/s + table bytes + resident-VMEM "
+                         "estimate per tier x conv_impl x capacity rung, "
+                         "with the hbm<vmem resident-VMEM bar enforced at "
+                         "the largest vmem-feasible rung (DESIGN.md §9)")
     ap.add_argument("--stress-mode", default=None, metavar="MODES",
                     help="comma-separated stress modes to sweep (e.g. "
                          "mlp,bond_virial); atoms/s + compiled peak memory "
@@ -552,12 +667,18 @@ if __name__ == "__main__":
     stress_rows = [] if args.stress_mode is None else run_stress_mode_sweep(
         batch_size=bs, iters=iters,
         stress_modes=tuple(args.stress_mode.split(",")))
+    resid_rows = [] if args.table_residency is None else run_residency_sweep(
+        batch_size=bs, iters=iters,
+        residencies=tuple(args.table_residency.split(",")),
+        conv_impls=("fused",) if args.quick else ("unfused", "fused"),
+        rungs=(1, 2) if args.quick else (1, 2, 4))
     # the probe's two extra train-step compiles only pay off when the
     # numbers land in the artifact
     donation_rows = run_donation_probe(batch_size=bs) if args.json else []
     for r in stage_rows:
         print(",".join(map(str, r)))
-    for r in sweep_rows + precision_rows + store_rows + stress_rows:
+    for r in sweep_rows + precision_rows + store_rows + stress_rows \
+            + resid_rows:
         print(f"{r['name']},{r['step_us']},peak_temp={r['peak_temp_bytes']}"
               f",atoms_per_s={r['atoms_per_s']:.0f}")
     for r in donation_rows:
@@ -571,6 +692,7 @@ if __name__ == "__main__":
             "precision": precision_rows,
             "bond_store": store_rows,
             "stress_mode": stress_rows,
+            "table_residency": resid_rows,
             "donation": donation_rows,
         }
         with open(args.json, "w") as f:

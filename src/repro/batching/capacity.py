@@ -37,12 +37,18 @@ class BatchCapacities:
     Graphs whose symmetry was broken by ``max_nbr_per_atom`` capping fall
     back to singleton undirected entries (Eu > E/2) and need an explicit
     ``und_bonds`` override to pack.
+
+    ``und_angles`` likewise caps the angle-pair dedup store; ``None``
+    derives ``ceil(angles / 2)`` — exact for the ordered angle lists
+    ``_build_angles`` emits (each unordered pair appears twice, Au ==
+    A/2); hand-built asymmetric angle lists need an override.
     """
 
     atoms: int
     bonds: int
     angles: int
     und_bonds: int | None = None
+    und_angles: int | None = None
 
     @property
     def und_cap(self) -> int:
@@ -51,11 +57,29 @@ class BatchCapacities:
             return self.und_bonds
         return self.bonds // 2 + self.bonds % 2
 
-    def fits(self, n_atoms: int, n_bonds: int, n_angles: int) -> bool:
+    @property
+    def und_angle_cap(self) -> int:
+        """Dedup-angle capacity (``angles``-derived unless overridden)."""
+        if self.und_angles is not None:
+            return self.und_angles
+        return self.angles // 2 + self.angles % 2
+
+    def fits(
+        self,
+        n_atoms: int,
+        n_bonds: int,
+        n_angles: int,
+        n_und_bonds: int | None = None,
+        n_und_angles: int | None = None,
+    ) -> bool:
+        """True iff the counts fit; und counts are checked when given
+        (producers with broken pair symmetry should pass them)."""
         return (
             n_atoms <= self.atoms
             and n_bonds <= self.bonds
             and n_angles <= self.angles
+            and (n_und_bonds is None or n_und_bonds <= self.und_cap)
+            and (n_und_angles is None or n_und_angles <= self.und_angle_cap)
         )
 
     @property
@@ -67,7 +91,8 @@ class BatchCapacities:
         """Capacities for ``k`` structures that each fit this bucket."""
         return BatchCapacities(
             self.atoms * k, self.bonds * k, self.angles * k,
-            None if self.und_bonds is None else self.und_bonds * k)
+            None if self.und_bonds is None else self.und_bonds * k,
+            None if self.und_angles is None else self.und_angles * k)
 
 
 def capacity_from_stats(
@@ -138,10 +163,19 @@ class CapacityLadder:
             if b.fits(n_atoms, n_bonds, n_angles):
                 return b
         top = self.buckets[-1]
+        bonds = _align_up(max(n_bonds, top.bonds), self.align)
+        angles = _align_up(max(n_angles, top.angles), self.align)
+        # explicit und overrides on the top bucket (asymmetric producers)
+        # carry over, but never below the derived ceil(cap / 2) of the
+        # *grown* bond/angle caps — overflow must not shrink headroom
         return BatchCapacities(
             atoms=_align_up(max(n_atoms, top.atoms), self.align),
-            bonds=_align_up(max(n_bonds, top.bonds), self.align),
-            angles=_align_up(max(n_angles, top.angles), self.align),
+            bonds=bonds,
+            angles=angles,
+            und_bonds=(None if top.und_bonds is None
+                       else max(top.und_bonds, bonds // 2 + bonds % 2)),
+            und_angles=(None if top.und_angles is None
+                        else max(top.und_angles, angles // 2 + angles % 2)),
         )
 
     @property

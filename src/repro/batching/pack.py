@@ -40,7 +40,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import CrystalGraphBatch
-from repro.core.neighbors import Crystal, GraphIndices, build_mirror_maps
+from repro.core.neighbors import (
+    Crystal,
+    GraphIndices,
+    build_angle_mirror_maps,
+    build_mirror_maps,
+)
 
 from .capacity import BatchCapacities
 
@@ -102,6 +107,24 @@ def batch_crystals(
             f"max_nbr_per_atom capping — pass BatchCapacities(..., "
             f"und_bonds=...) with explicit headroom"
         )
+    # angle-pair dedup store: same repair-or-reuse treatment as the bond
+    # mirror maps (the angle cosine is swap-symmetric, so each unordered
+    # {ij, ik} pair is stored once and expanded via angle_pair)
+    a_mirrors = [
+        (g.angle_pair, g.und_angle_rep)
+        if g.angle_pair is not None
+        else build_angle_mirror_maps(g.angle_ij, g.angle_ik)
+        for g in graphs
+    ]
+    ua_cap = caps.und_angle_cap
+    tot_ua = sum(int(m[1].shape[0]) for m in a_mirrors)
+    if tot_ua > ua_cap:
+        raise ValueError(
+            f"batch has {tot_ua} deduplicated angles, exceeding "
+            f"und_angle_cap {ua_cap}; the angle list is likely asymmetric "
+            f"(hand-built) — pass BatchCapacities(..., und_angles=...) "
+            f"with explicit headroom"
+        )
 
     atom_z = np.zeros((caps.atoms,), np.int32)
     atom_mask = np.zeros((caps.atoms,), dtype)
@@ -125,6 +148,10 @@ def batch_crystals(
     und_image = np.zeros((und_cap, 3), dtype)
     und_crystal = np.zeros((und_cap,), np.int32)
     und_mask = np.zeros((und_cap,), dtype)
+    angle_pair = np.zeros((caps.angles,), np.int32)
+    und_angle_ij = np.zeros((ua_cap,), np.int32)
+    und_angle_ik = np.zeros((ua_cap,), np.int32)
+    und_angle_mask = np.zeros((ua_cap,), dtype)
     energy = np.zeros((b,), dtype)
     forces = np.zeros((caps.atoms, 3), dtype)
     stress = np.zeros((b, 3, 3), dtype)
@@ -135,10 +162,12 @@ def batch_crystals(
     b_off = 0
     g_off = 0
     u_off = 0
-    for ci, (c, g, (g_pair, g_sign, g_rep)) in enumerate(
-            zip(crystals, graphs, mirrors)):
+    ua_off = 0
+    for ci, (c, g, (g_pair, g_sign, g_rep), (g_apair, g_arep)) in enumerate(
+            zip(crystals, graphs, mirrors, a_mirrors)):
         na, nb, ng = c.num_atoms, g.num_bonds, g.num_angles
         nu = int(g_rep.shape[0])
+        nua = int(g_arep.shape[0])
         atom_z[a_off:a_off + na] = c.atomic_numbers
         atom_mask[a_off:a_off + na] = 1.0
         atom_crystal[a_off:a_off + na] = ci
@@ -161,6 +190,10 @@ def batch_crystals(
         und_image[u_off:u_off + nu] = g.bond_image[g_rep].astype(dtype)
         und_crystal[u_off:u_off + nu] = ci
         und_mask[u_off:u_off + nu] = 1.0
+        angle_pair[g_off:g_off + ng] = g_apair + ua_off
+        und_angle_ij[ua_off:ua_off + nua] = g.angle_ij[g_arep] + b_off
+        und_angle_ik[ua_off:ua_off + nua] = g.angle_ik[g_arep] + b_off
+        und_angle_mask[ua_off:ua_off + nua] = 1.0
         if c.energy is not None:
             energy[ci] = c.energy
         if c.forces is not None:
@@ -173,6 +206,7 @@ def batch_crystals(
         b_off += nb
         g_off += ng
         u_off += nu
+        ua_off += nua
 
     # Canonicalize to the sorted-segment layout. ``build_graph`` already
     # emits per-crystal indices sorted by center, and crystals are packed
@@ -189,8 +223,13 @@ def batch_crystals(
     if g_off:
         angle_ij[:g_off] = inv_b[angle_ij[:g_off]]
         angle_ik[:g_off] = inv_b[angle_ik[:g_off]]
+    # the dedup-angle store indexes bonds too — remap, but never re-sort
+    # (it's a side table addressed through angle_pair, like the und bonds)
+    if ua_off:
+        und_angle_ij[:ua_off] = inv_b[und_angle_ij[:ua_off]]
+        und_angle_ik[:ua_off] = inv_b[und_angle_ik[:ua_off]]
     perm_a = np.argsort(angle_ij[:g_off], kind="stable")
-    for arr in (angle_ij, angle_ik, angle_mask):
+    for arr in (angle_ij, angle_ik, angle_mask, angle_pair):
         arr[:g_off] = arr[perm_a]
     bond_offsets = _csr_offsets(bond_center[:b_off], caps.atoms)
     angle_offsets = _csr_offsets(angle_ij[:g_off], caps.bonds)
@@ -204,6 +243,8 @@ def batch_crystals(
         _validate_mirror(bond_mask, bond_center, bond_nbr, bond_image,
                          bond_crystal, bond_pair, bond_sign, und_center,
                          und_nbr, und_image, und_crystal, und_mask)
+        _validate_angle_mirror(angle_mask, angle_ij, angle_ik, angle_pair,
+                               und_angle_ij, und_angle_ik, und_angle_mask)
 
     return CrystalGraphBatch(
         atom_z=jnp.asarray(atom_z),
@@ -229,6 +270,10 @@ def batch_crystals(
         und_image=jnp.asarray(und_image),
         und_crystal=jnp.asarray(und_crystal),
         und_mask=jnp.asarray(und_mask),
+        angle_pair=jnp.asarray(angle_pair),
+        und_angle_ij=jnp.asarray(und_angle_ij),
+        und_angle_ik=jnp.asarray(und_angle_ik),
+        und_angle_mask=jnp.asarray(und_angle_mask),
         energy=jnp.asarray(energy),
         forces=jnp.asarray(forces),
         stress=jnp.asarray(stress),
@@ -267,6 +312,12 @@ def validate_layout(batch: CrystalGraphBatch) -> CrystalGraphBatch:
         np.asarray(batch.bond_sign), np.asarray(batch.und_center),
         np.asarray(batch.und_nbr), np.asarray(batch.und_image),
         np.asarray(batch.und_crystal), np.asarray(batch.und_mask),
+    )
+    _validate_angle_mirror(
+        np.asarray(batch.angle_mask), np.asarray(batch.angle_ij),
+        np.asarray(batch.angle_ik), np.asarray(batch.angle_pair),
+        np.asarray(batch.und_angle_ij), np.asarray(batch.und_angle_ik),
+        np.asarray(batch.und_angle_mask),
     )
     return batch
 
@@ -343,6 +394,42 @@ def _validate_mirror(bond_mask, bond_center, bond_nbr, bond_image,
            "each und row needs exactly one sign=+1 reference")
     _check(np.all(refs_minus <= 1),
            "an und row has more than one sign=-1 reference")
+
+
+def _validate_angle_mirror(angle_mask, angle_ij, angle_ik, angle_pair,
+                           und_angle_ij, und_angle_ik,
+                           und_angle_mask) -> None:
+    """Angle-pair dedup invariant (mirrors ``_validate_mirror``).
+
+    For every real angle t with p = angle_pair[t], (angle_ij, angle_ik)[t]
+    equals the stored (und_angle_ij, und_angle_ik)[p] either same-oriented
+    or swapped; each real dedup row is referenced by exactly one
+    same-orientation angle and at most one swapped angle; und_angle_mask
+    is a real-prefix indicator; padded angles carry pair=0.
+    """
+    na = int(angle_mask.sum())
+    nu = int(und_angle_mask.sum())
+    _check(
+        np.all(und_angle_mask[:nu] == 1.0)
+        and np.all(und_angle_mask[nu:] == 0.0),
+        "und_angle_mask is not a real-prefix indicator")
+    _check(np.all(angle_pair[na:] == 0),
+           "padded angles must carry angle_pair=0")
+    p = angle_pair[:na]
+    _check(np.all((p >= 0) & (p < max(nu, 1))),
+           "angle_pair out of range of the real dedup-angle prefix")
+    same = (angle_ij[:na] == und_angle_ij[p]) \
+        & (angle_ik[:na] == und_angle_ik[p])
+    flip = (angle_ij[:na] == und_angle_ik[p]) \
+        & (angle_ik[:na] == und_angle_ij[p])
+    _check(np.all(same | flip),
+           "an angle disagrees with its dedup row in both orientations")
+    refs_same = np.bincount(p[same], minlength=nu)
+    refs_flip = np.bincount(p[flip & ~same], minlength=nu)
+    _check(np.all(refs_same == 1),
+           "each dedup-angle row needs exactly one same-orientation ref")
+    _check(np.all(refs_flip <= 1),
+           "a dedup-angle row has more than one swapped reference")
 
 
 def atom_offsets(crystals: list[Crystal]) -> np.ndarray:

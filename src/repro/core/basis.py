@@ -148,15 +148,27 @@ def _bond_vectors(cart, lattice, center, nbr, image, crystal):
     return vec, dist
 
 
-def _angle_geometry(graph: CrystalGraphBatch, vec, dist):
-    """Angle cosines between directed bonds ij / ik sharing a center."""
-    v_ij = vec[graph.angle_ij]
-    v_ik = vec[graph.angle_ik]
-    d_ij = dist[graph.angle_ij]
-    d_ik = dist[graph.angle_ik]
+def _angle_cosines(vec, dist, idx_ij, idx_ik):
+    """Angle cosines between the bonds selected by two index arrays.
+
+    The formula is *bitwise* symmetric under (idx_ij, idx_ik) swap —
+    elementwise products commute and the component sum runs in the same
+    order — which is what makes the angle-pair dedup store exact: the
+    value at a dedup row equals the value at both directed angle rows it
+    represents.
+    """
+    v_ij = vec[idx_ij]
+    v_ik = vec[idx_ik]
+    d_ij = dist[idx_ij]
+    d_ik = dist[idx_ik]
     cos_t = jnp.sum(v_ij * v_ik, axis=-1) / (d_ij * d_ik + 1e-12)
     cos_t = jnp.clip(cos_t, -1.0 + 1e-7, 1.0 - 1e-7)
     return cos_t, jnp.arccos(cos_t)
+
+
+def _angle_geometry(graph: CrystalGraphBatch, vec, dist):
+    """Angle cosines between directed bonds ij / ik sharing a center."""
+    return _angle_cosines(vec, dist, graph.angle_ij, graph.angle_ik)
 
 
 def compute_geometry(
@@ -189,6 +201,7 @@ def compute_geometry_undirected(
     *,
     displacement: jnp.ndarray | None = None,
     strain: jnp.ndarray | None = None,
+    angle_rows: str = "directed",
 ):
     """Geometry on the undirected half-graph store (DESIGN.md §5).
 
@@ -203,8 +216,19 @@ def compute_geometry_undirected(
     Padded directed bonds carry sign 0, so their expanded vectors vanish
     like the directed store's padded slot-0 bonds.
 
+    ``angle_rows`` selects where the angle cosines are evaluated:
+      - ``"directed"``: at the full ordered angle list (``angle_ij`` /
+        ``angle_ik``), the reference layout;
+      - ``"undirected"``: at the angle-pair dedup store
+        (``und_angle_ij`` / ``und_angle_ik``, Au == Na/2 rows) — the
+        cosine is bitwise swap-symmetric (see ``_angle_cosines``), so
+        expanding through ``graph.angle_pair`` reproduces the directed
+        values exactly while halving the angle-level geometry, Fourier,
+        and embedding work.
+
     Returns (vec_und (Nu,3), dist_und (Nu,), vec (Nb,3), dist (Nb,),
-    cos_theta (Na,), theta (Na,)).
+    cos_theta, theta) — the angle outputs at Na or Au rows per
+    ``angle_rows``.
     """
     cart, lattice = _cart_positions(graph, displacement, strain)
     vec_und, dist_und = _bond_vectors(
@@ -213,5 +237,11 @@ def compute_geometry_undirected(
     )
     vec = graph.bond_sign[..., None] * vec_und[graph.bond_pair]
     dist = dist_und[graph.bond_pair]
-    cos_t, theta = _angle_geometry(graph, vec, dist)
+    if angle_rows == "undirected":
+        cos_t, theta = _angle_cosines(
+            vec, dist, graph.und_angle_ij, graph.und_angle_ik)
+    elif angle_rows == "directed":
+        cos_t, theta = _angle_geometry(graph, vec, dist)
+    else:
+        raise ValueError(f"unknown angle_rows {angle_rows!r}")
     return vec_und, dist_und, vec, dist, cos_t, theta

@@ -93,6 +93,15 @@ class CHGNetConfig:
     # Ignored under readout="autodiff" (stress comes from dE/d(strain)).
     stress_mode: str = "mlp"     # "mlp" | "bond_virial"
     stress_scale: float = 0.1
+    # Operand-table residency tier of the Pallas kernels (DESIGN.md §9).
+    # "vmem": tables whole-array VMEM-resident (the classic lowering);
+    # "hbm": tables stay in HBM and stream through double-buffered DMA
+    # ping/pong scratch — batch size becomes HBM-bounded (10k+-atom
+    # structures); "auto" (default): each kernel launch estimates its
+    # padded operand-table bytes against the VMEM budget
+    # (kernels.ops.vmem_budget_bytes) and picks — small batches keep the
+    # exact vmem lowering, oversized ones transparently stream.
+    table_residency: str = "auto"  # "auto" | "vmem" | "hbm"
 
     def with_(self, **kw) -> "CHGNetConfig":
         return dataclasses.replace(self, **kw)
@@ -158,10 +167,13 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
     # embedding run ONCE per undirected pair (Eu ≈ E/2); only e^0 is
     # expanded to the directed store (it seeds e, which bond_conv updates
     # per directed bond) — e^a/e^b stay at Eu for the whole trunk.
+    # Angle-pair dedup rides along: theta / Fourier / angle-embed run at
+    # the Au == Na/2 dedup rows and expand via angle_pair below.
     if cfg.bond_store == "undirected":
         vec_und, dist_und, vec, dist, _cos, theta = \
             basis.compute_geometry_undirected(
-                graph, displacement=displacement, strain=strain
+                graph, displacement=displacement, strain=strain,
+                angle_rows="undirected",
             )
         rbf_dist = dist_und
     elif cfg.bond_store == "directed":
@@ -201,14 +213,20 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
     e0, e_a, e_b = jnp.split(packed, 3, axis=-1)
     v = params["atom_embed"].astype(cd)[graph.atom_z] \
         * graph.atom_mask[..., None].astype(cd)
-    a = linear_apply(params["angle_embed"], four) \
-        * graph.angle_mask[..., None].astype(cd)
     if cfg.bond_store == "undirected":
+        # angle-pair dedup: ``four`` is at the Au dedup rows — embed once
+        # per unordered (ij, ik) pair, expand through angle_pair, and
+        # re-mask (padded angles carry pair=0)
+        a_und = linear_apply(params["angle_embed"], four) \
+            * graph.und_angle_mask[..., None].astype(cd)
+        a = a_und[graph.angle_pair] * graph.angle_mask[..., None].astype(cd)
         umask = graph.und_mask[..., None].astype(cd)
         e_a = e_a * umask
         e_b = e_b * umask
         e = e0[graph.bond_pair] * graph.bond_mask[..., None].astype(cd)
     else:
+        a = linear_apply(params["angle_embed"], four) \
+            * graph.angle_mask[..., None].astype(cd)
         e = e0 * graph.bond_mask[..., None].astype(cd)
 
     for blk in params["blocks"]:
@@ -219,6 +237,7 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
             agg_impl=cfg.agg_impl,
             conv_impl=cfg.conv_impl,
             bond_store=cfg.bond_store,
+            table_residency=cfg.table_residency,
         )
     # last block updates atoms only (matches CHGNet's final atom conv)
     from .interaction import atom_conv
@@ -226,7 +245,7 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
     v = atom_conv(
         params["final_block"], graph, v, e, e_a,
         mlp_impl=cfg.mlp_impl, agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
-        bond_store=cfg.bond_store,
+        bond_store=cfg.bond_store, table_residency=cfg.table_residency,
     )
     # vec_und/dist_und (None for the directed store) ride along for the
     # bond_virial stress tier's undirected half-geometry path (§5/§7)
@@ -269,11 +288,13 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
                 params["force_head"], graph, e, vec, dist,
                 vec_und=vec_und, dist_und=dist_und,
                 agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
-                bond_store=cfg.bond_store)
+                bond_store=cfg.bond_store,
+                table_residency=cfg.table_residency)
         elif cfg.stress_mode == "mlp":
-            forces = heads.force_head_apply(params["force_head"], graph, e,
-                                            vec, dist, agg_impl=cfg.agg_impl,
-                                            conv_impl=cfg.conv_impl)
+            forces = heads.force_head_apply(
+                params["force_head"], graph, e, vec, dist,
+                agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
+                table_residency=cfg.table_residency)
             stress = heads.stress_head_apply(params["stress_head"], graph, v)
         else:
             raise ValueError(f"unknown stress mode {cfg.stress_mode!r}")

@@ -45,6 +45,7 @@ if TYPE_CHECKING:  # host-side capacity policy, see repro.batching
         "bond_offsets", "angle_offsets",
         "bond_pair", "bond_sign", "und_center", "und_nbr", "und_image",
         "und_crystal", "und_mask",
+        "angle_pair", "und_angle_ij", "und_angle_ik", "und_angle_mask",
         "energy", "forces", "stress", "magmoms", "n_atoms_per_crystal",
     ],
     meta_fields=[],
@@ -90,6 +91,15 @@ class CrystalGraphBatch:
     und_image: jnp.ndarray      # (und_cap, 3) f32 periodic image
     und_crystal: jnp.ndarray    # (und_cap,) int32
     und_mask: jnp.ndarray       # (und_cap,) f32
+    # angle-pair dedup store: each unordered short-bond pair {ij, ik} is
+    # stored ONCE (the angle cosine is symmetric under the swap), so
+    # angle geometry / Fourier / angle-embed run at Au == angle_cap/2 and
+    # expand via a = a_und[angle_pair].  Padded angles carry pair=0 and
+    # are re-masked after expansion.
+    angle_pair: jnp.ndarray     # (angle_cap,) int32 -> und angle index
+    und_angle_ij: jnp.ndarray   # (und_angle_cap,) int32 -> bond index
+    und_angle_ik: jnp.ndarray   # (und_angle_cap,) int32 -> bond index
+    und_angle_mask: jnp.ndarray  # (und_angle_cap,) f32
     # labels
     energy: jnp.ndarray         # (B,) f32 total energy (eV)
     forces: jnp.ndarray         # (atom_cap, 3) f32
@@ -116,6 +126,10 @@ class CrystalGraphBatch:
     @property
     def und_cap(self) -> int:
         return self.und_center.shape[0]
+
+    @property
+    def und_angle_cap(self) -> int:
+        return self.und_angle_ij.shape[0]
 
 
 def batch_input_specs(
@@ -148,6 +162,10 @@ def batch_input_specs(
         und_image=s((caps.und_cap, 3), f),
         und_crystal=s((caps.und_cap,), i),
         und_mask=s((caps.und_cap,), f),
+        angle_pair=s((caps.angles,), i),
+        und_angle_ij=s((caps.und_angle_cap,), i),
+        und_angle_ik=s((caps.und_angle_cap,), i),
+        und_angle_mask=s((caps.und_angle_cap,), f),
         energy=s((batch_size,), f),
         forces=s((caps.atoms, 3), f),
         stress=s((batch_size, 3, 3), f),

@@ -101,7 +101,8 @@ def force_head_init(key, dim=64, dtype=jnp.float32):
 
 def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
                      *, agg_impl: str = "scatter",
-                     conv_impl: str = "unfused"):
+                     conv_impl: str = "unfused",
+                     table_residency: str = "auto"):
     """Eq. 7: F_i = sum_j n_ij * x_hat_ij (rotation equivariant).
 
     e: (bond_cap, D) final bond features (invariant); bond_vec/bond_dist
@@ -110,7 +111,8 @@ def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
     pallas layouts accelerate the force readout too.  With
     ``conv_impl="fused"`` the whole readout (scalar MLP -> x_hat weighting
     -> reduce) is one megakernel over the sorted CSR rows (DESIGN.md §3)
-    and ``n_ij`` never reaches HBM.
+    and ``n_ij`` never reaches HBM.  ``table_residency`` selects the
+    kernels' operand-residency tier (DESIGN.md §9).
     """
     # x_hat is derived from f32 geometry; cast it to the bond-feature
     # (compute) dtype at this boundary so the contrib product and the
@@ -124,6 +126,7 @@ def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
             e, x_hat, l0["w"].astype(e.dtype), l0["b"].astype(e.dtype),
             l1["w"].astype(e.dtype), l1["b"].astype(e.dtype),
             graph.bond_center, graph.bond_offsets, graph.atom_cap,
+            table_residency=table_residency,
         )
         return out * graph.atom_mask[..., None].astype(out.dtype)
     n_ij = mlp_apply(p["mlp"], e)[..., 0]  # (Nb,); masked by the aggregate
@@ -131,6 +134,7 @@ def force_head_apply(p, graph: CrystalGraphBatch, e, bond_vec, bond_dist,
     out = segment_aggregate(
         contrib, graph.bond_center, graph.atom_cap, graph.bond_mask,
         agg_impl, offsets=graph.bond_offsets,
+        table_residency=table_residency,
     )
     return out * graph.atom_mask[..., None].astype(out.dtype)
 
@@ -191,7 +195,8 @@ def force_virial_head_apply(p, graph: CrystalGraphBatch, e, bond_vec,
                             bond_dist, *, vec_und=None, dist_und=None,
                             agg_impl: str = "scatter",
                             conv_impl: str = "unfused",
-                            bond_store: str = "directed"):
+                            bond_store: str = "directed",
+                            table_residency: str = "auto"):
     """Single-pass force + bond-virial stress readout (DESIGN.md §7).
 
     Returns ``(forces (A, 3), stress (B, 3, 3) [GPa, f32])``.  Both come
@@ -227,6 +232,7 @@ def force_virial_head_apply(p, graph: CrystalGraphBatch, e, bond_vec,
             l0["b"].astype(e.dtype), l1["w"].astype(e.dtype),
             l1["b"].astype(e.dtype), graph.bond_center, graph.bond_crystal,
             graph.bond_offsets, graph.atom_cap, graph.num_crystals,
+            table_residency=table_residency,
         )
         forces = forces * graph.atom_mask[..., None].astype(forces.dtype)
         return forces, _virial_raw_to_gpa(raw, graph)
@@ -236,6 +242,7 @@ def force_virial_head_apply(p, graph: CrystalGraphBatch, e, bond_vec,
     forces = segment_aggregate(
         contrib, graph.bond_center, graph.atom_cap, graph.bond_mask,
         agg_impl, offsets=graph.bond_offsets,
+        table_residency=table_residency,
     )
     forces = forces * graph.atom_mask[..., None].astype(forces.dtype)
     # per-bond virial weight w = n d (f32 accumulation from here on, §4)

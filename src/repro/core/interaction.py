@@ -189,7 +189,7 @@ def gated_mlp_apply(p, x, impl: str = "packed"):
 # ---------------------------------------------------------------------------
 
 def segment_aggregate(values, segment_ids, num_segments, mask, impl="scatter",
-                      *, offsets=None):
+                      *, offsets=None, table_residency: str = "auto"):
     """sum_{e : seg(e)=s} values[e] * mask[e]  -> (num_segments, D).
 
     The one aggregation engine every reduction in the model routes through
@@ -212,6 +212,10 @@ def segment_aggregate(values, segment_ids, num_segments, mask, impl="scatter",
     of the operand dtype — bf16 edge payloads sum into f32 partials (the
     MXU's native behavior; pinned here so scatter/sorted match on every
     backend) — and the result is cast back to the operand dtype.
+
+    ``table_residency`` (DESIGN.md §9, impl="pallas" only): "vmem" keeps
+    the edge operands whole-array resident, "hbm" streams them with
+    double-buffered DMA, "auto" picks by operand bytes vs the budget.
     """
     v = values * mask[..., None].astype(values.dtype)
     if impl == "scatter":
@@ -240,7 +244,8 @@ def segment_aggregate(values, segment_ids, num_segments, mask, impl="scatter",
             )
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
-        return kops.fused_segment_sum(v, segment_ids, offsets, num_segments)
+        return kops.fused_segment_sum(v, segment_ids, offsets, num_segments,
+                                      table_residency=table_residency)
     raise ValueError(f"unknown aggregate impl {impl!r}")
 
 
@@ -260,7 +265,8 @@ def interaction_block_init(key, dim=64, dtype=jnp.float32):
 
 
 def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
-              conv_impl: str = "unfused", bond_store: str = "directed"):
+              conv_impl: str = "unfused", bond_store: str = "directed",
+              table_residency: str = "auto"):
     """Eq. 4: v_i <- v_i + L_v[ sum_j e^a_ij * phi(v_i, v_j, e_ij) ].
 
     ``conv_impl="fused"`` runs the whole message path (gather -> GatedMLP
@@ -273,6 +279,9 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
     the unfused path explicitly, in the fused path inside the megakernel
     (the mirror-indirected operand class).  The envelope is symmetric
     (e^a_ij == e^a_ji, a function of |r_ij| only), so no sign is applied.
+
+    ``table_residency`` (DESIGN.md §9): operand-table residency tier of
+    the fused/pallas kernels ("vmem" | "hbm" | "auto").
     """
     if conv_impl == "fused":
         from repro.kernels import ops as kops  # lazy: avoid import cycle
@@ -284,6 +293,7 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
             v, e, e_a, mlp["w"], mlp["b"], mlp["ln_scale"], mlp["ln_bias"],
             graph.bond_center, graph.bond_nbr, graph.bond_offsets,
             pair=graph.bond_pair if bond_store == "undirected" else None,
+            table_residency=table_residency,
         )
     elif conv_impl == "unfused":
         f_v = jnp.concatenate(
@@ -293,7 +303,7 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
         msg = gated_mlp_apply(p["atom_mlp"], f_v, mlp_impl) * env
         agg = segment_aggregate(
             msg, graph.bond_center, graph.atom_cap, graph.bond_mask, agg_impl,
-            offsets=graph.bond_offsets,
+            offsets=graph.bond_offsets, table_residency=table_residency,
         )
     else:
         raise ValueError(f"unknown conv impl {conv_impl!r}")
@@ -303,7 +313,8 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
 
 def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
               agg_impl, conv_impl: str = "unfused",
-              bond_store: str = "directed"):
+              bond_store: str = "directed",
+              table_residency: str = "auto"):
     """Eq. 5: e_ij <- e_ij + L_e[ sum_k e^b_ij * e^b_ik * phi(f_e) ].
 
     ``v_in`` is v^{t+1} in the reference variant, v^t in the fast variant.
@@ -324,6 +335,7 @@ def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
             mlp["ln_bias"], graph.angle_ij, graph.angle_ik, center,
             graph.angle_offsets,
             pair=graph.bond_pair if bond_store == "undirected" else None,
+            table_residency=table_residency,
         )
     elif conv_impl == "unfused":
         f_e = jnp.concatenate(
@@ -337,7 +349,7 @@ def bond_conv(p, graph: CrystalGraphBatch, v_in, e, a, e_b, *, mlp_impl,
             msg = msg * e_b[graph.angle_ij] * e_b[graph.angle_ik]
         agg = segment_aggregate(
             msg, graph.angle_ij, graph.bond_cap, graph.angle_mask, agg_impl,
-            offsets=graph.angle_offsets,
+            offsets=graph.angle_offsets, table_residency=table_residency,
         )
     else:
         raise ValueError(f"unknown conv impl {conv_impl!r}")
@@ -372,16 +384,18 @@ def interaction_block_apply(
     agg_impl: str = "scatter",
     conv_impl: str = "unfused",
     bond_store: str = "directed",
+    table_residency: str = "auto",
     update_angles: bool = True,
 ):
     """One interaction block IB^t (paper Eq. 3), either variant."""
     v_new = atom_conv(p, graph, v, e, e_a, mlp_impl=mlp_impl,
                       agg_impl=agg_impl, conv_impl=conv_impl,
-                      bond_store=bond_store)
+                      bond_store=bond_store, table_residency=table_residency)
     if variant == "reference":
         e_new = bond_conv(
             p, graph, v_new, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
             conv_impl=conv_impl, bond_store=bond_store,
+            table_residency=table_residency,
         )
         if update_angles:
             a_new = angle_update(p, graph, v_new, e_new, a, mlp_impl=mlp_impl)
@@ -392,6 +406,7 @@ def interaction_block_apply(
         e_new = bond_conv(
             p, graph, v, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
             conv_impl=conv_impl, bond_store=bond_store,
+            table_residency=table_residency,
         )
         if update_angles:
             a_new = angle_update(p, graph, v, e, a, mlp_impl=mlp_impl)

@@ -71,6 +71,12 @@ class GraphIndices:
     bond_pair: np.ndarray | None = None  # (Nb,) int32 -> undirected id
     bond_sign: np.ndarray | None = None  # (Nb,) f32 +1 rep orientation, -1 mirror
     und_rep: np.ndarray | None = None    # (Nu,) int32 -> representative bond
+    # angle-pair dedup maps: each unordered bond pair {ij, ik} appears
+    # twice in the ordered angle list ((ij, ik) and (ik, ij)); the angle
+    # cosine is symmetric under the swap, so geometry/Fourier/angle-embed
+    # run once per unordered pair (Au == Na/2) and expand via angle_pair
+    angle_pair: np.ndarray | None = None     # (Na,) int32 -> und angle id
+    und_angle_rep: np.ndarray | None = None  # (Au,) int32 -> representative angle
 
     @property
     def num_bonds(self) -> int:
@@ -85,6 +91,13 @@ class GraphIndices:
         if self.und_rep is None:
             raise ValueError("mirror maps not built; see build_mirror_maps")
         return int(self.und_rep.shape[0])
+
+    @property
+    def num_und_angles(self) -> int:
+        if self.und_angle_rep is None:
+            raise ValueError(
+                "angle mirror maps not built; see build_angle_mirror_maps")
+        return int(self.und_angle_rep.shape[0])
 
     def feature_count(self, num_atoms: int) -> int:
         """Paper's load metric: atoms + bonds + angles (Fig. 9)."""
@@ -247,6 +260,69 @@ def build_mirror_maps(
     return bond_pair, bond_sign, und_rep
 
 
+def build_angle_mirror_maps(
+    angle_ij: np.ndarray, angle_ik: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Dedup maps for the ordered angle list (angle-pair mirror treatment).
+
+    ``_build_angles`` emits every *ordered* pair of short bonds sharing a
+    center, so each unordered pair {ij, ik} (ij != ik — the meshgrid
+    excludes the diagonal) appears exactly twice: (ij, ik) and (ik, ij).
+    The angle cosine ``sum(v_ij * v_ik) / (d_ij * d_ik + eps)`` is
+    *bitwise* symmetric under the swap (elementwise products commute, the
+    component sum runs in the same order), so geometry / Fourier basis /
+    angle embedding need only run once per unordered pair.
+
+    Mirrors ``build_mirror_maps``: angles sharing the canonical key
+    ``(min(ij, ik), max(ij, ik))`` are matched into one undirected angle
+    entry whose stored orientation is the ``ij < ik`` member's; an
+    unmatched angle (hand-built asymmetric lists) falls back to a
+    singleton entry, so the maps are total for ANY angle list.
+
+    Returns ``(angle_pair, und_angle_rep)``:
+      - ``angle_pair (Na,) int32``: angle row -> undirected angle id,
+      - ``und_angle_rep (Au,) int32``: undirected angle id ->
+        representative angle row (strictly increasing — numbered by first
+        appearance, preserving the sorted DESIGN.md §1 locality).
+
+    Invariants (checked by ``repro.batching.validate_layout``): every
+    undirected angle id has exactly one same-orientation reference and at
+    most one swapped reference.
+    """
+    a_cnt = int(angle_ij.shape[0])
+    if a_cnt == 0:
+        z = np.zeros((0,), np.int32)
+        return z, z.copy()
+    ij = angle_ij.astype(np.int64)
+    ik = angle_ik.astype(np.int64)
+    lo = np.minimum(ij, ik)
+    hi = np.maximum(ij, ik)
+    order = np.lexsort((hi, lo))
+    ks = np.column_stack([lo, hi])[order]
+    boundary = np.empty(a_cnt, dtype=bool)
+    boundary[0] = True
+    boundary[1:] = np.any(ks[1:] != ks[:-1], axis=1)
+    gid = np.empty(a_cnt, np.int64)
+    gid[order] = np.cumsum(boundary) - 1
+    n_groups = int(np.sum(boundary))
+    # representative: the (ij < ik)-oriented member when present, else the
+    # first member (asymmetric fallback)
+    is_canon = ij < ik
+    rep = np.full(n_groups, a_cnt, np.int64)
+    canon_idx = np.nonzero(is_canon)[0]
+    np.minimum.at(rep, gid[canon_idx], canon_idx)
+    first = np.full(n_groups, a_cnt, np.int64)
+    np.minimum.at(first, gid, np.arange(a_cnt))
+    rep = np.where(rep == a_cnt, first, rep)
+    # number undirected entries by representative position (ascending)
+    und_order = np.argsort(rep, kind="stable")
+    rank = np.empty(n_groups, np.int64)
+    rank[und_order] = np.arange(n_groups)
+    angle_pair = rank[gid].astype(np.int32)
+    und_angle_rep = rep[und_order].astype(np.int32)
+    return angle_pair, und_angle_rep
+
+
 def _mirror_partner(ci: np.ndarray, nj: np.ndarray,
                     images: np.ndarray) -> np.ndarray:
     """Index of each directed pair's mirror (j, i, -n) in the same list.
@@ -337,6 +413,10 @@ def _graph_from_pairs(
     # emits canonicalized maps
     bond_pair, bond_sign, und_rep = build_mirror_maps(
         bond_center, bond_nbr, bond_image)
+    # angle-pair dedup maps: the ordered angle list holds each unordered
+    # {ij, ik} twice — build the (angle_pair, und_angle_rep) maps so the
+    # model can run angle geometry/Fourier/embed at Au == Na/2 rows
+    angle_pair, und_angle_rep = build_angle_mirror_maps(angle_ij, angle_ik)
 
     return GraphIndices(
         bond_center=bond_center,
@@ -347,6 +427,8 @@ def _graph_from_pairs(
         bond_pair=bond_pair,
         bond_sign=bond_sign,
         und_rep=und_rep,
+        angle_pair=angle_pair,
+        und_angle_rep=und_angle_rep,
     )
 
 

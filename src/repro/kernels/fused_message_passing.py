@@ -36,10 +36,17 @@ intermediates ever exists outside VMEM:
 Feature lanes are padded to 128 by the ``ops`` wrappers; LayerNorm masks
 the padded lanes (static ``d_real``), so padding never biases statistics.
 
-VMEM note: like ``fused_segment_sum``, the feature tables (``v``, ``e``,
-``e_b``, edge payloads) are whole-array VMEM-resident — fine for interpret
-mode (CI) and CHGNet-scale batches on TPU; an HBM + double-buffered DMA
-variant is the follow-up for tables that outgrow VMEM.
+Residency tiers (DESIGN.md §9): with ``residency="vmem"`` the feature
+tables (``v``, ``e``, ``e_b``, edge payloads) are whole-array
+VMEM-resident — fine for interpret mode (CI) and CHGNet-scale batches on
+TPU.  ``residency="hbm"`` leaves them in HBM (``pltpu.ANY`` memory space)
+and streams them through ping/pong VMEM scratch with double-buffered
+``pltpu.make_async_copy`` DMAs keyed off the scalar-prefetched CSR
+offsets: edge-contiguous operands move in ``chunk``-row slices
+(``_stream_loop``) and gathered tables in ``gather_tile``-row windows
+(``_gather_rows_hbm``), each next block's DMA overlapping the current
+block's one-hot-gather + GEMM + epilogue — batch capacity is then bounded
+by HBM, not the ~16 MiB of VMEM (10k+-atom structures).
 
 The backward story (recompute-in-kernel, "redundancy bypass") lives in the
 ``ops`` custom VJPs: the forward saves *only the operands*, never the
@@ -143,6 +150,102 @@ def _gather_rows(ids, table_refs, tile: int):
 
 
 # ---------------------------------------------------------------------------
+# HBM residency tier: double-buffered DMA streaming (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# With ``residency="hbm"`` the operand tables stay in HBM (``pltpu.ANY``
+# in_specs) and move through ping/pong VMEM scratch slots.  A "stream" is
+# the triple (hbm_ref, scratch_ref, sem_ref) where scratch/sem carry a
+# leading dim of 2 (the ping/pong slots).  Block k always lands in slot
+# ``k % 2``, so starting block k+1 before waiting on block k overlaps the
+# next DMA with the current compute without ever racing a live slot: the
+# slot k+1 targets was consumed one iteration ago.
+
+def _stream_copies(streams, idx, size):
+    """DMA descriptors moving rows [idx*size, (idx+1)*size) of each
+    stream's HBM ref into its slot ``idx % 2`` scratch buffer."""
+    slot = jax.lax.rem(idx, 2)
+    return [
+        pltpu.make_async_copy(hbm.at[pl.ds(idx * size, size)],
+                              scr.at[slot], sem.at[slot])
+        for hbm, scr, sem in streams
+    ]
+
+
+def _stream_loop(k0, k1, size, streams, body):
+    """Double-buffered walk of blocks [k0, k1): warm-up starts block k0,
+    then each iteration starts block k+1's DMA, waits on block k, and runs
+    ``body(k, slot)`` — compute on slot k overlaps the k+1 transfer."""
+    @pl.when(k0 < k1)
+    def _warmup():
+        for c in _stream_copies(streams, k0, size):
+            c.start()
+
+    def step(k, carry):
+        @pl.when(k + 1 < k1)
+        def _prefetch_next():
+            for c in _stream_copies(streams, k + 1, size):
+                c.start()
+        for c in _stream_copies(streams, k, size):
+            c.wait()
+        body(k, jax.lax.rem(k, 2))
+        return carry
+
+    jax.lax.fori_loop(k0, k1, step, 0)
+
+
+def _gather_rows_hbm(ids_list, tables, tile: int):
+    """MXU row gather from HBM-resident tables (the ``residency="hbm"``
+    counterpart of ``_gather_rows``).
+
+    ``tables`` holds (hbm_ref, scratch_ref, sem_ref) streams sharing one
+    row count; ``tile``-row windows flow through the ping/pong scratch
+    double-buffered, the next window's DMA overlapping this window's
+    one-hot contraction.  Returns ``[[table_j[ids_i] for j] for i]`` so
+    callers with shared ids (e/e_b via angle_ik) or a shared table (the
+    Eu e^b mirror table via pij/pik) pay for one table walk.
+    """
+    n_rows = tables[0][0].shape[0]
+    n = ids_list[0].shape[0]
+    nwin = n_rows // tile
+
+    for c in _stream_copies(tables, 0, tile):
+        c.start()
+
+    def step(t, accs):
+        @pl.when(t + 1 < nwin)
+        def _prefetch_next():
+            for c in _stream_copies(tables, t + 1, tile):
+                c.start()
+        slot = jax.lax.rem(t, 2)
+        for c in _stream_copies(tables, t, tile):
+            c.wait()
+        cols = t * tile + jax.lax.broadcasted_iota(jnp.int32, (n, tile), 1)
+        return tuple(
+            tuple(acc + _mm((ids == cols).astype(jnp.float32),
+                            tables[j][1][slot])
+                  for j, acc in enumerate(row))
+            for ids, row in zip(ids_list, accs))
+
+    init = tuple(
+        tuple(jnp.zeros((n, t[0].shape[1]), jnp.float32) for t in tables)
+        for _ in ids_list)
+    return jax.lax.fori_loop(0, nwin, step, init)
+
+
+def _any_spec():
+    """HBM-resident operand: no block shape, kernels DMA rows on demand."""
+    return pl.BlockSpec(memory_space=pltpu.ANY)
+
+
+def _check_residency(residency: str) -> bool:
+    if residency not in ("vmem", "hbm"):
+        raise ValueError(f"residency must be 'vmem' or 'hbm', "
+                         f"got {residency!r}")
+    return residency == "hbm"
+
+
+# ---------------------------------------------------------------------------
 # atom_conv megakernel: bonds -> atoms (Eq. 4 message path)
 # ---------------------------------------------------------------------------
 
@@ -187,6 +290,61 @@ def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
     jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
 
 
+def _atom_conv_kernel_hbm(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
+                          v_tile_ref, e_ref, ea_ref, w1_ref, w2_ref, w3_ref,
+                          b_ref, lns_ref, lnb_ref, out_ref, *scratch,
+                          block_rows: int, chunk: int, d_real: int,
+                          gather_tile: int, mirror: bool):
+    """HBM-residency atom_conv (DESIGN.md §9): same math as
+    ``_atom_conv_kernel`` but every large operand lives in HBM and streams
+    through ping/pong scratch — edge payloads (seg/nbr/pair ids, ``e``,
+    directed ``e_a``) in chunk slices, the ``v`` table (and the Eu-row
+    ``e_a`` mirror table) in gather_tile windows."""
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    hp = b_ref.shape[-1] // 2
+    if mirror:
+        (seg_scr, nbr_scr, pair_scr, e_scr, v_gscr, ea_gscr,
+         seg_sem, nbr_sem, pair_sem, e_sem, v_gsem, ea_gsem) = scratch
+        edge_streams = ((seg_ref, seg_scr, seg_sem),
+                        (nbr_ref, nbr_scr, nbr_sem),
+                        (pair_ref, pair_scr, pair_sem),
+                        (e_ref, e_scr, e_sem))
+    else:
+        (seg_scr, nbr_scr, e_scr, ea_scr, v_gscr,
+         seg_sem, nbr_sem, e_sem, ea_sem, v_gsem) = scratch
+        edge_streams = ((seg_ref, seg_scr, seg_sem),
+                        (nbr_ref, nbr_scr, nbr_sem),
+                        (e_ref, e_scr, e_sem),
+                        (ea_ref, ea_scr, ea_sem))
+
+    def body(k, slot):
+        seg = seg_scr[slot]                                    # (chunk, 1)
+        oh_w = _window_onehot(seg, r0, start, end, k * chunk, chunk,
+                              block_rows)
+        v_c = _mm(oh_w, v_tile_ref[...])          # gather v[bond_center]
+        ((v_n,),) = _gather_rows_hbm(             # gather v[bond_nbr]
+            (nbr_scr[slot],), ((v_full_ref, v_gscr, v_gsem),), gather_tile)
+        e_c = e_scr[slot]
+        y = _mm(v_c, w1_ref[...]) + _mm(v_n, w2_ref[...]) \
+            + _mm(e_c, w3_ref[...]) + b_ref[...].astype(jnp.float32)
+        msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
+        if mirror:
+            ((ea_c,),) = _gather_rows_hbm(
+                (pair_scr[slot],), ((ea_ref, ea_gscr, ea_gsem),),
+                gather_tile)
+        else:
+            ea_c = ea_scr[slot].astype(jnp.float32)
+        msg = msg * ea_c
+        out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
+
+    _stream_loop(start // chunk, pl.cdiv(end, chunk), chunk, edge_streams,
+                 body)
+
+
 def fused_atom_conv_pallas(
     v: jnp.ndarray,        # (A, DP) f32, A % block_rows == 0, DP % 128 == 0
     e: jnp.ndarray,        # (E, DP) f32, E % chunk == 0
@@ -204,12 +362,14 @@ def fused_atom_conv_pallas(
     chunk: int = 256,
     gather_tile: int = 256,
     mirror: bool = False,
+    residency: str = "vmem",
     interpret: bool = True,
 ) -> jnp.ndarray:
     a_rows, dp = v.shape
     e_rows = e.shape[0]
     ea_rows = e_a.shape[0]
     hp2 = b.shape[-1]
+    hbm = _check_residency(residency)
     assert e_rows % chunk == 0, (e_rows, chunk)
     assert a_rows % block_rows == 0, (a_rows, block_rows)
     assert a_rows % gather_tile == 0, (a_rows, gather_tile)
@@ -218,10 +378,37 @@ def fused_atom_conv_pallas(
     else:
         assert ea_rows == e_rows, (ea_rows, e_rows)
     grid = (a_rows // block_rows,)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
+    if hbm:
+        # streamed operands stay in HBM; only the destination tile, the
+        # weights, and the ping/pong scratch live in VMEM (DESIGN.md §9)
+        table_specs = [
+            _any_spec(), _any_spec(), _any_spec(), _any_spec(),
+            pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
+            _any_spec(), _any_spec(),
+        ]
+        hp = hp2 // 2
+        if mirror:
+            scratch_shapes = [
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # seg
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # nbr
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # pair
+                pltpu.VMEM((2, chunk, dp), e.dtype),        # e slices
+                pltpu.VMEM((2, gather_tile, dp), v.dtype),  # v windows
+                pltpu.VMEM((2, gather_tile, hp), e_a.dtype),  # e^a windows
+            ] + [pltpu.SemaphoreType.DMA((2,))] * 6
+        else:
+            scratch_shapes = [
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # seg
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # nbr
+                pltpu.VMEM((2, chunk, dp), e.dtype),        # e slices
+                pltpu.VMEM((2, chunk, hp), e_a.dtype),      # e^a slices
+                pltpu.VMEM((2, gather_tile, dp), v.dtype),  # v windows
+            ] + [pltpu.SemaphoreType.DMA((2,))] * 5
+        kernel = functools.partial(
+            _atom_conv_kernel_hbm, block_rows=block_rows, chunk=chunk,
+            d_real=d_real, gather_tile=gather_tile, mirror=mirror)
+    else:
+        table_specs = [
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
@@ -229,6 +416,15 @@ def fused_atom_conv_pallas(
             pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
             pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
             pl.BlockSpec((ea_rows, hp2 // 2), lambda i, offs: (0, 0)),
+        ]
+        scratch_shapes = []
+        kernel = functools.partial(
+            _atom_conv_kernel, block_rows=block_rows, chunk=chunk,
+            d_real=d_real, gather_tile=gather_tile, mirror=mirror)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=table_specs + [
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
@@ -238,11 +434,10 @@ def fused_atom_conv_pallas(
         ],
         out_specs=pl.BlockSpec((block_rows, hp2 // 2),
                                lambda i, offs: (i, 0)),
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
-        functools.partial(_atom_conv_kernel, block_rows=block_rows,
-                          chunk=chunk, d_real=d_real,
-                          gather_tile=gather_tile, mirror=mirror),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((a_rows, hp2 // 2), jnp.float32),
         interpret=interpret,
@@ -303,6 +498,77 @@ def _bond_conv_kernel(offs_ref, seg_ref, ik_ref, ctr_ref, pij_ref, pik_ref,
     jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
 
 
+def _bond_conv_kernel_hbm(offs_ref, seg_ref, ik_ref, ctr_ref, pij_ref,
+                          pik_ref, v_ref, e_full_ref, e_tile_ref,
+                          eb_full_ref, eb_tile_ref, a_ref, w1_ref, w2_ref,
+                          w3_ref, w4_ref, b_ref, lns_ref, lnb_ref, out_ref,
+                          *scratch, block_rows: int, chunk: int,
+                          d_real: int, gather_tile: int, mirror: bool):
+    """HBM-residency bond_conv (DESIGN.md §9): angle payloads (ids + ``a``)
+    stream in chunk slices; the ``v``/``e`` tables (and the Eu-row ``e^b``
+    mirror table — its pij/pik gathers share ONE window walk) stream in
+    gather_tile windows.  The destination e-tile (and the non-mirror
+    eb-tile, both ``block_rows`` rows) stay VMEM block operands."""
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    hp = b_ref.shape[-1] // 2
+    if mirror:
+        (seg_scr, ik_scr, ctr_scr, pij_scr, pik_scr, a_scr,
+         v_gscr, e_gscr, eb_gscr,
+         seg_sem, ik_sem, ctr_sem, pij_sem, pik_sem, a_sem,
+         v_gsem, e_gsem, eb_gsem) = scratch
+        edge_streams = ((seg_ref, seg_scr, seg_sem),
+                        (ik_ref, ik_scr, ik_sem),
+                        (ctr_ref, ctr_scr, ctr_sem),
+                        (pij_ref, pij_scr, pij_sem),
+                        (pik_ref, pik_scr, pik_sem),
+                        (a_ref, a_scr, a_sem))
+    else:
+        (seg_scr, ik_scr, ctr_scr, a_scr, v_gscr, e_gscr, eb_gscr,
+         seg_sem, ik_sem, ctr_sem, a_sem,
+         v_gsem, e_gsem, eb_gsem) = scratch
+        edge_streams = ((seg_ref, seg_scr, seg_sem),
+                        (ik_ref, ik_scr, ik_sem),
+                        (ctr_ref, ctr_scr, ctr_sem),
+                        (a_ref, a_scr, a_sem))
+
+    def body(k, slot):
+        seg = seg_scr[slot]                                    # angle_ij
+        oh_w = _window_onehot(seg, r0, start, end, k * chunk, chunk,
+                              block_rows)
+        e_ij = _mm(oh_w, e_tile_ref[...])        # gather e[angle_ij]
+        if mirror:
+            ((e_ik,),) = _gather_rows_hbm(
+                (ik_scr[slot],), ((e_full_ref, e_gscr, e_gsem),),
+                gather_tile)
+            # both Eu envelope factors share one walk of the mirror table
+            ((eb_ij,), (eb_ik,)) = _gather_rows_hbm(
+                (pij_scr[slot], pik_scr[slot]),
+                ((eb_full_ref, eb_gscr, eb_gsem),), gather_tile)
+        else:
+            eb_ij = _mm(oh_w, eb_tile_ref[...])  # gather e_b[angle_ij]
+            # e / e_b share angle_ik: one window walk gathers both
+            ((e_ik, eb_ik),) = _gather_rows_hbm(
+                (ik_scr[slot],),
+                ((e_full_ref, e_gscr, e_gsem),
+                 (eb_full_ref, eb_gscr, eb_gsem)), gather_tile)
+        ((v_c,),) = _gather_rows_hbm(             # gather v[center]
+            (ctr_scr[slot],), ((v_ref, v_gscr, v_gsem),), gather_tile)
+        a_c = a_scr[slot]
+        y = _mm(v_c, w1_ref[...]) + _mm(e_ij, w2_ref[...]) \
+            + _mm(e_ik, w3_ref[...]) + _mm(a_c, w4_ref[...]) \
+            + b_ref[...].astype(jnp.float32)
+        msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
+        msg = msg * eb_ij * eb_ik
+        out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
+
+    _stream_loop(start // chunk, pl.cdiv(end, chunk), chunk, edge_streams,
+                 body)
+
+
 def fused_bond_conv_pallas(
     v: jnp.ndarray,        # (A, DP) f32 atom features
     e: jnp.ndarray,        # (B, DP) f32 bond features, B % block_rows == 0
@@ -323,6 +589,7 @@ def fused_bond_conv_pallas(
     chunk: int = 256,
     gather_tile: int = 256,
     mirror: bool = False,
+    residency: str = "vmem",
     interpret: bool = True,
 ) -> jnp.ndarray:
     a_rows, dp = v.shape
@@ -331,6 +598,7 @@ def fused_bond_conv_pallas(
     eb_rows = e_b.shape[0]
     hp2 = b.shape[-1]
     hp = hp2 // 2
+    hbm = _check_residency(residency)
     assert e_rows % chunk == 0, (e_rows, chunk)
     assert b_rows % block_rows == 0, (b_rows, block_rows)
     assert b_rows % gather_tile == 0, (b_rows, gather_tile)
@@ -343,10 +611,36 @@ def fused_bond_conv_pallas(
     else:
         assert eb_rows == b_rows, (eb_rows, b_rows)
     grid = (b_rows // block_rows,)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
+    if hbm:
+        # ids + angle features + all three gather tables stay in HBM;
+        # only the block_rows-row destination tiles remain VMEM operands
+        table_specs = [
+            _any_spec(), _any_spec(), _any_spec(), _any_spec(),
+            _any_spec(), _any_spec(), _any_spec(),
+            pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
+            _any_spec(),
+            pl.BlockSpec((block_rows, hp),
+                         (lambda i, offs: (i, 0)) if not mirror
+                         else (lambda i, offs: (0, 0))),
+            _any_spec(),
+        ]
+        int_scr = pltpu.VMEM((2, chunk, 1), jnp.int32)
+        gather_scrs = [
+            pltpu.VMEM((2, gather_tile, dp), v.dtype),    # v windows
+            pltpu.VMEM((2, gather_tile, dp), e.dtype),    # e windows
+            pltpu.VMEM((2, gather_tile, hp), e_b.dtype),  # e^b windows
+        ]
+        n_ids = 5 if mirror else 3  # seg/ik/ctr (+pij/pik under mirror)
+        scratch_shapes = (
+            [int_scr] * n_ids
+            + [pltpu.VMEM((2, chunk, dp), a.dtype)]       # a slices
+            + gather_scrs
+            + [pltpu.SemaphoreType.DMA((2,))] * (n_ids + 4))
+        kernel = functools.partial(
+            _bond_conv_kernel_hbm, block_rows=block_rows, chunk=chunk,
+            d_real=d_real, gather_tile=gather_tile, mirror=mirror)
+    else:
+        table_specs = [
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
@@ -360,6 +654,15 @@ def fused_bond_conv_pallas(
                          (lambda i, offs: (i, 0)) if not mirror
                          else (lambda i, offs: (0, 0))),
             pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
+        ]
+        scratch_shapes = []
+        kernel = functools.partial(
+            _bond_conv_kernel, block_rows=block_rows, chunk=chunk,
+            d_real=d_real, gather_tile=gather_tile, mirror=mirror)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=table_specs + [
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
             pl.BlockSpec((dp, hp2), lambda i, offs: (0, 0)),
@@ -369,11 +672,10 @@ def fused_bond_conv_pallas(
             pl.BlockSpec((1, hp2), lambda i, offs: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, hp), lambda i, offs: (i, 0)),
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
-        functools.partial(_bond_conv_kernel, block_rows=block_rows,
-                          chunk=chunk, d_real=d_real,
-                          gather_tile=gather_tile, mirror=mirror),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b_rows, hp), jnp.float32),
         interpret=interpret,
@@ -472,6 +774,77 @@ def _force_virial_kernel(offs_ref, seg_ref, cry_ref, e_ref, xhat_ref,
     jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
 
 
+def _force_kernel_hbm(offs_ref, seg_ref, e_ref, xhat_ref, w1_ref, b1_ref,
+                      w2_ref, b2_ref, out_ref, seg_scr, e_scr, xh_scr,
+                      seg_sem, e_sem, xh_sem, *, block_rows: int,
+                      chunk: int):
+    """HBM-residency force readout (DESIGN.md §9): the bond payloads
+    (``seg``, ``e``, ``x_hat``) stream in double-buffered chunk slices."""
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    streams = ((seg_ref, seg_scr, seg_sem), (e_ref, e_scr, e_sem),
+               (xhat_ref, xh_scr, xh_sem))
+
+    def body(k, slot):
+        seg = seg_scr[slot]
+        oh_w = _window_onehot(seg, r0, start, end, k * chunk, chunk,
+                              block_rows)
+        n = _bond_scalar_mlp(e_scr[slot], w1_ref, b1_ref, w2_ref, b2_ref)
+        contrib = n * xh_scr[slot].astype(jnp.float32)
+        out_ref[...] += _mm_t(oh_w, contrib).astype(out_ref.dtype)
+
+    _stream_loop(start // chunk, pl.cdiv(end, chunk), chunk, streams, body)
+
+
+def _force_virial_kernel_hbm(offs_ref, seg_ref, cry_ref, e_ref, xhat_ref,
+                             dist_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                             out_ref, sig_ref, seg_scr, cry_scr, e_scr,
+                             xh_scr, dist_scr, seg_sem, cry_sem, e_sem,
+                             xh_sem, dist_sem, *, block_rows: int,
+                             chunk: int):
+    """HBM-residency force + virial readout: the ``_force_virial_kernel``
+    epilogue on streamed bond payloads (DESIGN.md §7/§9).  The virial
+    accumulator keeps its constant-index-map VMEM residency — it is
+    (Bp, 3*128), crystal-count sized, never the binding constraint."""
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    bp = sig_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        sig_ref[...] = jnp.zeros(sig_ref.shape, sig_ref.dtype)
+
+    streams = ((seg_ref, seg_scr, seg_sem), (cry_ref, cry_scr, cry_sem),
+               (e_ref, e_scr, e_sem), (xhat_ref, xh_scr, xh_sem),
+               (dist_ref, dist_scr, dist_sem))
+
+    def body(k, slot):
+        base = k * chunk
+        seg = seg_scr[slot]
+        oh_w = _window_onehot(seg, r0, start, end, base, chunk, block_rows)
+        n = _bond_scalar_mlp(e_scr[slot], w1_ref, b1_ref, w2_ref, b2_ref)
+        xh = xh_scr[slot].astype(jnp.float32)
+        out_ref[...] += _mm_t(oh_w, n * xh).astype(out_ref.dtype)
+        # --- virial epilogue (identical to the VMEM tier's)
+        e_ids = base + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        valid = ((e_ids >= start) & (e_ids < end)).astype(jnp.float32)
+        w = n * dist_scr[slot].astype(jnp.float32) * valid
+        cry = cry_scr[slot]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, bp), 1)
+        oh_c = (cry == rows).astype(jnp.float32) * w       # (chunk, Bp)
+        for m in range(3):
+            sig_ref[:, m * 128:(m + 1) * 128] += _mm_t(
+                oh_c, xh * xh[:, m:m + 1])
+
+    _stream_loop(start // chunk, pl.cdiv(end, chunk), chunk, streams, body)
+
+
 def fused_force_readout_pallas(
     e: jnp.ndarray,        # (E, DP) f32 final bond features
     x_hat: jnp.ndarray,    # (E, XP) f32 unit bond vectors, lanes 3..XP zero
@@ -488,6 +861,7 @@ def fused_force_readout_pallas(
     virial: bool = False,
     block_rows: int = 8,
     chunk: int = 256,
+    residency: str = "vmem",
     interpret: bool = True,
 ):
     """Fused Eq. 7 force readout; with ``virial=True`` the SAME launch also
@@ -496,25 +870,27 @@ def fused_force_readout_pallas(
     e_rows, dp = e.shape
     xp = x_hat.shape[1]
     a_rows = offsets.shape[0] - 1
+    hbm = _check_residency(residency)
     assert e_rows % chunk == 0, (e_rows, chunk)
     assert a_rows % block_rows == 0, (a_rows, block_rows)
     grid = (a_rows // block_rows,)
-    in_specs = [
-        pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
-    ]
+
+    def _payload_spec(width):
+        if hbm:
+            return _any_spec()
+        return pl.BlockSpec((e_rows, width), lambda i, offs: (0, 0))
+
+    in_specs = [_payload_spec(1)]
     operands = [offsets, seg]
     if virial:
         assert cry is not None and dist is not None
         assert num_crystals % block_rows == 0, (num_crystals, block_rows)
-        in_specs.append(pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)))
+        in_specs.append(_payload_spec(1))
         operands.append(cry)
-    in_specs += [
-        pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
-        pl.BlockSpec((e_rows, xp), lambda i, offs: (0, 0)),
-    ]
+    in_specs += [_payload_spec(dp), _payload_spec(xp)]
     operands += [e, x_hat]
     if virial:
-        in_specs.append(pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)))
+        in_specs.append(_payload_spec(1))
         operands.append(dist)
     in_specs += [
         pl.BlockSpec((dp, dp), lambda i, offs: (0, 0)),
@@ -525,6 +901,7 @@ def fused_force_readout_pallas(
     operands += [w1, b1, w2, b2]
     out_specs = pl.BlockSpec((block_rows, xp), lambda i, offs: (i, 0))
     out_shape = jax.ShapeDtypeStruct((a_rows, xp), jnp.float32)
+    scratch_shapes = []
     if virial:
         # constant index_map: one VMEM-resident accumulator block shared
         # by every grid step (sequential on TPU -> race-free reduction)
@@ -534,8 +911,27 @@ def fused_force_readout_pallas(
         out_shape = (out_shape,
                      jax.ShapeDtypeStruct((num_crystals, 3 * 128),
                                           jnp.float32))
-        kernel = functools.partial(_force_virial_kernel,
-                                   block_rows=block_rows, chunk=chunk)
+        if hbm:
+            scratch_shapes = [
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # seg
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # cry
+                pltpu.VMEM((2, chunk, dp), e.dtype),        # e slices
+                pltpu.VMEM((2, chunk, xp), x_hat.dtype),    # x_hat slices
+                pltpu.VMEM((2, chunk, 1), dist.dtype),      # dist slices
+            ] + [pltpu.SemaphoreType.DMA((2,))] * 5
+            kernel = functools.partial(_force_virial_kernel_hbm,
+                                       block_rows=block_rows, chunk=chunk)
+        else:
+            kernel = functools.partial(_force_virial_kernel,
+                                       block_rows=block_rows, chunk=chunk)
+    elif hbm:
+        scratch_shapes = [
+            pltpu.VMEM((2, chunk, 1), jnp.int32),           # seg
+            pltpu.VMEM((2, chunk, dp), e.dtype),            # e slices
+            pltpu.VMEM((2, chunk, xp), x_hat.dtype),        # x_hat slices
+        ] + [pltpu.SemaphoreType.DMA((2,))] * 3
+        kernel = functools.partial(_force_kernel_hbm, block_rows=block_rows,
+                                   chunk=chunk)
     else:
         kernel = functools.partial(_force_kernel, block_rows=block_rows,
                                    chunk=chunk)
@@ -544,6 +940,7 @@ def fused_force_readout_pallas(
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
         kernel,

@@ -24,10 +24,13 @@ is built at the operand dtype, the MXU contraction accumulates f32
 (``preferred_element_type``), and the output buffer is f32; the ``ops``
 wrapper casts the sliced result back to the operand dtype.
 
-VMEM note: values/segment ids are kept whole-array resident, which is fine
-for interpret mode (CI) and for CHGNet-scale bond tensors on TPU
-(~bond_cap x dim f32); a HBM + double-buffered DMA variant is the follow-up
-for angle tensors that outgrow VMEM.
+Residency tiers (DESIGN.md §9): with ``residency="vmem"`` values/segment
+ids are kept whole-array resident — fine for interpret mode (CI) and for
+CHGNet-scale bond tensors on TPU (~bond_cap x dim f32).
+``residency="hbm"`` leaves both in HBM (``pltpu.ANY``) and streams each
+chunk through ping/pong VMEM scratch with double-buffered async copies
+(``fused_message_passing._stream_loop``), so edge tensors that outgrow
+VMEM — 10k+-atom structures — reduce without whole-array residency.
 """
 from __future__ import annotations
 
@@ -66,6 +69,33 @@ def _kernel(offs_ref, seg_ref, val_ref, out_ref, *, block_rows: int,
     jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
 
 
+def _kernel_hbm(offs_ref, seg_ref, val_ref, out_ref, seg_scr, val_scr,
+                seg_sem, val_sem, *, block_rows: int, chunk: int):
+    """HBM-residency tier (DESIGN.md §9): ids/values stream through
+    ping/pong scratch, each next chunk's DMA overlapping the current
+    chunk's windowed-one-hot contraction."""
+    from .fused_message_passing import _stream_loop, _window_onehot
+
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    streams = ((seg_ref, seg_scr, seg_sem), (val_ref, val_scr, val_sem))
+
+    def body(k, slot):
+        v = val_scr[slot]                                      # (chunk, D)
+        s = seg_scr[slot]                                      # (chunk, 1)
+        onehot = _window_onehot(s, r0, start, end, k * chunk, chunk,
+                                block_rows).astype(v.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            onehot, v, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(out_ref.dtype)
+
+    _stream_loop(start // chunk, pl.cdiv(end, chunk), chunk, streams, body)
+
+
 def fused_segment_sum_pallas(
     values: jnp.ndarray,   # (E, D) f32/bf16, E % chunk == 0, D % 128 == 0
     seg_ids: jnp.ndarray,  # (E, 1) int32, sorted over the real prefix
@@ -73,24 +103,42 @@ def fused_segment_sum_pallas(
     *,
     block_rows: int = 8,
     chunk: int = 256,
+    residency: str = "vmem",
     interpret: bool = True,
 ) -> jnp.ndarray:
+    from .fused_message_passing import _any_spec, _check_residency
+
     e, d = values.shape
     s = offsets.shape[0] - 1
+    hbm = _check_residency(residency)
     assert e % chunk == 0, (e, chunk)
     assert s % block_rows == 0, (s, block_rows)
     grid = (s // block_rows,)
+    if hbm:
+        in_specs = [_any_spec(), _any_spec()]
+        scratch_shapes = [
+            pltpu.VMEM((2, chunk, 1), jnp.int32),
+            pltpu.VMEM((2, chunk, d), values.dtype),
+        ] + [pltpu.SemaphoreType.DMA((2,))] * 2
+        kernel = functools.partial(_kernel_hbm, block_rows=block_rows,
+                                   chunk=chunk)
+    else:
+        in_specs = [
+            pl.BlockSpec((e, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((e, d), lambda i, offs: (0, 0)),
+        ]
+        scratch_shapes = []
+        kernel = functools.partial(_kernel, block_rows=block_rows,
+                                   chunk=chunk)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((e, 1), lambda i, offs: (0, 0)),
-            pl.BlockSpec((e, d), lambda i, offs: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_rows, d), lambda i, offs: (i, 0)),
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
-        functools.partial(_kernel, block_rows=block_rows, chunk=chunk),
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
         interpret=interpret,

@@ -53,6 +53,101 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ---------------------------------------------------------------------------
+# Table residency (DESIGN.md §9): "vmem" | "hbm" | "auto"
+# ---------------------------------------------------------------------------
+#
+# Under "vmem" the megakernels keep their operand tables whole-array
+# VMEM-resident; "hbm" leaves them in HBM and streams double-buffered DMA
+# slices/windows through ping/pong scratch.  "auto" (the config default)
+# resolves per launch from the padded operand-table bytes vs the VMEM
+# budget, so CI-small shapes keep the exact vmem lowering while oversized
+# batches transparently stream.
+
+_VMEM_BUDGET_ENV = "REPRO_VMEM_BUDGET_MB"
+_DEFAULT_VMEM_BUDGET_MB = 16.0
+
+RESIDENCY_TIERS = ("vmem", "hbm")
+
+
+def vmem_budget_bytes() -> int:
+    """Byte budget the "auto" residency heuristic compares operand-table
+    bytes against (DESIGN.md §9).  Default ~16 MiB (a TPU core's VMEM);
+    override with REPRO_VMEM_BUDGET_MB (tests set it tiny to force the
+    hbm tier on small shapes)."""
+    return int(float(os.environ.get(_VMEM_BUDGET_ENV,
+                                    _DEFAULT_VMEM_BUDGET_MB)) * 2 ** 20)
+
+
+def _resolve_residency(residency: str, table_bytes: int) -> str:
+    if residency == "auto":
+        return "vmem" if table_bytes <= vmem_budget_bytes() else "hbm"
+    if residency not in RESIDENCY_TIERS:
+        raise ValueError(
+            f"table_residency must be 'auto', 'vmem' or 'hbm', "
+            f"got {residency!r}")
+    return residency
+
+
+def _itemsize(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+def estimate_table_bytes(num_atoms: int, num_bonds: int, num_angles: int,
+                         dim: int, *, num_und: int | None = None,
+                         itemsize: int = 4) -> int:
+    """Analytic operand-table bytes the §3 megakernels keep VMEM-resident
+    under ``table_residency="vmem"`` — the max over the atom_conv /
+    bond_conv / force-readout launches, mirroring the ops wrappers'
+    padding math (ids included).  Model-level twin of the per-launch
+    resolution inside each op: serve admission, the bench_iteration
+    residency bar, and the oversized-structure tests use it to decide
+    whether a batch is VMEM-feasible without tracing a kernel.
+
+    ``num_und``: Eu rows of the §5 mirror tables (``bond_store=
+    "undirected"``); None means the directed store.
+    """
+    dp = _round_up(max(dim, 1), _LANE)
+    hp = dp
+    mirror = num_und is not None
+    # atom_conv: ids (seg/nbr/pair) + v table + e payload + e^a
+    ep = _round_up(max(num_bonds, 1), 256)
+    ap = _round_up(max(num_atoms, 1), math.lcm(8, 256))
+    ea_rows = _round_up(max(num_und, 1), 256) if mirror else ep
+    atom = (3 * ep * 4 + ap * dp * itemsize + ep * dp * itemsize
+            + ea_rows * hp * itemsize)
+    # bond_conv: ids (seg/ik/ctr/pij/pik) + v/e tables + a payload + e^b
+    epa = _round_up(max(num_angles, 1), 256)
+    bp = _round_up(max(num_bonds, 1), math.lcm(32, 512))
+    apg = _round_up(max(num_atoms, 1), 512)
+    eb_rows = _round_up(max(num_und, 1), 512) if mirror else bp
+    bond = (5 * epa * 4 + apg * dp * itemsize + bp * dp * itemsize
+            + epa * dp * itemsize + eb_rows * hp * itemsize)
+    # force readout: ids + e + x_hat (+ tiny virial extras)
+    force = ep * 4 * 3 + ep * dp * itemsize + ep * _LANE * itemsize
+    return max(atom, bond, force)
+
+
+def resident_vmem_estimate(residency: str, num_atoms: int, num_bonds: int,
+                           num_angles: int, dim: int, *,
+                           num_und: int | None = None,
+                           itemsize: int = 4, chunk: int = 256,
+                           gather_tile: int = 512) -> int:
+    """Deterministic resident-VMEM estimate per residency tier: the vmem
+    tier holds the full operand tables (``estimate_table_bytes``); the hbm
+    tier holds only the ping/pong scratch — 2 slots x (chunk rows per edge
+    stream + gather_tile rows per table walk).  Backend-independent, so
+    the bench_iteration residency bar can be ENFORCED in interpret mode."""
+    if residency == "vmem":
+        return estimate_table_bytes(num_atoms, num_bonds, num_angles, dim,
+                                    num_und=num_und, itemsize=itemsize)
+    dp = _round_up(max(dim, 1), _LANE)
+    # worst launch is bond_conv: 6 edge streams + 3 gather-table walks
+    edge = 2 * chunk * (5 * 4 + dp * itemsize)
+    gather = 2 * gather_tile * 3 * dp * itemsize
+    return edge + gather
+
+
 def _pad_rows(x: jnp.ndarray, mult: int) -> tuple[jnp.ndarray, int]:
     n = x.shape[0]
     pad = (-n) % mult
@@ -251,9 +346,9 @@ def fused_gated_mlp(x, wc, bc, wg, bg, sc, oc, sg, og, *, block_m: int = 256):
     )
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def _fused_segment_sum(values, segment_ids, offsets, num_segments,
-                       block_rows, chunk):
+                       block_rows, chunk, residency):
     e, d = values.shape
     ep = _round_up(e, chunk)
     dp = _round_up(d, 128)
@@ -261,21 +356,27 @@ def _fused_segment_sum(values, segment_ids, offsets, num_segments,
     values_p = jnp.pad(values, ((0, ep - e), (0, dp - d)))
     seg_p = _pad_ids(segment_ids, ep)
     offs_p = _pad_offsets(offsets, sp)
+    # auto resolves from the padded operand bytes (pure function of static
+    # shapes, so forward and grad-of-forward pick the same tier)
+    residency = _resolve_residency(
+        residency, ep * 4 + ep * dp * _itemsize(values.dtype))
     out = fused_segment_sum_pallas(
         values_p, seg_p, offs_p,
-        block_rows=block_rows, chunk=chunk, interpret=_interpret(),
+        block_rows=block_rows, chunk=chunk, residency=residency,
+        interpret=_interpret(),
     )
     return out[:num_segments, :d].astype(values.dtype)
 
 
 def _fused_segment_sum_fwd(values, segment_ids, offsets, num_segments,
-                           block_rows, chunk):
+                           block_rows, chunk, residency):
     out = _fused_segment_sum(values, segment_ids, offsets, num_segments,
-                             block_rows, chunk)
+                             block_rows, chunk, residency)
     return out, (segment_ids, offsets)
 
 
-def _fused_segment_sum_bwd(num_segments, block_rows, chunk, res, g):
+def _fused_segment_sum_bwd(num_segments, block_rows, chunk, residency,
+                           res, g):
     # d/dv[e] of sum-into-rows is a gather: g[seg[e]] on real edges, 0 on
     # the padded tail — no scatter in the backward pass either.
     segment_ids, offsets = res
@@ -289,7 +390,8 @@ _fused_segment_sum.defvjp(_fused_segment_sum_fwd, _fused_segment_sum_bwd)
 
 
 def fused_segment_sum(values, segment_ids, offsets, num_segments: int,
-                      *, block_rows: int = 8, chunk: int = 256):
+                      *, block_rows: int = 8, chunk: int = 256,
+                      table_residency: str = "auto"):
     """Sorted-segment reduction: (E, D) edges -> (num_segments, D) rows.
 
     Requires the sorted-segment layout (DESIGN.md §1): real edges sorted by
@@ -297,9 +399,13 @@ def fused_segment_sum(values, segment_ids, offsets, num_segments: int,
     ``offsets[-1]`` == number of real edges.  Pads edges to a ``chunk``
     multiple, lanes to 128, and rows to a ``block_rows`` multiple, then
     slices back.  Differentiable (custom VJP: the backward is a gather).
+
+    ``table_residency`` (DESIGN.md §9): "vmem" keeps values/ids whole-array
+    resident, "hbm" streams them with double-buffered DMA, "auto" picks by
+    operand bytes vs the VMEM budget.
     """
     return _fused_segment_sum(values, segment_ids, offsets, num_segments,
-                              block_rows, chunk)
+                              block_rows, chunk, table_residency)
 
 
 # ---------------------------------------------------------------------------
@@ -370,10 +476,10 @@ def _pad_offsets(offsets, num_rows_padded):
     return jnp.pad(offsets.astype(jnp.int32), (0, pad), mode="edge")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14))
 def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                      bond_center, bond_nbr, offsets, pair,
-                     block_rows, chunk, gather_tile):
+                     block_rows, chunk, gather_tile, residency):
     a_rows, dim = v.shape
     e_rows, de = e.shape
     d = w.shape[1] // 2
@@ -395,6 +501,13 @@ def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
     else:
         ea_p = _pad2(e_a, ep, hp)
         pair_ids = _pad_ids(bond_center, ep)  # unused dummy, aliases seg
+    # auto: padded table bytes (ids + v + e + e^a) vs the VMEM budget —
+    # pure function of static shapes, so fwd and grad-of-fwd agree
+    residency = _resolve_residency(
+        residency,
+        3 * ep * 4 + ap * dp * _itemsize(v.dtype)
+        + ep * dp * _itemsize(e.dtype)
+        + ea_p.shape[0] * hp * _itemsize(e_a.dtype))
     out = fused_atom_conv_pallas(
         _pad2(v, ap, dp), _pad2(e, ep, dp), ea_p,
         _pad_ids(bond_center, ep), _pad_ids(bond_nbr, ep), pair_ids,
@@ -405,29 +518,36 @@ def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
         _pack_lanes_vec(b, d, hp),
         _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
         d_real=d, block_rows=block_rows, chunk=chunk,
-        gather_tile=gather_tile, mirror=mirror, interpret=_interpret(),
+        gather_tile=gather_tile, mirror=mirror, residency=residency,
+        interpret=_interpret(),
     )
     return out[:a_rows, :d].astype(v.dtype)
 
 
 def _fused_atom_conv_fwd(v, e, e_a, w, b, ln_scale, ln_bias,
                          bond_center, bond_nbr, offsets, pair,
-                         block_rows, chunk, gather_tile):
+                         block_rows, chunk, gather_tile, residency):
     out = _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                            bond_center, bond_nbr, offsets, pair,
-                           block_rows, chunk, gather_tile)
+                           block_rows, chunk, gather_tile, residency)
     # operands only — messages are rematerialized in the backward
     return out, (v, e, e_a, w, b, ln_scale, ln_bias,
                  bond_center, bond_nbr, offsets, pair)
 
 
-def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, res, g):
+def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, residency, res, g):
     """Tile-wise recompute backward: a fori_loop over edge chunks, each
     iteration re-deriving its (chunk, D) messages with a chunk-local
     jax.vjp — no full-edge concat/message tensor exists here either.
     With the mirror maps (``pair`` set), e_a cotangents accumulate into
     the Eu-row table (the chunk-local vjp's gather transposes to a
-    table-shaped scatter-add)."""
+    table-shaped scatter-add).
+
+    Residency-agnostic (DESIGN.md §9): the loop body touches one chunk of
+    every edge operand via dynamic_slice and writes cotangents back with
+    dynamic_update_slice, so XLA already streams HBM<->working-set chunk
+    by chunk — exactly the semantics the hbm forward tier gets from its
+    explicit DMA, with the Eu-table accumulation as the write stream."""
     (v, e, e_a, w, b, ln_scale, ln_bias, bond_center, bond_nbr, offsets,
      pair) = res
     e_rows = e.shape[0]
@@ -507,7 +627,7 @@ _fused_atom_conv.defvjp(_fused_atom_conv_fwd, _fused_atom_conv_bwd)
 def fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                     bond_center, bond_nbr, bond_offsets,
                     *, pair=None, block_rows: int = 8, chunk: int = 256,
-                    gather_tile: int = 256):
+                    gather_tile: int = 256, table_residency: str = "auto"):
     # block_rows=8: ~tens of bonds per atom, so 8 rows ~ one edge chunk
     """Fused Eq. 4 message path: sum_j e^a_ij * phi(v_i, v_j, e_ij) -> (A, D).
 
@@ -520,16 +640,20 @@ def fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
     ``e_a`` is the (Eu, D) undirected envelope table and the kernel
     gathers it per edge chunk in-register (mirror-indirected operand
     class) — the directed (E, D) expansion never exists in HBM.
+
+    ``table_residency`` (DESIGN.md §9): "vmem" keeps v/e/e^a whole-array
+    resident; "hbm" leaves them in HBM and streams double-buffered DMA
+    chunks/windows; "auto" picks by operand-table bytes vs the budget.
     """
     return _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                             bond_center, bond_nbr, bond_offsets, pair,
-                            block_rows, chunk, gather_tile)
+                            block_rows, chunk, gather_tile, table_residency)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(13, 14, 15))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(13, 14, 15, 16))
 def _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
                      angle_ij, angle_ik, center_ids, offsets, pair,
-                     block_rows, chunk, gather_tile):
+                     block_rows, chunk, gather_tile, residency):
     a_rows, dim = v.shape
     b_rows = e.shape[0]
     e_rows = a.shape[0]
@@ -557,6 +681,11 @@ def _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
         eb_p = _pad2(e_b, bp, hp)
         pij = _pad_ids(angle_ij, ep)   # unused dummies, alias seg/ik
         pik = _pad_ids(angle_ik, ep)
+    residency = _resolve_residency(
+        residency,
+        5 * ep * 4 + ap * dp * _itemsize(v.dtype)
+        + bp * dp * _itemsize(e.dtype) + ep * dp * _itemsize(a.dtype)
+        + eb_p.shape[0] * hp * _itemsize(e_b.dtype))
     out = fused_bond_conv_pallas(
         _pad2(v, ap, dp), _pad2(e, bp, dp), _pad2(a, ep, dp), eb_p,
         _pad_ids(angle_ij, ep), _pad_ids(angle_ik, ep),
@@ -568,25 +697,27 @@ def _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
         _pack_lanes_vec(b, d, hp),
         _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
         d_real=d, block_rows=block_rows, chunk=chunk,
-        gather_tile=gather_tile, mirror=mirror, interpret=_interpret(),
+        gather_tile=gather_tile, mirror=mirror, residency=residency,
+        interpret=_interpret(),
     )
     return out[:b_rows, :d].astype(e.dtype)
 
 
 def _fused_bond_conv_fwd(v, e, a, e_b, w, b, ln_scale, ln_bias,
                          angle_ij, angle_ik, center_ids, offsets, pair,
-                         block_rows, chunk, gather_tile):
+                         block_rows, chunk, gather_tile, residency):
     out = _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
                            angle_ij, angle_ik, center_ids, offsets, pair,
-                           block_rows, chunk, gather_tile)
+                           block_rows, chunk, gather_tile, residency)
     return out, (v, e, a, e_b, w, b, ln_scale, ln_bias,
                  angle_ij, angle_ik, center_ids, offsets, pair)
 
 
-def _fused_bond_conv_bwd(block_rows, chunk, gather_tile, res, g):
+def _fused_bond_conv_bwd(block_rows, chunk, gather_tile, residency, res, g):
     """Tile-wise recompute backward over angle chunks (see atom_conv).
     With the mirror maps, the envelope factors gather from the Eu-row
-    table and their cotangents accumulate into it."""
+    table and their cotangents accumulate into it.  Residency-agnostic:
+    chunk-local dynamic slices already stream (DESIGN.md §9)."""
     (v, e, a, e_b, w, b, ln_scale, ln_bias,
      angle_ij, angle_ik, center_ids, offsets, pair) = res
     e_rows = a.shape[0]
@@ -653,7 +784,7 @@ _fused_bond_conv.defvjp(_fused_bond_conv_fwd, _fused_bond_conv_bwd)
 def fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
                     angle_ij, angle_ik, center_ids, angle_offsets,
                     *, pair=None, block_rows: int = 32, chunk: int = 256,
-                    gather_tile: int = 512):
+                    gather_tile: int = 512, table_residency: str = "auto"):
     # block_rows=32: angles-per-bond is small (~1-5), so a wider row tile
     # keeps each program's edge range near one chunk instead of paying the
     # per-program gather-loop overhead for a handful of edges
@@ -667,39 +798,51 @@ def fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
     ``pair`` (DESIGN.md §5): directed->undirected mirror map.  When set,
     ``e_b`` is the (Eu, D) undirected envelope table; both envelope
     factors gather through ``pair[angle_*]`` inside the kernel.
+
+    ``table_residency`` (DESIGN.md §9): "vmem" | "hbm" | "auto" as in
+    ``fused_atom_conv`` — here the streamed tables are v/e/e^b plus the
+    angle payload.
     """
     return _fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
                             angle_ij, angle_ik, center_ids, angle_offsets,
-                            pair, block_rows, chunk, gather_tile)
+                            pair, block_rows, chunk, gather_tile,
+                            table_residency)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11))
 def _fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center, offsets,
-                         num_atoms, block_rows, chunk):
+                         num_atoms, block_rows, chunk, residency):
     e_rows, dim = e.shape
     dp = _round_up(dim, _LANE)
     xp = _LANE
     ap = _round_up(num_atoms, block_rows)
     ep = _round_up(e_rows, chunk)
+    residency = _resolve_residency(
+        residency, ep * 4 + ep * dp * _itemsize(e.dtype)
+        + ep * xp * _itemsize(x_hat.dtype))
     out = fused_force_readout_pallas(
         _pad2(e, ep, dp), _pad2(x_hat, ep, xp),
         _pad_ids(bond_center, ep), _pad_offsets(offsets, ap),
         _pad2(w1, dp, dp), _pad2(b1[None, :], 1, dp),
         _pad2(w2.T, 1, dp), jnp.full((1, xp), b2[0], b2.dtype),
-        block_rows=block_rows, chunk=chunk, interpret=_interpret(),
+        block_rows=block_rows, chunk=chunk, residency=residency,
+        interpret=_interpret(),
     )
     return out[:num_atoms, :x_hat.shape[1]].astype(e.dtype)
 
 
 def _fused_force_readout_fwd(e, x_hat, w1, b1, w2, b2, bond_center, offsets,
-                             num_atoms, block_rows, chunk):
+                             num_atoms, block_rows, chunk, residency):
     out = _fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center,
-                               offsets, num_atoms, block_rows, chunk)
+                               offsets, num_atoms, block_rows, chunk,
+                               residency)
     return out, (e, x_hat, w1, b1, w2, b2, bond_center, offsets)
 
 
-def _fused_force_readout_bwd(num_atoms, block_rows, chunk, res, g):
-    """Tile-wise recompute backward over bond chunks (see atom_conv)."""
+def _fused_force_readout_bwd(num_atoms, block_rows, chunk, residency,
+                             res, g):
+    """Tile-wise recompute backward over bond chunks (see atom_conv).
+    Residency-agnostic: chunk-local dynamic slices already stream."""
     e, x_hat, w1, b1, w2, b2, bond_center, offsets = res
     e_rows = e.shape[0]
     ep = _round_up(e_rows, chunk)
@@ -749,22 +892,26 @@ _fused_force_readout.defvjp(_fused_force_readout_fwd,
 
 def fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center, bond_offsets,
                         num_atoms: int, *, block_rows: int = 8,
-                        chunk: int = 256):
+                        chunk: int = 256, table_residency: str = "auto"):
     """Fused Eq. 7 direct-force readout: F_i = sum_j n_ij x_hat_ij -> (A, 3).
 
     The per-bond scalar MLP (w1/b1 -> silu -> w2/b2), the x_hat weighting,
     and the per-atom reduction run in one megakernel over the sorted CSR
     rows; ``n_ij`` never exists in HBM.  Rotation equivariance (Eq. 8) is
     preserved because ``n_ij`` stays a scalar per bond.
+
+    ``table_residency`` (DESIGN.md §9): "vmem" | "hbm" | "auto" — the
+    streamed operands here are the bond features and x_hat payload.
     """
     return _fused_force_readout(e, x_hat, w1, b1, w2, b2, bond_center,
-                                bond_offsets, num_atoms, block_rows, chunk)
+                                bond_offsets, num_atoms, block_rows, chunk,
+                                table_residency)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12, 13))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12, 13, 14))
 def _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
                                 bond_crystal, offsets, num_atoms,
-                                num_crystals, block_rows, chunk):
+                                num_crystals, block_rows, chunk, residency):
     e_rows, dim = e.shape
     dp = _round_up(dim, _LANE)
     xp = _LANE
@@ -772,6 +919,9 @@ def _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
     bp = _round_up(num_crystals, block_rows)
     ep = _round_up(e_rows, chunk)
     dist_p = jnp.pad(dist.astype(jnp.float32), (0, ep - e_rows))[:, None]
+    residency = _resolve_residency(
+        residency, 2 * ep * 4 + ep * dp * _itemsize(e.dtype)
+        + ep * xp * _itemsize(x_hat.dtype) + ep * 4)
     out, sig = fused_force_readout_pallas(
         _pad2(e, ep, dp), _pad2(x_hat, ep, xp),
         _pad_ids(bond_center, ep), _pad_offsets(offsets, ap),
@@ -779,7 +929,7 @@ def _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
         _pad2(w2.T, 1, dp), jnp.full((1, xp), b2[0], b2.dtype),
         cry=_pad_ids(bond_crystal, ep), dist=dist_p, num_crystals=bp,
         virial=True, block_rows=block_rows, chunk=chunk,
-        interpret=_interpret(),
+        residency=residency, interpret=_interpret(),
     )
     forces = out[:num_atoms, :x_hat.shape[1]].astype(e.dtype)
     # accumulator lanes are [m*128 + n] (DESIGN.md §7); stays f32 (§4)
@@ -790,17 +940,17 @@ def _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
 def _fused_force_virial_readout_fwd(e, x_hat, dist, w1, b1, w2, b2,
                                     bond_center, bond_crystal, offsets,
                                     num_atoms, num_crystals, block_rows,
-                                    chunk):
+                                    chunk, residency):
     out = _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2,
                                       bond_center, bond_crystal, offsets,
                                       num_atoms, num_crystals, block_rows,
-                                      chunk)
+                                      chunk, residency)
     return out, (e, x_hat, dist, w1, b1, w2, b2, bond_center, bond_crystal,
                  offsets)
 
 
 def _fused_force_virial_readout_bwd(num_atoms, num_crystals, block_rows,
-                                    chunk, res, g):
+                                    chunk, residency, res, g):
     """Tile-wise recompute backward over bond chunks with DUAL cotangents:
     each chunk re-derives its (chunk, 3) force and (chunk, 9) virial
     contributions with one chunk-local jax.vjp, gathers the force
@@ -871,7 +1021,8 @@ _fused_force_virial_readout.defvjp(_fused_force_virial_readout_fwd,
 def fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
                                bond_crystal, bond_offsets, num_atoms: int,
                                num_crystals: int, *, block_rows: int = 8,
-                               chunk: int = 256):
+                               chunk: int = 256,
+                               table_residency: str = "auto"):
     """Single-pass Eq. 7 force readout + per-bond virial stress epilogue.
 
     One kernel launch produces BOTH outputs (DESIGN.md §7): the (A, 3)
@@ -883,11 +1034,14 @@ def fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2, bond_center,
     normalization / unit conversion live in ``core.heads`` (the kernel
     boundary carries raw sums only).  Differentiable via a chunked
     recompute custom VJP emitting cotangents for both outputs.
+
+    ``table_residency`` (DESIGN.md §9): as in ``fused_force_readout``,
+    with the crystal ids and per-bond distances as extra streams.
     """
     return _fused_force_virial_readout(e, x_hat, dist, w1, b1, w2, b2,
                                        bond_center, bond_crystal,
                                        bond_offsets, num_atoms, num_crystals,
-                                       block_rows, chunk)
+                                       block_rows, chunk, table_residency)
 
 
 def fused_swiglu(x, w_gate, w_up, w_down, *, activation: str = "silu",

@@ -8,6 +8,14 @@ rules — LayerNorm statistics in f32 — so an oracle fed bf16 operands
 models the kernel's semantics (bf16 GEMM inputs, f32 accumulation), not
 a fully-bf16 computation.  The custom-VJP backwards in ``kernels.ops``
 call these with f32-upcast operands either way.
+
+Table residency (DESIGN.md §9): every oracle here is residency-FREE —
+``table_residency="vmem"`` and ``"hbm"`` are two lowerings of the same
+math, so kernel tests compare both tiers against one oracle.  The only
+residency-specific math is the hbm tier's windowed-one-hot table walk
+(``fused_message_passing._gather_rows_hbm``), whose ground truth is
+``streamed_gather_ref`` below: a plain-jnp replay of the per-window
+accumulation, property-equal to a whole-array ``take``.
 """
 from __future__ import annotations
 
@@ -51,6 +59,29 @@ def sorted_segment_sum_ref(values, seg_ids, offsets, num_segments):
     valid = jnp.arange(values.shape[0]) < offsets[num_segments]
     v = jnp.where(valid[:, None], values, 0.0)
     return jax.ops.segment_sum(v, seg_ids, num_segments=num_segments)
+
+
+def streamed_gather_ref(ids, table, tile: int):
+    """(N,) x (R, D) -> (N, D): the hbm tier's windowed table gather.
+
+    Replays ``_gather_rows_hbm``'s math in plain jnp: the table is walked
+    in ``tile``-row windows (the ping/pong DMA slots) and each window
+    contributes its one-hot-selected rows to a running f32 accumulator —
+    ``sum_t onehot(ids in window t) @ table[window t]``.  Every id hits
+    exactly one window, so the result equals ``table[ids]`` exactly for
+    f32 tables; kernel tests use this to pin the streaming decomposition
+    itself, independent of the megakernels around it.  Requires
+    ``R % tile == 0`` (the wrappers pad tables to the tile multiple).
+    """
+    r, d = table.shape
+    assert r % tile == 0, (r, tile)
+    out = jnp.zeros((ids.shape[0], d), jnp.float32)
+    for t in range(r // tile):
+        cols = t * tile + jnp.arange(tile)[None, :]
+        onehot = (ids[:, None] == cols).astype(jnp.float32)
+        out = out + onehot @ table[t * tile:(t + 1) * tile].astype(
+            jnp.float32)
+    return out.astype(table.dtype)
 
 
 def _layer_norm(x, scale, bias, eps=1e-5):

@@ -54,7 +54,8 @@ def train_chgnet(args):
     model_cfg = model_cfg.with_(conv_impl=args.conv_impl,
                                 precision=args.precision,
                                 bond_store=args.bond_store,
-                                stress_mode=args.stress_mode)
+                                stress_mode=args.stress_mode,
+                                table_residency=args.table_residency)
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
                             loss=C.LOSS, grad_reduce=args.grad_reduce,
                             cost_refit_every=args.cost_refit_every,
@@ -229,6 +230,14 @@ def main():
                          "from the force head's n_ij (no stress params; "
                          "fused into the force megakernel epilogue when "
                          "--conv-impl fused)")
+    ap.add_argument("--table-residency", default="auto",
+                    choices=["auto", "vmem", "hbm"],
+                    help="operand-table residency of the Pallas kernels "
+                         "(DESIGN.md §9): vmem = whole-array resident; "
+                         "hbm = tables stay in HBM, streamed with "
+                         "double-buffered DMA (10k+-atom structures); "
+                         "auto = per-launch byte estimate vs the VMEM "
+                         "budget (REPRO_VMEM_BUDGET_MB)")
     ap.add_argument("--grad-reduce", default="bucketed",
                     choices=["plain", "bucketed", "compressed"])
     ap.add_argument("--cost-refit-every", type=int, default=0,

@@ -122,6 +122,35 @@ class ServeEngine:
                    structure_ladder(graphs, crystals, **ladder_kw),
                    validate_layout=validate_layout, precision=precision)
 
+    def admission_check(self, caps: BatchCapacities) -> None:
+        """Refuse early (clear error) what the vmem tier cannot serve.
+
+        Under ``table_residency="vmem"`` a batch whose operand tables
+        exceed the VMEM budget would only fail deep inside kernel
+        lowering (or OOM the device); check at admission instead and
+        point at the fix.  ``"auto"`` (the default) and ``"hbm"`` admit
+        ANY capacity — the tables stream through the DESIGN.md §9
+        double-buffered DMA tier, so 10k+-atom structures pack and serve
+        instead of erroring.
+        """
+        cfg = self.model_cfg
+        if cfg.table_residency != "vmem":
+            return
+        from repro.kernels.ops import estimate_table_bytes, vmem_budget_bytes
+
+        table_bytes = estimate_table_bytes(
+            caps.atoms, caps.bonds, caps.angles, cfg.dim,
+            num_und=caps.und_cap if cfg.bond_store == "undirected" else None,
+        )
+        budget = vmem_budget_bytes()
+        if table_bytes > budget:
+            raise ValueError(
+                f"batch capacities {caps} need ~{table_bytes} operand-table "
+                f"bytes, over the {budget}-byte VMEM budget; serve with "
+                f"table_residency='auto' (or 'hbm') to stream tables from "
+                f"HBM (DESIGN.md §9)"
+            )
+
     def step_fn(self, caps: BatchCapacities, num_slots: int):
         """Persistent compiled serve step for (bucket, slots, config).
 
@@ -161,6 +190,7 @@ class ServeEngine:
             max(g.num_angles for g in graphs),
         )
         caps = bucket.scaled(slots)
+        self.admission_check(caps)
         batch, _ = self.engine.pack(
             crystals, graphs, caps=caps, num_crystal_slots=slots
         )

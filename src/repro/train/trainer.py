@@ -511,9 +511,19 @@ class Trainer:
         compile_cache: CompileCache | None = None,
         async_ckpt: bool = False,
         shutdown=None,
+        donate: bool = True,
+        donate_eval: bool = False,
     ):
         self.model_cfg = model_cfg
         self.train_cfg = train_cfg
+        # buffer-donation policy, threaded through every step builder's
+        # compile-cache ``donate`` flag (donated/undonated builds never
+        # collide in the cache): ``donate`` covers train (params/opt_state)
+        # and serve (batch); ``donate_eval`` opts the DP eval step into
+        # consuming its batch — OFF by default because eval batches are
+        # legitimately reused across eval passes
+        self.donate = donate
+        self.donate_eval = donate_eval
         self.params = chgnet_init(jax.random.PRNGKey(seed), model_cfg)
         # mixed precision (DESIGN.md §4): low-precision param storage gets
         # f32 master weights in the optimizer; low-precision compute gets
@@ -590,16 +600,21 @@ class Trainer:
         if self.mesh is not None:
             # build all three steps: a mesh-mode Trainer must be able to
             # eval and serve too (previously only _train_step existed, so
-            # multi-device eval/serve hit undefined attributes)
+            # multi-device eval/serve hit undefined attributes).  The
+            # donate flags ride the compile-cache keys inside the builders.
             self._train_step = make_dp_train_step(model_cfg, train_cfg,
-                                                  self.mesh, cache=cache)
+                                                  self.mesh, cache=cache,
+                                                  donate=self.donate)
             self._eval_step = make_dp_eval_step(model_cfg, train_cfg,
-                                                self.mesh, cache=cache)
+                                                self.mesh, cache=cache,
+                                                donate=self.donate_eval)
             self._serve_step = make_dp_serve_step(model_cfg, self.mesh,
-                                                  cache=cache)
+                                                  cache=cache,
+                                                  donate=self.donate)
         else:
             self._train_step, self._eval_step, self._serve_step = (
-                make_chgnet_step_fns(model_cfg, train_cfg, cache=cache)
+                make_chgnet_step_fns(model_cfg, train_cfg, cache=cache,
+                                     donate=self.donate)
             )
         # accumulation steps are built lazily on the first StepPlan
         self._accum_fns = None
@@ -748,7 +763,7 @@ class Trainer:
         if self._accum_fns is None:
             self._accum_fns = make_chgnet_accum_step_fns(
                 self.model_cfg, self.train_cfg, mesh=self.mesh,
-                cache=self.compile_cache)
+                cache=self.compile_cache, donate=self.donate)
         return self._accum_fns
 
     def _step_plan(self, plan: StepPlan):

@@ -1,0 +1,139 @@
+"""Angle-pair dedup store (DESIGN.md §5 extension).
+
+Under ``bond_store="undirected"`` the ordered angle list carries both
+(ij, ik) and (ik, ij) per center; the angle cosine is bitwise symmetric
+under the swap, so geometry/Fourier/angle-embed run once per unordered
+pair (Au == Na/2) and expand through ``angle_pair``.  Pins:
+
+  - map construction (Au == Na/2 on symmetric lists, singleton fallback,
+    representative orientation);
+  - EXACT (0 ulp) equality of the expanded cosines vs the directed rows;
+  - the ``validate_layout`` mirror invariant rejects tampered maps;
+  - directed == undirected model forward/grad stays within tolerance
+    with the dedup rows active (it is on by default for the undirected
+    store, so test_bond_store.py covers the sweep; here we pin the
+    dedup-specific pieces).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.batching import BatchCapacities, batch_crystals
+from repro.batching.pack import validate_layout
+from repro.core.basis import compute_geometry, compute_geometry_undirected
+from repro.core.neighbors import (
+    Crystal,
+    build_angle_mirror_maps,
+    build_graph,
+)
+
+
+def _crystal(rng, n, scale=3.6):
+    return Crystal(
+        lattice=np.eye(3) * scale + rng.normal(0, .05, (3, 3)),
+        frac_coords=rng.random((n, 3)),
+        atomic_numbers=rng.integers(1, 60, n),
+    )
+
+
+@pytest.fixture(scope="module")
+def packed():
+    rng = np.random.default_rng(7)
+    cs = [_crystal(rng, 5), _crystal(rng, 6), _crystal(rng, 4)]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(sum(c.num_atoms for c in cs) + 4,
+                           sum(g.num_bonds for g in gs) + 8,
+                           sum(g.num_angles for g in gs) + 8)
+    return batch_crystals(cs, gs, caps), gs
+
+
+def test_map_construction_halves_symmetric_lists():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        g = build_graph(_crystal(rng, int(rng.integers(3, 9))))
+        if g.num_angles == 0:
+            continue
+        assert g.angle_pair is not None and g.und_angle_rep is not None
+        na, nu = g.num_angles, g.und_angle_rep.shape[0]
+        # build_graph emits all ordered pairs -> exact halving
+        assert na == 2 * nu
+        # each und id referenced exactly twice, reps map back to members
+        counts = np.bincount(g.angle_pair, minlength=nu)
+        assert np.all(counts == 2)
+        rep = g.und_angle_rep
+        assert np.all(g.angle_pair[rep] == np.arange(nu))
+        # representative + mirror carry the same unordered bond pair
+        lo = np.minimum(g.angle_ij, g.angle_ik)
+        hi = np.maximum(g.angle_ij, g.angle_ik)
+        key = lo.astype(np.int64) << 32 | hi
+        for u in range(nu):
+            members = np.where(g.angle_pair == u)[0]
+            assert len(set(key[members])) == 1
+
+
+def test_singleton_fallback_total():
+    """Asymmetric hand-built angle lists still get total maps."""
+    ij = np.array([0, 1, 3], np.int32)
+    ik = np.array([1, 0, 4], np.int32)  # {0,1} paired, {3,4} singleton
+    pair, rep = build_angle_mirror_maps(ij, ik)
+    assert rep.shape[0] == 2
+    assert pair[0] == pair[1] != pair[2]
+    assert np.all(pair[rep] == np.arange(2))
+    p0, r0 = build_angle_mirror_maps(ij[:0], ik[:0])
+    assert p0.shape == (0,) and r0.shape == (0,)
+
+
+def test_dedup_rows_expand_exactly(packed):
+    """cos/theta at the dedup rows expand to the directed rows bitwise."""
+    batch, _ = packed
+    *_, cos_d, theta_d = compute_geometry_undirected(
+        batch, angle_rows="directed")
+    *_, cos_u, theta_u = compute_geometry_undirected(
+        batch, angle_rows="undirected")
+    mask = np.asarray(batch.angle_mask) > 0
+    pair = np.asarray(batch.angle_pair)
+    assert np.array_equal(np.asarray(cos_u)[pair][mask],
+                          np.asarray(cos_d)[mask])
+    assert np.array_equal(np.asarray(theta_u)[pair][mask],
+                          np.asarray(theta_d)[mask])
+    # and the directed store agrees up to float assoc. (sanity)
+    *_, cos_ref, _ = compute_geometry(batch)
+    np.testing.assert_allclose(np.asarray(cos_d)[mask],
+                               np.asarray(cos_ref)[mask], atol=1e-6)
+
+
+def test_validate_layout_rejects_tampered_angle_maps(packed):
+    batch, _ = packed
+    validate_layout(batch)  # clean batch passes
+
+    na = int(np.asarray(batch.angle_mask).sum())
+    if na < 2:
+        pytest.skip("batch too small to tamper")
+    # point a real angle at the wrong und entry
+    ap = np.asarray(batch.angle_pair).copy()
+    u0, u1 = ap[0], ap[1]
+    if u0 == u1:
+        pytest.skip("first two angles share a pair")
+    ap[0] = u1
+    import dataclasses
+    bad = dataclasses.replace(batch, angle_pair=jnp.asarray(ap))
+    with pytest.raises(ValueError):
+        validate_layout(bad)
+    # orientation mismatch: und entry referencing unrelated bonds
+    uij = np.asarray(batch.und_angle_ij).copy()
+    uik = np.asarray(batch.und_angle_ik).copy()
+    uij[u0], uik[u0] = uik[u0], uij[u0] + 1
+    bad2 = dataclasses.replace(batch, und_angle_ij=jnp.asarray(uij),
+                               und_angle_ik=jnp.asarray(uik))
+    with pytest.raises(ValueError):
+        validate_layout(bad2)
+
+
+def test_capacity_overflow_carries_und_angles():
+    caps = BatchCapacities(64, 256, 512, und_angles=300)
+    assert caps.und_angle_cap == 300
+    k = caps.scaled(2)
+    assert k.und_angle_cap == 600
+    assert caps.fits(10, 20, 30, n_und_angles=299)
+    assert not caps.fits(10, 20, 30, n_und_angles=301)

@@ -1,0 +1,279 @@
+"""HBM-resident operand tables (DESIGN.md §9).
+
+Covers the ``table_residency`` tier end to end:
+
+  - vmem/hbm numerical parity (forward AND param-grads, ≤1e-5) over a
+    pairwise-covering sweep of the mlp × agg × conv × bond_store tiers —
+    every axis value is exercised against both conv tiers and both bond
+    stores, so every residency-sensitive kernel path (fused_segment_sum,
+    fused_atom_conv / fused_bond_conv, both force readouts, plus the
+    trivially-residency-free pure-jnp tiers) is compared under both
+    residencies in interpret mode;
+  - the auto-selection heuristic (``_resolve_residency`` against the
+    ``REPRO_VMEM_BUDGET_MB`` budget) and the table-size estimator;
+  - training end to end with operand tables over the VMEM budget
+    (tiny budget forces ``"auto"`` -> streaming);
+  - the headline unlock: a 10k-atom synthetic crystal packs, runs
+    forward + param-grad under ``table_residency="hbm"`` matching the
+    unfused reference, and ``ServeEngine`` ADMITS it instead of raising
+    (admission only refuses under an explicit over-budget "vmem" tier).
+
+All run on CPU via REPRO_KERNELS_INTERPRET=1.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.batching import BatchCapacities, batch_crystals
+from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
+from repro.core.neighbors import Crystal, GraphIndices, build_graph
+from repro.kernels.ops import (
+    estimate_table_bytes,
+    resident_vmem_estimate,
+    vmem_budget_bytes,
+)
+
+
+def _crystal(rng, n, scale=3.4):
+    return Crystal(
+        lattice=np.eye(3) * scale + rng.normal(0, .05, (3, 3)),
+        frac_coords=rng.random((n, 3)),
+        atomic_numbers=rng.integers(1, 60, n),
+    )
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(0)
+    cs = [_crystal(rng, 3), _crystal(rng, 4)]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(sum(c.num_atoms for c in cs) + 4,
+                           sum(g.num_bonds for g in gs) + 8,
+                           sum(g.num_angles for g in gs) + 8)
+    return batch_crystals(cs, gs, caps)
+
+
+def _cfg(mlp, agg, conv, store, residency, **kw):
+    return CHGNetConfig(dim=16, num_blocks=1, readout="direct",
+                        mlp_impl=mlp, agg_impl=agg, conv_impl=conv,
+                        bond_store=store, table_residency=residency, **kw)
+
+
+def _fwd_grad(cfg, params, batch):
+    def loss(p):
+        out = chgnet_apply(p, cfg, batch)
+        return out["energy"].sum() + out["forces"].sum(), out
+
+    (val, out), grads = jax.value_and_grad(loss, has_aux=True)(params)
+    return out, grads
+
+
+# pairwise-covering sweep: every mlp value and every agg value meet both
+# conv tiers, and both bond stores meet both conv tiers (full product at
+# model level is minutes of interpret-mode tracing for zero extra kernel
+# coverage — mlp/agg only interact with residency through the pallas
+# tiers, which appear on both sides below)
+TIERS = [
+    ("ref", "scatter", "unfused", "directed"),
+    ("packed", "matmul", "unfused", "undirected"),
+    ("pallas", "sorted", "unfused", "directed"),
+    ("ref", "pallas", "unfused", "undirected"),
+    ("pallas", "pallas", "fused", "directed"),
+    ("packed", "scatter", "fused", "undirected"),
+    ("ref", "matmul", "fused", "directed"),
+    ("pallas", "sorted", "fused", "undirected"),
+]
+
+
+@pytest.mark.parametrize("mlp,agg,conv,store", TIERS)
+def test_hbm_matches_vmem_fwd_and_grads(batch, mlp, agg, conv, store):
+    """hbm == vmem ≤1e-5 on forward outputs AND every param-grad leaf."""
+    cfg_v = _cfg(mlp, agg, conv, store, "vmem")
+    cfg_h = cfg_v.with_(table_residency="hbm")
+    params = chgnet_init(jax.random.PRNGKey(0), cfg_v, dtype=jnp.float32)
+    out_v, g_v = _fwd_grad(cfg_v, params, batch)
+    out_h, g_h = _fwd_grad(cfg_h, params, batch)
+    for k in ("energy", "forces", "stress", "magmom"):
+        np.testing.assert_allclose(out_h[k], out_v[k], atol=1e-5, rtol=0,
+                                   err_msg=k)
+    leaves_v, tree = jax.tree.flatten(g_v)
+    leaves_h, _ = jax.tree.flatten(g_h)
+    for lv, lh in zip(leaves_v, leaves_h):
+        np.testing.assert_allclose(lh, lv, atol=1e-5, rtol=0)
+
+
+def test_estimator_and_auto_selection(monkeypatch):
+    """auto == vmem when tables fit, hbm when they exceed the budget."""
+    from repro.kernels.ops import _resolve_residency
+
+    tb = estimate_table_bytes(64, 512, 1024, 64)
+    # deterministic closed form: the max resident working set is a small
+    # multiple of the largest per-table row block; the exact value is an
+    # implementation detail, but it must scale with the inputs and be
+    # positive
+    assert tb > 0
+    assert estimate_table_bytes(64, 4096, 8192, 64) > tb
+    assert estimate_table_bytes(64, 512, 1024, 256) > tb
+    assert _resolve_residency("auto", vmem_budget_bytes() + 1) == "hbm"
+    assert _resolve_residency("auto", vmem_budget_bytes()) == "vmem"
+    assert _resolve_residency("vmem", 10**12) == "vmem"
+    assert _resolve_residency("hbm", 1) == "hbm"
+    with pytest.raises(ValueError):
+        _resolve_residency("dram", 1)
+    # env override (what tests/CI use to force streaming)
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_MB", "1")
+    assert vmem_budget_bytes() == 1 << 20
+    # the hbm tier's resident estimate must undercut vmem's once tables
+    # dominate (this is the bench_iteration enforced bar, kept honest here)
+    big = dict(num_atoms=4096, num_bonds=65536, num_angles=131072, dim=64)
+    assert (resident_vmem_estimate("hbm", **big)
+            < resident_vmem_estimate("vmem", **big))
+
+
+def test_trains_over_budget_tables(batch, monkeypatch):
+    """End-to-end train step with operand tables exceeding the budget.
+
+    A 1 KiB budget makes ANY batch over-budget; ``"auto"`` must resolve
+    to streaming and the step must still produce finite loss and grads.
+    """
+    from repro.train import TrainConfig
+    from repro.train.trainer import make_chgnet_step_fns
+    from repro.train.trainer import Trainer
+
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_MB", "0.001")
+    cfg = _cfg("pallas", "pallas", "fused", "undirected", "auto")
+    assert estimate_table_bytes(
+        batch.atom_cap, batch.bond_cap, batch.angle_cap, cfg.dim,
+        num_und=batch.und_cap) > vmem_budget_bytes()
+    tr = Trainer(cfg, TrainConfig(global_batch=2, total_steps=10))
+    params, opt_state, metrics = tr._train_step(
+        tr.params, tr.opt_state, batch, 0)
+    assert np.isfinite(float(metrics["loss"]))
+    # donated params were consumed; the returned tree is the live one
+    leaf = jax.tree.leaves(params)[0]
+    assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# the unlock: 10k-atom structures pack, train and serve
+# ---------------------------------------------------------------------------
+
+def _ring_structure(n, spacing=2.0):
+    """Hand-built n-atom ring chain (build_graph is O(N^2 * images)).
+
+    Atom i bonds to i±1 (periodic along x), spacing < r_cut_bond so both
+    bonds are "short" -> 2 bonds and 2 ordered angle pairs per center;
+    bond/angle lists are emitted center-sorted (DESIGN.md §1) and mirror
+    maps are left None — packing repairs them (bond AND angle-pair).
+    """
+    lat = np.diag([n * spacing, 8.0, 8.0])
+    frac = np.zeros((n, 3))
+    frac[:, 0] = np.arange(n) / n
+    frac[:, 1:] = 0.5
+    z = (np.arange(n) % 60) + 1
+    crystal = Crystal(lattice=lat, frac_coords=frac,
+                      atomic_numbers=z.astype(np.int64))
+    bc, bn, im = [], [], []
+    for i in range(n):
+        jm, jp = (i - 1) % n, (i + 1) % n
+        bc += [i, i]
+        bn += [jm, jp]
+        im += [[-1, 0, 0] if i == 0 else [0, 0, 0],
+               [1, 0, 0] if i == n - 1 else [0, 0, 0]]
+    a_ij, a_ik = [], []
+    for i in range(n):
+        a_ij += [2 * i, 2 * i + 1]
+        a_ik += [2 * i + 1, 2 * i]
+    graph = GraphIndices(np.asarray(bc, np.int32), np.asarray(bn, np.int32),
+                         np.asarray(im, np.int32),
+                         np.asarray(a_ij, np.int32),
+                         np.asarray(a_ik, np.int32))
+    return crystal, graph
+
+
+@pytest.fixture(scope="module")
+def giant():
+    return _ring_structure(10_000)
+
+
+def test_10k_atoms_pack_forward_grad_hbm(giant):
+    """10k-atom crystal packs and fwd+grads under hbm ≈ unfused reference."""
+    crystal, graph = giant
+    caps = BatchCapacities(crystal.num_atoms + 16, graph.num_bonds + 16,
+                           graph.num_angles + 16)
+    batch = batch_crystals([crystal], [graph], caps)
+    # tables genuinely exceed the default VMEM budget at production dim
+    assert estimate_table_bytes(caps.atoms, caps.bonds, caps.angles,
+                                64) > vmem_budget_bytes()
+    cfg = _cfg("pallas", "pallas", "fused", "directed", "hbm")
+    params = chgnet_init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    out_h, g_h = _fwd_grad(cfg, params, batch)
+    cfg_ref = cfg.with_(mlp_impl="ref", agg_impl="scatter",
+                        conv_impl="unfused", table_residency="vmem")
+    out_r, g_r = _fwd_grad(cfg_ref, params, batch)
+    np.testing.assert_allclose(out_h["forces"], out_r["forces"],
+                               atol=1e-5, rtol=0)
+    # energy is a 10k-atom sum — compare per-atom
+    e_h = float(out_h["energy"][0]) / crystal.num_atoms
+    e_r = float(out_r["energy"][0]) / crystal.num_atoms
+    assert abs(e_h - e_r) <= 1e-5, (e_h, e_r)
+    for lh, lr in zip(jax.tree.leaves(g_h), jax.tree.leaves(g_r)):
+        np.testing.assert_allclose(
+            np.asarray(lh) / crystal.num_atoms,
+            np.asarray(lr) / crystal.num_atoms, atol=1e-5, rtol=0)
+
+
+def test_10k_atoms_serve_admission(giant, monkeypatch):
+    """ServeEngine admits the 10k-atom structure; only an explicit
+    over-budget vmem tier refuses (early, with an actionable error)."""
+    from repro.serve.engine import ServeEngine
+
+    crystal, graph = giant
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_MB", "1")
+    cfg = _cfg("pallas", "pallas", "fused", "directed", "auto")
+    params = chgnet_init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    eng = ServeEngine.for_structures(params, cfg, [crystal], graphs=[graph])
+    caps = eng.engine.ladder.bucket_for(
+        crystal.num_atoms, graph.num_bonds, graph.num_angles)
+    assert caps.fits(crystal.num_atoms, graph.num_bonds, graph.num_angles)
+    # "auto" (and "hbm") admit any capacity — tables stream from HBM
+    eng.admission_check(caps)
+    eng_hbm = ServeEngine.for_structures(
+        params, cfg.with_(table_residency="hbm"), [crystal], graphs=[graph])
+    eng_hbm.admission_check(caps)
+    # the pinned vmem tier refuses at admission (NOT deep in lowering)
+    eng_vmem = ServeEngine.for_structures(
+        params, cfg.with_(table_residency="vmem"), [crystal], graphs=[graph])
+    with pytest.raises(ValueError, match="table_residency"):
+        eng_vmem.predict([crystal], graphs=[graph])
+
+
+def test_streamed_gather_oracle_matches_take():
+    """The §9 windowed-one-hot table walk == whole-array gather, for any
+    tile that divides the table rows."""
+    from repro.kernels.ref import streamed_gather_ref
+
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(512, 128)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 512, size=200).astype(np.int32))
+    want = np.asarray(table)[np.asarray(ids)]
+    for tile in (64, 128, 512):
+        got = streamed_gather_ref(ids, table, tile)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_small_structures_unaffected_by_admission(monkeypatch):
+    """Zero regression on CI-small shapes: vmem tier still serves batches
+    whose tables fit the budget."""
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(3)
+    cs = [_crystal(rng, 4), _crystal(rng, 5)]
+    cfg = CHGNetConfig(dim=16, num_blocks=1, readout="direct",
+                       table_residency="vmem")
+    params = chgnet_init(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    eng = ServeEngine.for_structures(params, cfg, cs)
+    out = eng.predict(cs)
+    assert np.all(np.isfinite(out["energy"]))
+    assert out["forces"][0].shape == (4, 3)
