@@ -280,6 +280,129 @@ def _check_bond_store_bar(rows):
                  f"not the §5 claim)" if slow else ""))
 
 
+def run_bond_features_sweep(
+    batch_size: int = 16,
+    iters: int = 3,
+    bond_features: tuple = ("directed", "undirected"),
+    conv_impls: tuple = ("unfused", "fused"),
+    agg_impl: str = "scatter",
+    check: bool = True,
+):
+    """bond_features x conv_impl sweep of one train step at FIXED capacities.
+
+    The DESIGN.md §10 claim as a tracked trajectory: both rows keep the
+    §5 undirected bond STORE; only the trunk's compute representation
+    differs.  ``bond_features="directed"`` expands e to directed rows and
+    runs bond_conv/angle_update over E/A rows; ``"undirected"`` keeps e
+    at Eu and runs the swap-symmetrized forms over Eu/Au rows.  Per
+    combo: step wall time, atoms/s, compiled peak temp memory, and the
+    analytic bond+angle-level GEMM FLOP count per interaction block
+    (``trunk_gemm_flops`` — the bond_mlp/bond_out/angle_mlp GEMMs at
+    that tier's row granularity; row counts are the REAL bond/angle
+    totals, so the number is exact, not a padded-capacity bound).
+
+    Acceptance bars, both ENFORCED everywhere (the whole path is f32
+    and the FLOP count is analytic — no interpret-mode caveat):
+
+      - every "undirected" row's ``trunk_gemm_flops`` must be >= 40%
+        below its "directed" counterpart (pair-symmetric graphs give
+        exactly 50%: Eu == E/2 and Au == A/2 halve every GEMM's rows);
+      - every "undirected" row's compiled peak temp memory must not
+        exceed its "directed" counterpart's (undirected<=directed).
+
+    atoms/s is recorded for the no-regression trajectory (reported, not
+    enforced: interpret-mode wall clock measures the Pallas interpreter).
+    """
+    ds, caps, batch = _bench_batch(batch_size)
+    real_atoms = int(sum(c.num_atoms for c in ds.crystals))
+    real_bonds = int(sum(g.num_bonds for g in ds.graphs))
+    real_und = int(sum(g.num_undirected for g in ds.graphs))
+    real_angles = int(sum(g.num_angles for g in ds.graphs))
+    real_uangles = int(sum(g.und_angle_rep.shape[0] for g in ds.graphs))
+
+    w = LossWeights()
+    params = chgnet_init(jax.random.PRNGKey(0), CHGNetConfig())
+    d = CHGNetConfig().dim
+    rows = []
+    for feat in bond_features:
+        for conv in conv_impls:
+            cfg = CHGNetConfig(readout="direct", bond_store="undirected",
+                               bond_features=feat, conv_impl=conv,
+                               agg_impl=agg_impl)
+            # bond+angle-level GEMMs per interaction block at this tier's
+            # row granularity: bond_mlp (4d -> 2d packed) + angle_mlp
+            # (4d -> 2d packed) per angle row, bond_out (d -> d) per
+            # bond row; 2*m*n FLOPs per row for an (m, n) GEMM
+            a_rows = real_angles if feat == "directed" else real_uangles
+            e_rows = real_bonds if feat == "directed" else real_und
+            flops = (a_rows * 2 * (4 * d) * (2 * d)      # bond_mlp phi
+                     + e_rows * 2 * d * d                # bond_out
+                     + a_rows * 2 * (4 * d) * (2 * d))   # angle_mlp f_a
+            grad_fn = jax.jit(jax.grad(
+                lambda p, b, cfg=cfg: chgnet_loss_fn(p, cfg, b, w)[0]))
+            compiled = grad_fn.lower(params, batch).compile()
+            mem = compiled.memory_analysis()
+            step_s = _time(grad_fn, params, batch, iters=iters)
+            rows.append({
+                "name": f"iter_feat_{feat}_conv_{conv}",
+                "bond_features": feat,
+                "conv_impl": conv,
+                "agg_impl": agg_impl,
+                "step_us": step_s * 1e6,
+                "atoms_per_s": real_atoms / step_s,
+                "peak_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "trunk_gemm_flops": flops,
+                "angle_rows": a_rows,
+                "bond_rows": e_rows,
+                "note": (f"B={batch_size} atoms={real_atoms} "
+                         f"bonds={real_bonds}/und={real_und} "
+                         f"angles={real_angles}/und={real_uangles} "
+                         f"caps=({caps.atoms},{caps.bonds},{caps.angles})"),
+            })
+    if check:
+        _check_bond_features_bar(rows)
+    return rows
+
+
+def _check_bond_features_bar(rows):
+    """DESIGN.md §10 bars, enforced so a regression FAILS the CI bench
+    step: per conv_impl, the undirected trunk must show (a) >= 40% fewer
+    bond+angle-level GEMM FLOPs and (b) compiled peak temp memory no
+    higher than the directed trunk at identical capacities."""
+    by = {(r["bond_features"], r["conv_impl"]): r for r in rows}
+    for (feat, conv), r in by.items():
+        if feat != "undirected":
+            continue
+        drow = by.get(("directed", conv))
+        if drow is None:
+            continue
+        df, uf = drow["trunk_gemm_flops"], r["trunk_gemm_flops"]
+        if uf > 0.6 * df:
+            raise RuntimeError(
+                f"undirected trunk bond+angle GEMM FLOPs not >=40% below "
+                f"directed: {uf:,} vs {df:,} (conv_impl={conv!r}, "
+                f"Au/A={r['angle_rows']}/{drow['angle_rows']}) — "
+                f"DESIGN.md §10")
+        peak, d_peak = r["peak_temp_bytes"], drow["peak_temp_bytes"]
+        if peak is None or d_peak is None:
+            print(f"WARNING: no memory_analysis on this backend "
+                  f"(conv={conv}); §10 memory bar not checked")
+            continue
+        if peak > d_peak:
+            raise RuntimeError(
+                f"bond_features='undirected' peak temp memory above "
+                f"directed: {peak:,} > {d_peak:,} bytes "
+                f"(conv_impl={conv!r}) — DESIGN.md §10 requires "
+                f"undirected <= directed")
+        slow = r["atoms_per_s"] < 0.9 * drow["atoms_per_s"]
+        print(f"bond-features bar OK (conv={conv}): GEMM FLOPs {uf:,} vs "
+              f"{df:,} (-{100 * (1 - uf / df):.0f}%); peak {peak:,} <= "
+              f"{d_peak:,}"
+              + (f"; NOTE atoms/s regressed: {r['atoms_per_s']:.0f} vs "
+                 f"{drow['atoms_per_s']:.0f} (interpret-mode wall clock "
+                 f"is not the §10 claim)" if slow else ""))
+
+
 def run_donation_probe(batch_size: int = 16):
     """Compiled peak-memory delta from donating params/opt_state into the
     train step (the compile-cache step builders donate by default; this
@@ -640,6 +763,14 @@ if __name__ == "__main__":
                          "memory + Eu/E bond-tensor bytes per store x "
                          "conv_impl, with the undirected<directed bars "
                          "enforced (DESIGN.md §5)")
+    ap.add_argument("--bond-features", default=None, metavar="FEATURES",
+                    help="comma-separated trunk compute representations to "
+                         "sweep (e.g. directed,undirected); atoms/s + "
+                         "compiled peak memory + bond+angle GEMM FLOPs per "
+                         "representation x conv_impl on the undirected "
+                         "store, with the >=40%% FLOP reduction and "
+                         "undirected<=directed peak-temp bars enforced "
+                         "(DESIGN.md §10)")
     ap.add_argument("--table-residency", default=None, metavar="TIERS",
                     help="comma-separated residency tiers to sweep (e.g. "
                          "vmem,hbm); atoms/s + table bytes + resident-VMEM "
@@ -664,6 +795,11 @@ if __name__ == "__main__":
         batch_size=bs, iters=iters,
         bond_stores=tuple(args.bond_store.split(",")),
         conv_impls=("unfused",) if args.quick else ("unfused", "fused"))
+    feat_rows = [] if args.bond_features is None else \
+        run_bond_features_sweep(
+            batch_size=bs, iters=iters,
+            bond_features=tuple(args.bond_features.split(",")),
+            conv_impls=("unfused",) if args.quick else ("unfused", "fused"))
     stress_rows = [] if args.stress_mode is None else run_stress_mode_sweep(
         batch_size=bs, iters=iters,
         stress_modes=tuple(args.stress_mode.split(",")))
@@ -677,8 +813,8 @@ if __name__ == "__main__":
     donation_rows = run_donation_probe(batch_size=bs) if args.json else []
     for r in stage_rows:
         print(",".join(map(str, r)))
-    for r in sweep_rows + precision_rows + store_rows + stress_rows \
-            + resid_rows:
+    for r in sweep_rows + precision_rows + store_rows + feat_rows \
+            + stress_rows + resid_rows:
         print(f"{r['name']},{r['step_us']},peak_temp={r['peak_temp_bytes']}"
               f",atoms_per_s={r['atoms_per_s']:.0f}")
     for r in donation_rows:
@@ -691,6 +827,7 @@ if __name__ == "__main__":
             "sweep": sweep_rows,
             "precision": precision_rows,
             "bond_store": store_rows,
+            "bond_features": feat_rows,
             "stress_mode": stress_rows,
             "table_residency": resid_rows,
             "donation": donation_rows,

@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--bond-store", default="directed",
                     choices=["directed", "undirected"],
                     help="undirected = half-graph bond store (DESIGN.md §5)")
+    ap.add_argument("--bond-features", default="directed",
+                    choices=["directed", "undirected"],
+                    help="undirected = symmetric half-graph trunk "
+                         "(DESIGN.md §10; requires --bond-store undirected)")
     ap.add_argument("--stress-mode", default="mlp",
                     choices=["mlp", "bond_virial"],
                     help="direct-readout stress tier (DESIGN.md §7): "
@@ -45,6 +49,7 @@ def main():
     model_cfg = (C.FAST_FS_HEAD if args.readout == "direct"
                  else C.FAST_WO_HEAD).with_(precision=args.precision,
                                             bond_store=args.bond_store,
+                                            bond_features=args.bond_features,
                                             stress_mode=args.stress_mode)
     train_cfg = TrainConfig(global_batch=args.batch,
                             total_steps=args.steps, loss=C.LOSS)

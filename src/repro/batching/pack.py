@@ -233,6 +233,32 @@ def batch_crystals(
         arr[:g_off] = arr[perm_a]
     bond_offsets = _csr_offsets(bond_center[:b_off], caps.atoms)
     angle_offsets = _csr_offsets(angle_ij[:g_off], caps.bonds)
+    # symmetric-trunk incidence store (DESIGN.md §10): every real dedup
+    # angle (Au row) w scatters its single message to BOTH undirected
+    # bonds of its pair — incidences (bond_pair[und_angle_ij[w]], w) and
+    # (bond_pair[und_angle_ik[w]], w) — so each real Au row appears
+    # exactly twice.  On symmetric angle lists (everything the neighbor
+    # builders emit) this equals deriving one incidence per directed
+    # angle, so the real incidence count == the real directed-angle
+    # count.  Built from the FINAL (canonicalized) arrays, dest-sorted so
+    # every aggregation tier — including the Eu destination-tiled
+    # megakernel — owns contiguous runs.
+    n_incid = 2 * ua_off
+    if n_incid > caps.angles:
+        raise ValueError(
+            f"batch needs {n_incid} symmetric incidences but angle_cap is "
+            f"{caps.angles}; the angle list is likely asymmetric "
+            "(hand-built, missing swapped orientations)")
+    sym_dest = np.zeros((caps.angles,), np.int32)
+    sym_rep = np.zeros((caps.angles,), np.int32)
+    if ua_off:
+        dest = np.concatenate([bond_pair[und_angle_ij[:ua_off]],
+                               bond_pair[und_angle_ik[:ua_off]]])
+        rep = np.concatenate([np.arange(ua_off, dtype=np.int32)] * 2)
+        order = np.argsort(dest, kind="stable")
+        sym_dest[:n_incid] = dest[order]
+        sym_rep[:n_incid] = rep[order]
+    sym_offsets = _csr_offsets(sym_dest[:n_incid], und_cap)
 
     if validate:
         # validate the host arrays *before* jnp.asarray — same certification
@@ -245,6 +271,9 @@ def batch_crystals(
                          und_nbr, und_image, und_crystal, und_mask)
         _validate_angle_mirror(angle_mask, angle_ij, angle_ik, angle_pair,
                                und_angle_ij, und_angle_ik, und_angle_mask)
+        _validate_sym_incidence(bond_pair, und_angle_ij, und_angle_ik,
+                                und_angle_mask, sym_dest, sym_rep,
+                                sym_offsets)
 
     return CrystalGraphBatch(
         atom_z=jnp.asarray(atom_z),
@@ -274,6 +303,9 @@ def batch_crystals(
         und_angle_ij=jnp.asarray(und_angle_ij),
         und_angle_ik=jnp.asarray(und_angle_ik),
         und_angle_mask=jnp.asarray(und_angle_mask),
+        sym_dest=jnp.asarray(sym_dest),
+        sym_rep=jnp.asarray(sym_rep),
+        sym_offsets=jnp.asarray(sym_offsets),
         energy=jnp.asarray(energy),
         forces=jnp.asarray(forces),
         stress=jnp.asarray(stress),
@@ -318,6 +350,12 @@ def validate_layout(batch: CrystalGraphBatch) -> CrystalGraphBatch:
         np.asarray(batch.angle_ik), np.asarray(batch.angle_pair),
         np.asarray(batch.und_angle_ij), np.asarray(batch.und_angle_ik),
         np.asarray(batch.und_angle_mask),
+    )
+    _validate_sym_incidence(
+        np.asarray(batch.bond_pair), np.asarray(batch.und_angle_ij),
+        np.asarray(batch.und_angle_ik), np.asarray(batch.und_angle_mask),
+        np.asarray(batch.sym_dest), np.asarray(batch.sym_rep),
+        np.asarray(batch.sym_offsets),
     )
     return batch
 
@@ -430,6 +468,47 @@ def _validate_angle_mirror(angle_mask, angle_ij, angle_ik, angle_pair,
            "each dedup-angle row needs exactly one same-orientation ref")
     _check(np.all(refs_flip <= 1),
            "a dedup-angle row has more than one swapped reference")
+
+
+def _validate_sym_incidence(bond_pair, und_angle_ij, und_angle_ik,
+                            und_angle_mask, sym_dest, sym_rep,
+                            sym_offsets) -> None:
+    """Symmetric-trunk incidence invariant (DESIGN.md §10).
+
+    The incidence store must be exactly the dest-sorted multiset
+    { (bond_pair[und_angle_ij[w]], w), (bond_pair[und_angle_ik[w]], w) }
+    over the real dedup-angle prefix — every real Au row appears exactly
+    twice, once per undirected bond of its pair (both incidences may
+    share a destination for self-image bonds i->i(±L)).  sym_offsets is
+    the CSR of sym_dest over Eu rows with sym_offsets[-1] == 2·Au_real,
+    and padded incidences carry (dest=0, rep=0) past the real prefix.
+    """
+    nua = int(und_angle_mask.sum())
+    ni = 2 * nua
+    _check(sym_dest.shape == sym_rep.shape,
+           f"sym_dest/sym_rep shapes {sym_dest.shape} != {sym_rep.shape}")
+    _check(ni <= sym_dest.shape[0],
+           f"{ni} symmetric incidences exceed angle_cap {sym_dest.shape[0]}")
+    _check(np.all(sym_dest[ni:] == 0) and np.all(sym_rep[ni:] == 0),
+           "padded symmetric incidences must carry (dest=0, rep=0)")
+    _check(np.all(np.diff(sym_dest[:ni]) >= 0),
+           "real symmetric incidences not sorted by destination")
+    _check(sym_offsets[0] == 0 and sym_offsets[-1] == ni,
+           f"sym_offsets endpoints != (0, {ni})")
+    _check(np.all(np.diff(sym_offsets) >= 0), "sym_offsets not monotone")
+    expect = np.searchsorted(sym_dest[:ni], np.arange(sym_offsets.shape[0]))
+    _check(np.array_equal(sym_offsets, expect),
+           "sym_offsets disagree with sorted incidence destinations")
+    want_dest = np.concatenate([bond_pair[und_angle_ij[:nua]],
+                                bond_pair[und_angle_ik[:nua]]])
+    want_rep = np.concatenate(
+        [np.arange(nua, dtype=np.int64)] * 2) if nua else want_dest
+    order = np.lexsort((want_rep, want_dest))
+    have = np.lexsort((sym_rep[:ni], sym_dest[:ni]))
+    _check(
+        np.array_equal(sym_dest[:ni][have], want_dest[order])
+        and np.array_equal(sym_rep[:ni][have], want_rep[order]),
+        "symmetric incidences disagree with the dedup-angle mirror maps")
 
 
 def atom_offsets(crystals: list[Crystal]) -> np.ndarray:

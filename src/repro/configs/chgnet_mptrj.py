@@ -41,6 +41,16 @@ FAST_HALF = FAST_FS_HEAD.with_(bond_store="undirected")
 FAST_FUSED_HALF = FAST_FUSED.with_(bond_store="undirected")
 FAST_FUSED_HALF_MIXED = FAST_FUSED_MIXED.with_(bond_store="undirected")
 
+# + symmetric half-graph trunk (DESIGN.md §10): the undirected store's
+# Eu/Au rows become the COMPUTE representation, not just the storage one —
+# bond_conv aggregates both directed angle contributions of each pair into
+# one Eu-row update and angle_update runs its swap-symmetrized f_a over Au
+# rows, halving every bond/angle-level GEMM's row count end to end.
+# Param shapes are unchanged (checkpoint-compatible with FAST_HALF); the
+# directed view survives only at the head boundary.
+FAST_SYM = FAST_HALF.with_(bond_features="undirected")
+FAST_FUSED_SYM = FAST_FUSED_HALF.with_(bond_features="undirected")
+
 # + per-bond virial stress (DESIGN.md §7): sigma from the force head's own
 # n_ij — sigma = 1/(2V) sum n_ij d_ij x_hat⊗x_hat — instead of the pooled
 # S-head MLP; no stress parameters, geometry-aware by construction.  In

@@ -224,7 +224,11 @@ def compute_geometry_undirected(
         cosine is bitwise swap-symmetric (see ``_angle_cosines``), so
         expanding through ``graph.angle_pair`` reproduces the directed
         values exactly while halving the angle-level geometry, Fourier,
-        and embedding work.
+        and embedding work.  The §10 symmetric trunk
+        (``bond_features="undirected"``) consumes these Au rows
+        directly — no ``angle_pair`` expansion ever happens there; the
+        Fourier basis, the angle embedding, and every block's
+        bond/angle GEMM stay at the halved row count.
 
     Returns (vec_und (Nu,3), dist_und (Nu,), vec (Nb,3), dist (Nb,),
     cos_theta, theta) — the angle outputs at Na or Au rows per

@@ -102,6 +102,36 @@ class CHGNetConfig:
     # (kernels.ops.vmem_budget_bytes) and picks — small batches keep the
     # exact vmem lowering, oversized ones transparently stream.
     table_residency: str = "auto"  # "auto" | "vmem" | "hbm"
+    # Symmetric half-graph trunk (DESIGN.md §10).  "undirected" makes the
+    # undirected representation the COMPUTE representation, not just the
+    # storage one: ``e`` lives at Eu ≈ E/2 rows from bond-embed through
+    # every interaction block (symmetrized bond_conv scatters each Au-row
+    # message to BOTH undirected destinations through the sym-incidence
+    # store), and ``a`` lives at the Au == A/2 dedup rows (swap-symmetrized
+    # angle_update) — halving every bond- and angle-level GEMM in the
+    # trunk.  Requires ``bond_store="undirected"`` (the mirror maps ARE
+    # the compute indices here); directed views of ``e`` materialize only
+    # at the heads boundary.  This is a distinct model variant, not a
+    # re-layout: directed bond_conv produces e_ij != e_ji, the symmetric
+    # trunk by construction does not (parameter shapes are identical, so
+    # checkpoints carry over).
+    bond_features: str = "directed"  # "directed" | "undirected"
+
+    def __post_init__(self):
+        # dataclasses.replace (with_) re-runs this, so every derived config
+        # is revalidated too
+        if self.bond_features not in ("directed", "undirected"):
+            raise ValueError(
+                f"bond_features must be 'directed' or 'undirected', "
+                f"got {self.bond_features!r}")
+        if self.bond_features == "undirected" and \
+                self.bond_store != "undirected":
+            raise ValueError(
+                'bond_features="undirected" (the symmetric half-graph '
+                "trunk, DESIGN.md §10) requires the undirected bond store: "
+                'pass bond_store="undirected" as well — the bond_pair / '
+                "angle_pair mirror maps are its compute indices, got "
+                f"bond_store={self.bond_store!r}")
 
     def with_(self, **kw) -> "CHGNetConfig":
         return dataclasses.replace(self, **kw)
@@ -219,11 +249,19 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
         # re-mask (padded angles carry pair=0)
         a_und = linear_apply(params["angle_embed"], four) \
             * graph.und_angle_mask[..., None].astype(cd)
-        a = a_und[graph.angle_pair] * graph.angle_mask[..., None].astype(cd)
         umask = graph.und_mask[..., None].astype(cd)
         e_a = e_a * umask
         e_b = e_b * umask
-        e = e0[graph.bond_pair] * graph.bond_mask[..., None].astype(cd)
+        if cfg.bond_features == "undirected":
+            # symmetric trunk (DESIGN.md §10): e stays Eu-resident and a
+            # stays Au-resident for the whole trunk — the blocks consume
+            # them through the mirror maps / sym-incidence store
+            a = a_und
+            e = e0 * umask
+        else:
+            a = a_und[graph.angle_pair] \
+                * graph.angle_mask[..., None].astype(cd)
+            e = e0[graph.bond_pair] * graph.bond_mask[..., None].astype(cd)
     else:
         a = linear_apply(params["angle_embed"], four) \
             * graph.angle_mask[..., None].astype(cd)
@@ -237,6 +275,7 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
             agg_impl=cfg.agg_impl,
             conv_impl=cfg.conv_impl,
             bond_store=cfg.bond_store,
+            bond_features=cfg.bond_features,
             table_residency=cfg.table_residency,
         )
     # last block updates atoms only (matches CHGNet's final atom conv)
@@ -245,7 +284,8 @@ def _trunk(params, cfg: CHGNetConfig, graph: CrystalGraphBatch,
     v = atom_conv(
         params["final_block"], graph, v, e, e_a,
         mlp_impl=cfg.mlp_impl, agg_impl=cfg.agg_impl, conv_impl=cfg.conv_impl,
-        bond_store=cfg.bond_store, table_residency=cfg.table_residency,
+        bond_store=cfg.bond_store, bond_features=cfg.bond_features,
+        table_residency=cfg.table_residency,
     )
     # vec_und/dist_und (None for the directed store) ride along for the
     # bond_virial stress tier's undirected half-geometry path (§5/§7)
@@ -279,6 +319,10 @@ def chgnet_apply(params, cfg: CHGNetConfig, graph: CrystalGraphBatch):
 
     if cfg.readout == "direct":
         v, e, a, vec, dist, vec_und, dist_und = _trunk(params, cfg, graph)
+        if cfg.bond_features == "undirected":
+            # heads boundary (DESIGN.md §10): the force/stress heads read
+            # per-directed-bond features; expand the Eu-resident e ONCE
+            e = e[graph.bond_pair] * graph.bond_mask[..., None].astype(e.dtype)
         energy = heads.energy_head_apply(params["energy_head"], graph, v)
         magmom = heads.magmom_head_apply(params["magmom_head"], graph, v)
         if cfg.stress_mode == "bond_virial":

@@ -46,6 +46,7 @@ if TYPE_CHECKING:  # host-side capacity policy, see repro.batching
         "bond_pair", "bond_sign", "und_center", "und_nbr", "und_image",
         "und_crystal", "und_mask",
         "angle_pair", "und_angle_ij", "und_angle_ik", "und_angle_mask",
+        "sym_dest", "sym_rep", "sym_offsets",
         "energy", "forces", "stress", "magmoms", "n_atoms_per_crystal",
     ],
     meta_fields=[],
@@ -100,6 +101,17 @@ class CrystalGraphBatch:
     und_angle_ij: jnp.ndarray   # (und_angle_cap,) int32 -> bond index
     und_angle_ik: jnp.ndarray   # (und_angle_cap,) int32 -> bond index
     und_angle_mask: jnp.ndarray  # (und_angle_cap,) f32
+    # symmetric-trunk incidence store (DESIGN.md §10): the destination-
+    # sorted CSR over Eu rows that the symmetrized bond_conv scatters
+    # through.  Each real dedup angle (Au row) appears exactly TWICE —
+    # once per undirected bond of its pair — so the real incidence count
+    # equals the real directed-angle count (sym_offsets[-1] == real
+    # angles).  sym_dest[t] is the Eu row incidence t accumulates into,
+    # sym_rep[t] the Au row supplying its message; padded incidences carry
+    # (dest=0, rep=0) and sit past sym_offsets[-1], outside every CSR row.
+    sym_dest: jnp.ndarray       # (angle_cap,) int32 -> und bond index
+    sym_rep: jnp.ndarray        # (angle_cap,) int32 -> und angle index
+    sym_offsets: jnp.ndarray    # (und_cap + 1,) int32 CSR row pointers
     # labels
     energy: jnp.ndarray         # (B,) f32 total energy (eV)
     forces: jnp.ndarray         # (atom_cap, 3) f32
@@ -166,6 +178,9 @@ def batch_input_specs(
         und_angle_ij=s((caps.und_angle_cap,), i),
         und_angle_ik=s((caps.und_angle_cap,), i),
         und_angle_mask=s((caps.und_angle_cap,), f),
+        sym_dest=s((caps.angles,), i),
+        sym_rep=s((caps.angles,), i),
+        sym_offsets=s((caps.und_cap + 1,), i),
         energy=s((batch_size,), f),
         forces=s((caps.atoms, 3), f),
         stress=s((batch_size, 3, 3), f),

@@ -266,6 +266,7 @@ def interaction_block_init(key, dim=64, dtype=jnp.float32):
 
 def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
               conv_impl: str = "unfused", bond_store: str = "directed",
+              bond_features: str = "directed",
               table_residency: str = "auto"):
     """Eq. 4: v_i <- v_i + L_v[ sum_j e^a_ij * phi(v_i, v_j, e_ij) ].
 
@@ -280,6 +281,11 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
     (the mirror-indirected operand class).  The envelope is symmetric
     (e^a_ij == e^a_ji, a function of |r_ij| only), so no sign is applied.
 
+    ``bond_features="undirected"`` (DESIGN.md §10): ``e`` too lives at the
+    undirected capacity (e_ij == e_ji in the symmetric trunk) and joins
+    e^a in the mirror-indirected operand class; per-bond messages still
+    run at E rows because v_i/v_j differ across the two directions.
+
     ``table_residency`` (DESIGN.md §9): operand-table residency tier of
     the fused/pallas kernels ("vmem" | "hbm" | "auto").
     """
@@ -293,11 +299,13 @@ def atom_conv(p, graph: CrystalGraphBatch, v, e, e_a, *, mlp_impl, agg_impl,
             v, e, e_a, mlp["w"], mlp["b"], mlp["ln_scale"], mlp["ln_bias"],
             graph.bond_center, graph.bond_nbr, graph.bond_offsets,
             pair=graph.bond_pair if bond_store == "undirected" else None,
+            und_features=bond_features == "undirected",
             table_residency=table_residency,
         )
     elif conv_impl == "unfused":
+        e_dir = e[graph.bond_pair] if bond_features == "undirected" else e
         f_v = jnp.concatenate(
-            [v[graph.bond_center], v[graph.bond_nbr], e], axis=-1
+            [v[graph.bond_center], v[graph.bond_nbr], e_dir], axis=-1
         )
         env = e_a[graph.bond_pair] if bond_store == "undirected" else e_a
         msg = gated_mlp_apply(p["atom_mlp"], f_v, mlp_impl) * env
@@ -370,6 +378,90 @@ def angle_update(p, graph: CrystalGraphBatch, v_in, e_in, a, *, mlp_impl):
     return a + upd * graph.angle_mask[..., None].astype(a.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Symmetric half-graph trunk (DESIGN.md §10, bond_features="undirected")
+# ---------------------------------------------------------------------------
+
+def _sym_inputs(graph: CrystalGraphBatch, v_in, e_in, a_u):
+    """Swap-symmetrized f over Au rows: [v_center, e_s, e_s, a_u].
+
+    e_s = e[du1] + e[du2] is invariant under swapping the pair's two
+    bonds, so both directed orientations of a dedup angle produce the
+    SAME feature row — the single GatedMLP evaluation stands in for
+    both.  Param shapes match the directed f = [v, e_ij, e_ik, a]
+    exactly (checkpoint compatible).
+    """
+    ctr = graph.bond_center[graph.und_angle_ij]
+    du1 = graph.bond_pair[graph.und_angle_ij]
+    du2 = graph.bond_pair[graph.und_angle_ik]
+    e_s = e_in[du1] + e_in[du2]
+    f = jnp.concatenate([v_in[ctr], e_s, e_s, a_u], axis=-1)
+    return f, du1, du2
+
+
+def sym_bond_conv(p, graph: CrystalGraphBatch, v_in, e, a_u, e_b, *,
+                  mlp_impl, agg_impl, conv_impl: str = "unfused",
+                  table_residency: str = "auto"):
+    """Symmetrized Eq. 5 over Eu rows (DESIGN.md §10).
+
+    ``e``/``e_b`` live at Eu, ``a_u`` at Au == A/2.  One message per real
+    dedup angle w — phi([v_ctr, e_s, e_s, a_u]) * e^b[du1] * e^b[du2],
+    swap-invariant by construction — scatters into BOTH undirected bonds
+    of the pair through the dest-sorted incidence store
+    (sym_dest/sym_rep/sym_offsets), replacing the A-row directed
+    bond_conv with Au GatedMLP rows + Eu output rows.
+
+    ``conv_impl="fused"`` routes through the two-launch §10 megakernel
+    (Au-tiled message pass + Eu destination-tiled accumulation);
+    unfused composes the impl matrix like ``bond_conv``.
+    """
+    if conv_impl == "fused":
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
+
+        mlp = jax.tree.map(lambda t: t.astype(e.dtype), p["bond_mlp"])
+        ctr = graph.bond_center[graph.und_angle_ij]
+        du1 = graph.bond_pair[graph.und_angle_ij]
+        du2 = graph.bond_pair[graph.und_angle_ik]
+        agg = kops.fused_sym_bond_conv(
+            v_in, e, a_u, e_b, mlp["w"], mlp["b"], mlp["ln_scale"],
+            mlp["ln_bias"], ctr, du1, du2, graph.sym_rep, graph.sym_dest,
+            graph.sym_offsets, table_residency=table_residency,
+        )
+    elif conv_impl == "unfused":
+        f, du1, du2 = _sym_inputs(graph, v_in, e, a_u)
+        msg = gated_mlp_apply(p["bond_mlp"], f, mlp_impl)
+        msg = msg * e_b[du1] * e_b[du2]
+        # position-based incidence validity: padded incidences carry rep=0,
+        # which aliases a REAL Au row, so und_angle_mask[sym_rep] would
+        # leak padded contributions
+        incid_mask = (
+            jnp.arange(graph.angle_cap) < graph.sym_offsets[-1]
+        ).astype(e.dtype)
+        agg = segment_aggregate(
+            msg[graph.sym_rep], graph.sym_dest, graph.und_cap, incid_mask,
+            agg_impl, offsets=graph.sym_offsets,
+            table_residency=table_residency,
+        )
+    else:
+        raise ValueError(f"unknown conv impl {conv_impl!r}")
+    mask = graph.und_mask[..., None].astype(e.dtype)
+    return e + linear_apply(p["bond_out"], agg) * mask
+
+
+def sym_angle_update(p, graph: CrystalGraphBatch, v_in, e_in, a_u, *,
+                     mlp_impl):
+    """Symmetrized Eq. 6 at Au rows (DESIGN.md §10).
+
+    The swap-symmetrized f_a makes both directed orientations of a dedup
+    angle agree, so the single Au-row update stands in for both — the
+    remaining angle-level GEMMs run at Au == A/2.  ``e_in`` is the
+    Eu-resident bond table.
+    """
+    f_a, _, _ = _sym_inputs(graph, v_in, e_in, a_u)
+    upd = gated_mlp_apply(p["angle_mlp"], f_a, mlp_impl)
+    return a_u + upd * graph.und_angle_mask[..., None].astype(a_u.dtype)
+
+
 def interaction_block_apply(
     p,
     graph: CrystalGraphBatch,
@@ -384,34 +476,50 @@ def interaction_block_apply(
     agg_impl: str = "scatter",
     conv_impl: str = "unfused",
     bond_store: str = "directed",
+    bond_features: str = "directed",
     table_residency: str = "auto",
     update_angles: bool = True,
 ):
-    """One interaction block IB^t (paper Eq. 3), either variant."""
+    """One interaction block IB^t (paper Eq. 3), either variant.
+
+    ``bond_features="undirected"`` (DESIGN.md §10) swaps in the
+    symmetric-trunk updates: ``e`` is Eu-resident, ``a`` is Au-resident,
+    and bond_conv/angle_update run their symmetrized forms.
+    """
+    sym = bond_features == "undirected"
     v_new = atom_conv(p, graph, v, e, e_a, mlp_impl=mlp_impl,
                       agg_impl=agg_impl, conv_impl=conv_impl,
-                      bond_store=bond_store, table_residency=table_residency)
-    if variant == "reference":
-        e_new = bond_conv(
-            p, graph, v_new, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
+                      bond_store=bond_store, bond_features=bond_features,
+                      table_residency=table_residency)
+
+    def _bond(v_in):
+        if sym:
+            return sym_bond_conv(
+                p, graph, v_in, e, a, e_b, mlp_impl=mlp_impl,
+                agg_impl=agg_impl, conv_impl=conv_impl,
+                table_residency=table_residency,
+            )
+        return bond_conv(
+            p, graph, v_in, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
             conv_impl=conv_impl, bond_store=bond_store,
             table_residency=table_residency,
         )
-        if update_angles:
-            a_new = angle_update(p, graph, v_new, e_new, a, mlp_impl=mlp_impl)
-        else:
-            a_new = a
+
+    def _angle(v_in, e_in):
+        if not update_angles:
+            return a
+        if sym:
+            return sym_angle_update(p, graph, v_in, e_in, a,
+                                    mlp_impl=mlp_impl)
+        return angle_update(p, graph, v_in, e_in, a, mlp_impl=mlp_impl)
+
+    if variant == "reference":
+        e_new = _bond(v_new)
+        a_new = _angle(v_new, e_new)
     elif variant == "fast":
         # Dependency elimination (Eq. 11): all three read layer-t features.
-        e_new = bond_conv(
-            p, graph, v, e, a, e_b, mlp_impl=mlp_impl, agg_impl=agg_impl,
-            conv_impl=conv_impl, bond_store=bond_store,
-            table_residency=table_residency,
-        )
-        if update_angles:
-            a_new = angle_update(p, graph, v, e, a, mlp_impl=mlp_impl)
-        else:
-            a_new = a
+        e_new = _bond(v)
+        a_new = _angle(v, e)
     else:
         raise ValueError(f"unknown block variant {variant!r}")
     return v_new, e_new, a_new

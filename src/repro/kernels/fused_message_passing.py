@@ -253,7 +253,7 @@ def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
                       v_tile_ref, e_ref, ea_ref, w1_ref, w2_ref, w3_ref,
                       b_ref, lns_ref, lnb_ref, out_ref, *, block_rows: int,
                       chunk: int, d_real: int, gather_tile: int,
-                      mirror: bool):
+                      mirror: bool, und: bool):
     i = pl.program_id(0)
     r0 = i * block_rows
     start = offs_ref[r0]
@@ -268,21 +268,27 @@ def _atom_conv_kernel(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
         v_c = _mm(oh_w, v_tile_ref[...])          # gather v[bond_center]
         (v_n,) = _gather_rows(                    # gather v[bond_nbr]
             nbr_ref[pl.ds(base, chunk), :], (v_full_ref,), gather_tile)
-        e_c = e_ref[pl.ds(base, chunk), :]        # edge-contiguous slice
+        # Mirror-indirected operand class (DESIGN.md §5): with the
+        # undirected store, e^a lives in an Eu-row table and is gathered
+        # through bond_pair — the directed (E, D) expansion never exists
+        # in HBM or VMEM.  With the symmetric trunk (``und``, DESIGN.md
+        # §10) ``e`` joins it: both tables share ONE window walk.
+        if mirror and und:
+            e_c, ea_c = _gather_rows(
+                pair_ref[pl.ds(base, chunk), :], (e_ref, ea_ref),
+                gather_tile)
+        else:
+            e_c = e_ref[pl.ds(base, chunk), :]    # edge-contiguous slice
+            if mirror:
+                (ea_c,) = _gather_rows(
+                    pair_ref[pl.ds(base, chunk), :], (ea_ref,), gather_tile)
+            else:
+                ea_c = ea_ref[pl.ds(base, chunk), :].astype(jnp.float32)
         # split concat-GEMM: [v_c ‖ v_n ‖ e] @ [Wc ‖ Wg] without the concat
         y = _mm(v_c, w1_ref[...]) + _mm(v_n, w2_ref[...]) \
             + _mm(e_c, w3_ref[...]) + b_ref[...].astype(jnp.float32)
         msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
-        # envelope e^a_ij applied in-register at f32 (accum rule, §4).
-        # Mirror-indirected operand class (DESIGN.md §5): with the
-        # undirected store, e^a lives in an Eu-row table and is gathered
-        # through bond_pair — the directed (E, D) expansion never exists
-        # in HBM or VMEM.
-        if mirror:
-            (ea_c,) = _gather_rows(
-                pair_ref[pl.ds(base, chunk), :], (ea_ref,), gather_tile)
-        else:
-            ea_c = ea_ref[pl.ds(base, chunk), :].astype(jnp.float32)
+        # envelope e^a_ij applied in-register at f32 (accum rule, §4)
         msg = msg * ea_c
         out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
         return carry
@@ -294,19 +300,26 @@ def _atom_conv_kernel_hbm(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
                           v_tile_ref, e_ref, ea_ref, w1_ref, w2_ref, w3_ref,
                           b_ref, lns_ref, lnb_ref, out_ref, *scratch,
                           block_rows: int, chunk: int, d_real: int,
-                          gather_tile: int, mirror: bool):
+                          gather_tile: int, mirror: bool, und: bool):
     """HBM-residency atom_conv (DESIGN.md §9): same math as
     ``_atom_conv_kernel`` but every large operand lives in HBM and streams
     through ping/pong scratch — edge payloads (seg/nbr/pair ids, ``e``,
     directed ``e_a``) in chunk slices, the ``v`` table (and the Eu-row
-    ``e_a`` mirror table) in gather_tile windows."""
+    ``e_a`` — plus ``e`` under ``und`` — mirror tables) in gather_tile
+    windows."""
     i = pl.program_id(0)
     r0 = i * block_rows
     start = offs_ref[r0]
     end = offs_ref[r0 + block_rows]
     out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
     hp = b_ref.shape[-1] // 2
-    if mirror:
+    if mirror and und:
+        (seg_scr, nbr_scr, pair_scr, v_gscr, e_gscr, ea_gscr,
+         seg_sem, nbr_sem, pair_sem, v_gsem, e_gsem, ea_gsem) = scratch
+        edge_streams = ((seg_ref, seg_scr, seg_sem),
+                        (nbr_ref, nbr_scr, nbr_sem),
+                        (pair_ref, pair_scr, pair_sem))
+    elif mirror:
         (seg_scr, nbr_scr, pair_scr, e_scr, v_gscr, ea_gscr,
          seg_sem, nbr_sem, pair_sem, e_sem, v_gsem, ea_gsem) = scratch
         edge_streams = ((seg_ref, seg_scr, seg_sem),
@@ -328,15 +341,22 @@ def _atom_conv_kernel_hbm(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
         v_c = _mm(oh_w, v_tile_ref[...])          # gather v[bond_center]
         ((v_n,),) = _gather_rows_hbm(             # gather v[bond_nbr]
             (nbr_scr[slot],), ((v_full_ref, v_gscr, v_gsem),), gather_tile)
-        e_c = e_scr[slot]
+        if mirror and und:
+            # §10: Eu-resident e and e^a share one streamed window walk
+            ((e_c, ea_c),) = _gather_rows_hbm(
+                (pair_scr[slot],),
+                ((e_ref, e_gscr, e_gsem), (ea_ref, ea_gscr, ea_gsem)),
+                gather_tile)
+        else:
+            e_c = e_scr[slot]
         y = _mm(v_c, w1_ref[...]) + _mm(v_n, w2_ref[...]) \
             + _mm(e_c, w3_ref[...]) + b_ref[...].astype(jnp.float32)
         msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
-        if mirror:
+        if mirror and not und:
             ((ea_c,),) = _gather_rows_hbm(
                 (pair_scr[slot],), ((ea_ref, ea_gscr, ea_gsem),),
                 gather_tile)
-        else:
+        elif not mirror:
             ea_c = ea_scr[slot].astype(jnp.float32)
         msg = msg * ea_c
         out_ref[...] += _mm_t(oh_w, msg).astype(out_ref.dtype)
@@ -347,7 +367,7 @@ def _atom_conv_kernel_hbm(offs_ref, seg_ref, nbr_ref, pair_ref, v_full_ref,
 
 def fused_atom_conv_pallas(
     v: jnp.ndarray,        # (A, DP) f32, A % block_rows == 0, DP % 128 == 0
-    e: jnp.ndarray,        # (E, DP) f32, E % chunk == 0
+    e: jnp.ndarray,        # (E, DP) f32 — or (EU, DP) table (und)
     e_a: jnp.ndarray,      # (E, HP) envelope — or (EU, HP) table (mirror)
     seg: jnp.ndarray,      # (E, 1) int32 bond_center, sorted over real prefix
     nbr: jnp.ndarray,      # (E, 1) int32 bond_nbr
@@ -362,21 +382,28 @@ def fused_atom_conv_pallas(
     chunk: int = 256,
     gather_tile: int = 256,
     mirror: bool = False,
+    und: bool = False,
     residency: str = "vmem",
     interpret: bool = True,
 ) -> jnp.ndarray:
     a_rows, dp = v.shape
-    e_rows = e.shape[0]
+    n_edges = seg.shape[0]     # directed bond rows driving the chunk walk
+    e_rows = e.shape[0]        # == n_edges, or the Eu table rows under und
     ea_rows = e_a.shape[0]
     hp2 = b.shape[-1]
     hbm = _check_residency(residency)
-    assert e_rows % chunk == 0, (e_rows, chunk)
+    assert n_edges % chunk == 0, (n_edges, chunk)
     assert a_rows % block_rows == 0, (a_rows, block_rows)
     assert a_rows % gather_tile == 0, (a_rows, gather_tile)
+    if und:  # §10: e is an Eu-row table gathered through bond_pair
+        assert mirror, "und requires the mirror operand class"
+        assert e_rows % gather_tile == 0, (e_rows, gather_tile)
+    else:
+        assert e_rows == n_edges, (e_rows, n_edges)
     if mirror:  # the e^a table is walked in gather_tile windows
         assert ea_rows % gather_tile == 0, (ea_rows, gather_tile)
     else:
-        assert ea_rows == e_rows, (ea_rows, e_rows)
+        assert ea_rows == n_edges, (ea_rows, n_edges)
     grid = (a_rows // block_rows,)
     if hbm:
         # streamed operands stay in HBM; only the destination tile, the
@@ -387,7 +414,16 @@ def fused_atom_conv_pallas(
             _any_spec(), _any_spec(),
         ]
         hp = hp2 // 2
-        if mirror:
+        if mirror and und:
+            scratch_shapes = [
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # seg
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # nbr
+                pltpu.VMEM((2, chunk, 1), jnp.int32),       # pair
+                pltpu.VMEM((2, gather_tile, dp), v.dtype),  # v windows
+                pltpu.VMEM((2, gather_tile, dp), e.dtype),  # e windows
+                pltpu.VMEM((2, gather_tile, hp), e_a.dtype),  # e^a windows
+            ] + [pltpu.SemaphoreType.DMA((2,))] * 6
+        elif mirror:
             scratch_shapes = [
                 pltpu.VMEM((2, chunk, 1), jnp.int32),       # seg
                 pltpu.VMEM((2, chunk, 1), jnp.int32),       # nbr
@@ -406,12 +442,12 @@ def fused_atom_conv_pallas(
             ] + [pltpu.SemaphoreType.DMA((2,))] * 5
         kernel = functools.partial(
             _atom_conv_kernel_hbm, block_rows=block_rows, chunk=chunk,
-            d_real=d_real, gather_tile=gather_tile, mirror=mirror)
+            d_real=d_real, gather_tile=gather_tile, mirror=mirror, und=und)
     else:
         table_specs = [
-            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
-            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
-            pl.BlockSpec((e_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((n_edges, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((n_edges, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((n_edges, 1), lambda i, offs: (0, 0)),
             pl.BlockSpec((a_rows, dp), lambda i, offs: (0, 0)),
             pl.BlockSpec((block_rows, dp), lambda i, offs: (i, 0)),
             pl.BlockSpec((e_rows, dp), lambda i, offs: (0, 0)),
@@ -420,7 +456,7 @@ def fused_atom_conv_pallas(
         scratch_shapes = []
         kernel = functools.partial(
             _atom_conv_kernel, block_rows=block_rows, chunk=chunk,
-            d_real=d_real, gather_tile=gather_tile, mirror=mirror)
+            d_real=d_real, gather_tile=gather_tile, mirror=mirror, und=und)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -948,3 +984,233 @@ def fused_force_readout_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# symmetric-trunk bond_conv megakernel pair (DESIGN.md §10):
+#   phase A — one gated-MLP message per dedup angle (Au rows)
+#   phase B — destination-tiled accumulation into Eu bond rows through the
+#             sym-incidence store (each real Au message lands on BOTH
+#             undirected bonds of its pair)
+# Splitting at the Au->Eu scatter is what realizes the FLOP halving: a
+# single destination-tiled kernel would recompute phi once per incidence
+# (twice per angle), giving back most of the savings.  The (Au, HP) f32
+# message buffer between the launches is the price — half the size of the
+# directed angle table it replaces.
+# ---------------------------------------------------------------------------
+
+def _sym_msg_kernel(ctr_ref, du1_ref, du2_ref, v_ref, e_ref, eb_ref, a_ref,
+                    w1_ref, w23_ref, w4_ref, b_ref, lns_ref, lnb_ref,
+                    out_ref, *, d_real: int, gather_tile: int):
+    """Phase A: msg[w] = phi([v[ctr], e_s, e_s, a_u]) * e_b[du1] * e_b[du2]
+    with e_s = e[du1] + e[du2].  The swap-symmetric e_s feeds both e slots
+    of the directed bond MLP, so the w2/w3 GEMMs collapse into one GEMM
+    against the precombined w23 = w2 + w3.  Padded Au rows produce finite
+    garbage that phase B's CSR ownership never references."""
+    hp = b_ref.shape[-1] // 2
+    (v_c,) = _gather_rows(ctr_ref[...], (v_ref,), gather_tile)
+    e1, eb1 = _gather_rows(du1_ref[...], (e_ref, eb_ref), gather_tile)
+    e2, eb2 = _gather_rows(du2_ref[...], (e_ref, eb_ref), gather_tile)
+    a_c = a_ref[...]
+    y = _mm(v_c, w1_ref[...]) + _mm(e1 + e2, w23_ref[...]) \
+        + _mm(a_c, w4_ref[...]) + b_ref[...].astype(jnp.float32)
+    msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
+    out_ref[...] = (msg * eb1 * eb2).astype(out_ref.dtype)
+
+
+def _sym_msg_kernel_hbm(ctr_ref, du1_ref, du2_ref, v_ref, e_ref, eb_ref,
+                        a_ref, w1_ref, w23_ref, w4_ref, b_ref, lns_ref,
+                        lnb_ref, out_ref, v_gscr, e_gscr, eb_gscr, v_gsem,
+                        e_gsem, eb_gsem, *, d_real: int, gather_tile: int):
+    """HBM-residency phase A: the v/e/e^b tables stay in HBM and stream in
+    gather_tile windows; both du gathers share one walk of (e, e^b).  The
+    Au-blocked ids and a_u remain VMEM block operands."""
+    hp = b_ref.shape[-1] // 2
+    ((v_c,),) = _gather_rows_hbm(
+        (ctr_ref[...],), ((v_ref, v_gscr, v_gsem),), gather_tile)
+    ((e1, eb1), (e2, eb2)) = _gather_rows_hbm(
+        (du1_ref[...], du2_ref[...]),
+        ((e_ref, e_gscr, e_gsem), (eb_ref, eb_gscr, eb_gsem)), gather_tile)
+    a_c = a_ref[...]
+    y = _mm(v_c, w1_ref[...]) + _mm(e1 + e2, w23_ref[...]) \
+        + _mm(a_c, w4_ref[...]) + b_ref[...].astype(jnp.float32)
+    msg = _gated_epilogue(y, lns_ref, lnb_ref, hp, d_real)
+    out_ref[...] = (msg * eb1 * eb2).astype(out_ref.dtype)
+
+
+def fused_sym_msg_pallas(
+    v: jnp.ndarray,        # (A, DP) f32 atom features
+    e: jnp.ndarray,        # (EU, DP) f32 undirected bond table
+    a_u: jnp.ndarray,      # (UA, DP) f32 dedup angle features
+    e_b: jnp.ndarray,      # (EU, HP) undirected bond envelope table
+    ctr: jnp.ndarray,      # (UA, 1) int32 bond_center[und_angle_ij]
+    du1: jnp.ndarray,      # (UA, 1) int32 bond_pair[und_angle_ij]
+    du2: jnp.ndarray,      # (UA, 1) int32 bond_pair[und_angle_ik]
+    w1: jnp.ndarray, w23: jnp.ndarray, w4: jnp.ndarray,  # (DP, 2*HP) each
+    b: jnp.ndarray,        # (1, 2*HP)
+    ln_scale: jnp.ndarray, ln_bias: jnp.ndarray,         # (1, 2*HP)
+    *,
+    d_real: int,
+    msg_block: int = 256,
+    gather_tile: int = 256,
+    residency: str = "vmem",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    a_rows, dp = v.shape
+    eu_rows = e.shape[0]
+    ua_rows = a_u.shape[0]
+    hp2 = b.shape[-1]
+    hp = hp2 // 2
+    hbm = _check_residency(residency)
+    assert ua_rows % msg_block == 0, (ua_rows, msg_block)
+    assert a_rows % gather_tile == 0, (a_rows, gather_tile)
+    assert eu_rows % gather_tile == 0, (eu_rows, gather_tile)
+    assert e_b.shape[0] == eu_rows, (e_b.shape, eu_rows)
+    grid = (ua_rows // msg_block,)
+    id_spec = pl.BlockSpec((msg_block, 1), lambda i: (i, 0))
+    if hbm:
+        table_specs = [_any_spec(), _any_spec(), _any_spec()]
+        scratch_shapes = [
+            pltpu.VMEM((2, gather_tile, dp), v.dtype),    # v windows
+            pltpu.VMEM((2, gather_tile, dp), e.dtype),    # e windows
+            pltpu.VMEM((2, gather_tile, hp), e_b.dtype),  # e^b windows
+        ] + [pltpu.SemaphoreType.DMA((2,))] * 3
+        kernel = functools.partial(_sym_msg_kernel_hbm, d_real=d_real,
+                                   gather_tile=gather_tile)
+    else:
+        table_specs = [
+            pl.BlockSpec((a_rows, dp), lambda i: (0, 0)),
+            pl.BlockSpec((eu_rows, dp), lambda i: (0, 0)),
+            pl.BlockSpec((eu_rows, hp), lambda i: (0, 0)),
+        ]
+        scratch_shapes = []
+        kernel = functools.partial(_sym_msg_kernel, d_real=d_real,
+                                   gather_tile=gather_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=grid,
+        in_specs=[id_spec, id_spec, id_spec] + table_specs + [
+            pl.BlockSpec((msg_block, dp), lambda i: (i, 0)),  # a_u blocks
+            pl.BlockSpec((dp, hp2), lambda i: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i: (0, 0)),
+            pl.BlockSpec((dp, hp2), lambda i: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i: (0, 0)),
+            pl.BlockSpec((1, hp2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((msg_block, hp), lambda i: (i, 0)),
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ua_rows, hp), jnp.float32),
+        interpret=interpret,
+    )(ctr, du1, du2, v, e, e_b, a_u, w1, w23, w4, b, ln_scale, ln_bias)
+
+
+def _sym_accum_kernel(offs_ref, dest_ref, rep_ref, msg_ref, out_ref, *,
+                      block_rows: int, chunk: int, gather_tile: int):
+    """Phase B: agg[u] = sum over this block's CSR incidence range of
+    msg[rep] — the same destination-tiled window-one-hot walk as every
+    other aggregation kernel, with the message rows gathered through the
+    duplicate-pointer ``rep`` map."""
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    def body(k, carry):
+        base = k * chunk
+        dest = dest_ref[pl.ds(base, chunk), :]
+        oh_w = _window_onehot(dest, r0, start, end, base, chunk, block_rows)
+        (m_c,) = _gather_rows(
+            rep_ref[pl.ds(base, chunk), :], (msg_ref,), gather_tile)
+        out_ref[...] += _mm_t(oh_w, m_c).astype(out_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(start // chunk, pl.cdiv(end, chunk), body, 0)
+
+
+def _sym_accum_kernel_hbm(offs_ref, dest_ref, rep_ref, msg_ref, out_ref,
+                          dest_scr, rep_scr, m_gscr, dest_sem, rep_sem,
+                          m_gsem, *, block_rows: int, chunk: int,
+                          gather_tile: int):
+    """HBM-residency phase B: dest/rep ids stream in chunk slices; the
+    (Au, HP) message buffer stays in HBM and is walked in gather_tile
+    windows."""
+    i = pl.program_id(0)
+    r0 = i * block_rows
+    start = offs_ref[r0]
+    end = offs_ref[r0 + block_rows]
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    edge_streams = ((dest_ref, dest_scr, dest_sem),
+                    (rep_ref, rep_scr, rep_sem))
+
+    def body(k, slot):
+        dest = dest_scr[slot]
+        oh_w = _window_onehot(dest, r0, start, end, k * chunk, chunk,
+                              block_rows)
+        ((m_c,),) = _gather_rows_hbm(
+            (rep_scr[slot],), ((msg_ref, m_gscr, m_gsem),), gather_tile)
+        out_ref[...] += _mm_t(oh_w, m_c).astype(out_ref.dtype)
+
+    _stream_loop(start // chunk, pl.cdiv(end, chunk), chunk, edge_streams,
+                 body)
+
+
+def fused_sym_accum_pallas(
+    msg: jnp.ndarray,      # (UA, HP) f32 phase-A messages
+    dest: jnp.ndarray,     # (IC, 1) int32 sym_dest, sorted over real prefix
+    rep: jnp.ndarray,      # (IC, 1) int32 sym_rep
+    offsets: jnp.ndarray,  # (EU + 1,) int32 CSR incidence row pointers
+    *,
+    eu_rows: int,
+    block_rows: int = 8,
+    chunk: int = 256,
+    gather_tile: int = 256,
+    residency: str = "vmem",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    ua_rows, hp = msg.shape
+    ic_rows = dest.shape[0]
+    hbm = _check_residency(residency)
+    assert ic_rows % chunk == 0, (ic_rows, chunk)
+    assert eu_rows % block_rows == 0, (eu_rows, block_rows)
+    assert ua_rows % gather_tile == 0, (ua_rows, gather_tile)
+    assert offsets.shape[0] == eu_rows + 1, (offsets.shape, eu_rows)
+    grid = (eu_rows // block_rows,)
+    if hbm:
+        in_specs = [_any_spec(), _any_spec(), _any_spec()]
+        scratch_shapes = [
+            pltpu.VMEM((2, chunk, 1), jnp.int32),         # dest
+            pltpu.VMEM((2, chunk, 1), jnp.int32),         # rep
+            pltpu.VMEM((2, gather_tile, hp), msg.dtype),  # msg windows
+        ] + [pltpu.SemaphoreType.DMA((2,))] * 3
+        kernel = functools.partial(
+            _sym_accum_kernel_hbm, block_rows=block_rows, chunk=chunk,
+            gather_tile=gather_tile)
+    else:
+        in_specs = [
+            pl.BlockSpec((ic_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((ic_rows, 1), lambda i, offs: (0, 0)),
+            pl.BlockSpec((ua_rows, hp), lambda i, offs: (0, 0)),
+        ]
+        scratch_shapes = []
+        kernel = functools.partial(
+            _sym_accum_kernel, block_rows=block_rows, chunk=chunk,
+            gather_tile=gather_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, hp), lambda i, offs: (i, 0)),
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((eu_rows, hp), jnp.float32),
+        interpret=interpret,
+    )(offsets, dest, rep, msg)

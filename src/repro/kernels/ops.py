@@ -38,6 +38,8 @@ from .fused_message_passing import (
     fused_atom_conv_pallas,
     fused_bond_conv_pallas,
     fused_force_readout_pallas,
+    fused_sym_accum_pallas,
+    fused_sym_msg_pallas,
 )
 from .fused_rbf import fused_rbf_pallas
 from .fused_segment_sum import fused_segment_sum_pallas
@@ -476,12 +478,13 @@ def _pad_offsets(offsets, num_rows_padded):
     return jnp.pad(offsets.astype(jnp.int32), (0, pad), mode="edge")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(11, 12, 13, 14, 15))
 def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                      bond_center, bond_nbr, offsets, pair,
-                     block_rows, chunk, gather_tile, residency):
+                     und, block_rows, chunk, gather_tile, residency):
     a_rows, dim = v.shape
-    e_rows, de = e.shape
+    de = e.shape[1]
+    n_edges = bond_center.shape[0]  # directed bond rows (chunk walk)
     d = w.shape[1] // 2
     # the wrapper splits w rows as [v_center | v_nbr | e] — fail loudly if
     # the caller's operand widths disagree with that partition
@@ -491,8 +494,16 @@ def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
     # atoms are both the output rows (block_rows tiles) and the in-kernel
     # nbr-gather table (gather_tile windows): pad to a common multiple
     ap = _round_up(a_rows, math.lcm(block_rows, gather_tile))
-    ep = _round_up(e_rows, chunk)
+    ep = _round_up(n_edges, chunk)
     mirror = pair is not None
+    assert mirror or not und, "und requires the pair mirror map"
+    if und:
+        # symmetric trunk (DESIGN.md §10): e itself is an Eu-row table
+        # gathered in-kernel through bond_pair, like the e_a envelope
+        e_p = _pad2(e, _round_up(e.shape[0], gather_tile), dp)
+    else:
+        assert e.shape[0] == n_edges, (e.shape, n_edges)
+        e_p = _pad2(e, ep, dp)
     if mirror:
         # undirected store (DESIGN.md §5): e_a is an Eu-row table gathered
         # in-kernel through bond_pair — pad its rows to gather_tile windows
@@ -506,10 +517,10 @@ def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
     residency = _resolve_residency(
         residency,
         3 * ep * 4 + ap * dp * _itemsize(v.dtype)
-        + ep * dp * _itemsize(e.dtype)
+        + e_p.shape[0] * dp * _itemsize(e.dtype)
         + ea_p.shape[0] * hp * _itemsize(e_a.dtype))
     out = fused_atom_conv_pallas(
-        _pad2(v, ap, dp), _pad2(e, ep, dp), ea_p,
+        _pad2(v, ap, dp), e_p, ea_p,
         _pad_ids(bond_center, ep), _pad_ids(bond_nbr, ep), pair_ids,
         _pad_offsets(offsets, ap),
         _pack_lanes_w(w[:dim], dp, d, hp),
@@ -518,24 +529,25 @@ def _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
         _pack_lanes_vec(b, d, hp),
         _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
         d_real=d, block_rows=block_rows, chunk=chunk,
-        gather_tile=gather_tile, mirror=mirror, residency=residency,
-        interpret=_interpret(),
+        gather_tile=gather_tile, mirror=mirror, und=und,
+        residency=residency, interpret=_interpret(),
     )
     return out[:a_rows, :d].astype(v.dtype)
 
 
 def _fused_atom_conv_fwd(v, e, e_a, w, b, ln_scale, ln_bias,
                          bond_center, bond_nbr, offsets, pair,
-                         block_rows, chunk, gather_tile, residency):
+                         und, block_rows, chunk, gather_tile, residency):
     out = _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                            bond_center, bond_nbr, offsets, pair,
-                           block_rows, chunk, gather_tile, residency)
+                           und, block_rows, chunk, gather_tile, residency)
     # operands only — messages are rematerialized in the backward
     return out, (v, e, e_a, w, b, ln_scale, ln_bias,
                  bond_center, bond_nbr, offsets, pair)
 
 
-def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, residency, res, g):
+def _fused_atom_conv_bwd(und, block_rows, chunk, gather_tile, residency,
+                         res, g):
     """Tile-wise recompute backward: a fori_loop over edge chunks, each
     iteration re-deriving its (chunk, D) messages with a chunk-local
     jax.vjp — no full-edge concat/message tensor exists here either.
@@ -550,17 +562,20 @@ def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, residency, res, g):
     explicit DMA, with the Eu-table accumulation as the write stream."""
     (v, e, e_a, w, b, ln_scale, ln_bias, bond_center, bond_nbr, offsets,
      pair) = res
-    e_rows = e.shape[0]
-    ep = _round_up(e_rows, chunk)
+    n_edges = bond_center.shape[0]
+    ep = _round_up(n_edges, chunk)
     seg_p = _pad_rows_i32(bond_center, ep)
     nbr_p = _pad_rows_i32(bond_nbr, ep)
-    e_p = _pad_rows_f32(e, ep)
     f32 = lambda x: x.astype(jnp.float32)
     v32, w32, b32 = f32(v), f32(w), f32(b)
     lns32, lnb32 = f32(ln_scale), f32(ln_bias)
     g32 = f32(g)
     n_real = offsets[-1].astype(jnp.int32)
     mirror = pair is not None
+    if und:
+        e_full = f32(e)     # (Eu, D) table — cotangents accumulate whole
+    else:
+        e_p = _pad_rows_f32(e, ep)
     if mirror:
         ea_full = f32(e_a)  # (Eu, D) table — cotangents accumulate whole
         pair_p = _pad_rows_i32(pair, ep)
@@ -575,31 +590,42 @@ def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, residency, res, g):
         if mirror:
             pair_c = _chunk_of(pair_p, i0, chunk)
 
+        if und:
+            def msgs(vv, e_t, ea_t, ww, bb, ss, oo):
+                x = jnp.concatenate([vv[seg_c], vv[nbr_c], e_t[pair_c]],
+                                    axis=-1)
+                return ref.gated_mlp_packed_ref(x, ww, bb, ss, oo) \
+                    * ea_t[pair_c]
+
+            e_arg, ea_arg = e_full, ea_full
+        elif mirror:
             def msgs(vv, ec, ea_t, ww, bb, ss, oo):
                 x = jnp.concatenate([vv[seg_c], vv[nbr_c], ec], axis=-1)
                 return ref.gated_mlp_packed_ref(x, ww, bb, ss, oo) \
                     * ea_t[pair_c]
 
-            ea_arg = ea_full
+            e_arg, ea_arg = _chunk_of(e_p, i0, chunk), ea_full
         else:
             def msgs(vv, ec, eac, ww, bb, ss, oo):
                 x = jnp.concatenate([vv[seg_c], vv[nbr_c], ec], axis=-1)
                 return ref.gated_mlp_packed_ref(x, ww, bb, ss, oo) * eac
 
-            ea_arg = _chunk_of(ea_p, i0, chunk)
+            e_arg, ea_arg = _chunk_of(e_p, i0, chunk), \
+                _chunk_of(ea_p, i0, chunk)
 
-        _, vjp = jax.vjp(msgs, v32, _chunk_of(e_p, i0, chunk),
-                         ea_arg, w32, b32, lns32, lnb32)
+        _, vjp = jax.vjp(msgs, v32, e_arg, ea_arg, w32, b32, lns32, lnb32)
         valid = (i0 + jnp.arange(chunk)) < n_real
         gm = jnp.where(valid[:, None], g32[seg_c], 0.0)
         dvc, dec, deac, dwc, dbc, dlsc, dlbc = vjp(gm)
         dea = dea + deac if mirror else \
             jax.lax.dynamic_update_slice(dea, deac, (i0, 0))
-        return (dv + dvc,
-                jax.lax.dynamic_update_slice(dep_, dec, (i0, 0)),
+        dep_ = dep_ + dec if und else \
+            jax.lax.dynamic_update_slice(dep_, dec, (i0, 0))
+        return (dv + dvc, dep_,
                 dea, dw + dwc, db + dbc, dls + dlsc, dlb + dlbc)
 
-    init = (jnp.zeros_like(v32), jnp.zeros_like(e_p),
+    init = (jnp.zeros_like(v32),
+            jnp.zeros_like(e_full) if und else jnp.zeros_like(e_p),
             jnp.zeros_like(ea_full) if mirror else jnp.zeros_like(ea_p),
             jnp.zeros_like(w32), jnp.zeros_like(b32),
             jnp.zeros_like(lns32), jnp.zeros_like(lnb32))
@@ -610,9 +636,10 @@ def _fused_atom_conv_bwd(block_rows, chunk, gather_tile, residency, res, g):
     dv, dep_, dea, dw, db, dls, dlb = jax.lax.fori_loop(
         0, ep // chunk, body, init)
     dea = dea.astype(e_a.dtype) if mirror \
-        else dea[:e_rows].astype(e_a.dtype)
+        else dea[:e.shape[0]].astype(e_a.dtype)
+    de = dep_.astype(e.dtype) if und else dep_[:e.shape[0]].astype(e.dtype)
     f0 = jax.dtypes.float0
-    return (dv.astype(v.dtype), dep_[:e_rows].astype(e.dtype),
+    return (dv.astype(v.dtype), de,
             dea, dw.astype(w.dtype),
             db.astype(b.dtype), dls.astype(ln_scale.dtype),
             dlb.astype(ln_bias.dtype),
@@ -626,7 +653,8 @@ _fused_atom_conv.defvjp(_fused_atom_conv_fwd, _fused_atom_conv_bwd)
 
 def fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                     bond_center, bond_nbr, bond_offsets,
-                    *, pair=None, block_rows: int = 8, chunk: int = 256,
+                    *, pair=None, und_features: bool = False,
+                    block_rows: int = 8, chunk: int = 256,
                     gather_tile: int = 256, table_residency: str = "auto"):
     # block_rows=8: ~tens of bonds per atom, so 8 rows ~ one edge chunk
     """Fused Eq. 4 message path: sum_j e^a_ij * phi(v_i, v_j, e_ij) -> (A, D).
@@ -641,13 +669,19 @@ def fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
     gathers it per edge chunk in-register (mirror-indirected operand
     class) — the directed (E, D) expansion never exists in HBM.
 
+    ``und_features`` (DESIGN.md §10): symmetric trunk — ``e`` is itself
+    the (Eu, D) undirected bond table and gathers in-kernel through
+    ``pair`` alongside ``e_a`` (requires ``pair``); the directed (E, D)
+    expansion of the bond features never exists in HBM.
+
     ``table_residency`` (DESIGN.md §9): "vmem" keeps v/e/e^a whole-array
     resident; "hbm" leaves them in HBM and streams double-buffered DMA
     chunks/windows; "auto" picks by operand-table bytes vs the budget.
     """
     return _fused_atom_conv(v, e, e_a, w, b, ln_scale, ln_bias,
                             bond_center, bond_nbr, bond_offsets, pair,
-                            block_rows, chunk, gather_tile, table_residency)
+                            und_features, block_rows, chunk, gather_tile,
+                            table_residency)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(13, 14, 15, 16))
@@ -807,6 +841,165 @@ def fused_bond_conv(v, e, a, e_b, w, b, ln_scale, ln_bias,
                             angle_ij, angle_ik, center_ids, angle_offsets,
                             pair, block_rows, chunk, gather_tile,
                             table_residency)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(14, 15, 16, 17, 18))
+def _fused_sym_bond_conv(v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+                         ctr, du1, du2, rep, dest, offsets,
+                         msg_block, block_rows, chunk, gather_tile,
+                         residency):
+    a_rows, dim = v.shape
+    eu_rows = e.shape[0]
+    ua_rows = a_u.shape[0]
+    d = w.shape[1] // 2
+    # the wrapper splits w rows into four equal dim-wide blocks
+    # [v_c | e_ij | e_ik | a]; both e slots read the swap-symmetric e_s,
+    # so w2 and w3 precombine into one GEMM block (DESIGN.md §10)
+    assert e.shape[1] == dim and a_u.shape[1] == dim, \
+        (v.shape, e.shape, a_u.shape)
+    assert w.shape[0] == 4 * dim, (w.shape, dim)
+    assert e_b.shape[0] == eu_rows, (e_b.shape, eu_rows)
+    dp = _round_up(dim, _LANE)
+    hp = _round_up(d, _LANE)
+    ap = _round_up(a_rows, gather_tile)
+    # Eu bonds are phase-B output rows AND a phase-A gather table; dedup
+    # angles are phase-A output rows AND the phase-B msg-gather table
+    eup = _round_up(eu_rows, math.lcm(block_rows, gather_tile))
+    uap = _round_up(ua_rows, math.lcm(msg_block, gather_tile))
+    icp = _round_up(dest.shape[0], chunk)
+    # residency resolves per phase: A holds the v/e/e^b gather tables, B
+    # the incidence ids plus the f32 message buffer
+    res_a = _resolve_residency(
+        residency,
+        ap * dp * _itemsize(v.dtype) + eup * dp * _itemsize(e.dtype)
+        + eup * hp * _itemsize(e_b.dtype))
+    res_b = _resolve_residency(residency, 2 * icp * 4 + uap * hp * 4)
+    msg = fused_sym_msg_pallas(
+        _pad2(v, ap, dp), _pad2(e, eup, dp), _pad2(a_u, uap, dp),
+        _pad2(e_b, eup, hp),
+        _pad_ids(ctr, uap), _pad_ids(du1, uap), _pad_ids(du2, uap),
+        _pack_lanes_w(w[:dim], dp, d, hp),
+        _pack_lanes_w(w[dim:2 * dim] + w[2 * dim:3 * dim], dp, d, hp),
+        _pack_lanes_w(w[3 * dim:], dp, d, hp),
+        _pack_lanes_vec(b, d, hp),
+        _pack_lanes_vec(ln_scale, d, hp), _pack_lanes_vec(ln_bias, d, hp),
+        d_real=d, msg_block=msg_block, gather_tile=gather_tile,
+        residency=res_a, interpret=_interpret(),
+    )
+    agg = fused_sym_accum_pallas(
+        msg, _pad_ids(dest, icp), _pad_ids(rep, icp),
+        _pad_offsets(offsets, eup), eu_rows=eup, block_rows=block_rows,
+        chunk=chunk, gather_tile=gather_tile, residency=res_b,
+        interpret=_interpret(),
+    )
+    return agg[:eu_rows, :d].astype(e.dtype)
+
+
+def _fused_sym_bond_conv_fwd(v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+                             ctr, du1, du2, rep, dest, offsets,
+                             msg_block, block_rows, chunk, gather_tile,
+                             residency):
+    out = _fused_sym_bond_conv(v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+                               ctr, du1, du2, rep, dest, offsets,
+                               msg_block, block_rows, chunk, gather_tile,
+                               residency)
+    return out, (v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+                 ctr, du1, du2, rep, dest, offsets)
+
+
+def _fused_sym_bond_conv_bwd(msg_block, block_rows, chunk, gather_tile,
+                             residency, res, g):
+    """Tile-wise recompute backward over dedup-angle chunks (see
+    atom_conv).  The incidence store is not walked here: each real Au row
+    lands on exactly its two pair destinations, so the message cotangent
+    is gm = g[du1] + g[du2] directly (self-image rows du1 == du2 read 2g,
+    which is exactly their forward double-count)."""
+    (v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+     ctr, du1, du2, rep, dest, offsets) = res
+    ua_rows = a_u.shape[0]
+    uap = _round_up(ua_rows, chunk)
+    ctr_p = _pad_rows_i32(ctr, uap)
+    du1_p = _pad_rows_i32(du1, uap)
+    du2_p = _pad_rows_i32(du2, uap)
+    a_p = _pad_rows_f32(a_u, uap)
+    f32 = lambda x: x.astype(jnp.float32)
+    v32, e32, eb32, w32, b32 = f32(v), f32(e), f32(e_b), f32(w), f32(b)
+    lns32, lnb32 = f32(ln_scale), f32(ln_bias)
+    g32 = f32(g)
+    # each real dedup angle owns exactly TWO incidences (DESIGN.md §10)
+    n_real = (offsets[-1] // 2).astype(jnp.int32)
+
+    def body(k, carry):
+        dv, de, dap, deb, dw, db, dls, dlb = carry
+        i0 = k * chunk
+        ctr_c = _chunk_of(ctr_p, i0, chunk)
+        du1_c = _chunk_of(du1_p, i0, chunk)
+        du2_c = _chunk_of(du2_p, i0, chunk)
+
+        def msgs(vv, ee, ac, eb, ww, bb, ss, oo):
+            es = ee[du1_c] + ee[du2_c]
+            x = jnp.concatenate([vv[ctr_c], es, es, ac], axis=-1)
+            phi = ref.gated_mlp_packed_ref(x, ww, bb, ss, oo)
+            return phi * eb[du1_c] * eb[du2_c]
+
+        _, vjp = jax.vjp(msgs, v32, e32, _chunk_of(a_p, i0, chunk), eb32,
+                         w32, b32, lns32, lnb32)
+        valid = (i0 + jnp.arange(chunk)) < n_real
+        gm = jnp.where(valid[:, None], g32[du1_c] + g32[du2_c], 0.0)
+        dvc, dec, dac, debc, dwc, dbc, dlsc, dlbc = vjp(gm)
+        return (dv + dvc, de + dec,
+                jax.lax.dynamic_update_slice(dap, dac, (i0, 0)),
+                deb + debc, dw + dwc, db + dbc, dls + dlsc, dlb + dlbc)
+
+    init = (jnp.zeros_like(v32), jnp.zeros_like(e32), jnp.zeros_like(a_p),
+            jnp.zeros_like(eb32), jnp.zeros_like(w32), jnp.zeros_like(b32),
+            jnp.zeros_like(lns32), jnp.zeros_like(lnb32))
+    # static trip count -> scan -> reverse-differentiable (see atom_conv)
+    dv, de, dap, deb, dw, db, dls, dlb = jax.lax.fori_loop(
+        0, uap // chunk, body, init)
+    f0 = jax.dtypes.float0
+    return (dv.astype(v.dtype), de.astype(e.dtype),
+            dap[:ua_rows].astype(a_u.dtype), deb.astype(e_b.dtype),
+            dw.astype(w.dtype), db.astype(b.dtype),
+            dls.astype(ln_scale.dtype), dlb.astype(ln_bias.dtype),
+            np.zeros(ctr.shape, f0), np.zeros(du1.shape, f0),
+            np.zeros(du2.shape, f0), np.zeros(rep.shape, f0),
+            np.zeros(dest.shape, f0), np.zeros(offsets.shape, f0))
+
+
+_fused_sym_bond_conv.defvjp(_fused_sym_bond_conv_fwd,
+                            _fused_sym_bond_conv_bwd)
+
+
+def fused_sym_bond_conv(v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+                        ctr, du1, du2, rep, dest, offsets,
+                        *, msg_block: int = 256, block_rows: int = 32,
+                        chunk: int = 256, gather_tile: int = 512,
+                        table_residency: str = "auto"):
+    """Fused symmetric-trunk Eq. 5 message path (DESIGN.md §10):
+
+        msg_w  = e^b[du1] e^b[du2] phi(v_c, e_s, e_s, a_w),
+        e_s    = e[du1] + e[du2],
+        agg[u] = sum over incidences (u, w) of msg_w        -> (Eu, D)
+
+    over the dedup angle rows, with one gated-MLP evaluation per
+    UNDIRECTED angle — half the directed count — scattered to BOTH
+    undirected bonds of its pair through the sym-incidence store
+    (``dest``/``rep`` sorted by destination, CSR ``offsets``).  Two
+    launches: a phase-A message kernel over Au blocks and a phase-B
+    destination-tiled accumulator over Eu blocks; splitting at the
+    scatter is what keeps phi evaluated once per angle.
+
+    ``ctr = bond_center[und_angle_ij]``, ``du1/du2 = bond_pair[
+    und_angle_ij/ik]`` (cheap int gathers the caller performs).
+
+    ``table_residency`` (DESIGN.md §9): "vmem" | "hbm" | "auto",
+    resolved independently for each phase.
+    """
+    return _fused_sym_bond_conv(v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+                                ctr, du1, du2, rep, dest, offsets,
+                                msg_block, block_rows, chunk, gather_tile,
+                                table_residency)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11))

@@ -122,15 +122,19 @@ def _mask_real_edges(msg, offsets):
 
 
 def fused_atom_conv_ref(v, e, e_a, w, b, ln_scale, ln_bias,
-                        bond_center, bond_nbr, offsets, pair=None):
+                        bond_center, bond_nbr, offsets, pair=None,
+                        und_features=False):
     """Unfused Eq. 4 message path: gather-concat -> GatedMLP -> envelope ->
     segment reduce.  Ground truth for the atom_conv megakernel; also the
     recompute the custom VJP differentiates in the backward (DESIGN.md §3).
 
     ``pair`` (DESIGN.md §5): when set, ``e_a`` is the undirected (Eu, D)
     envelope table and is expanded through the mirror map.
+    ``und_features`` (DESIGN.md §10): ``e`` too is an (Eu, D) table
+    expanded through ``pair`` (requires ``pair``).
     """
-    x = jnp.concatenate([v[bond_center], v[bond_nbr], e], axis=-1)
+    e_dir = e[pair] if und_features else e
+    x = jnp.concatenate([v[bond_center], v[bond_nbr], e_dir], axis=-1)
     env = e_a if pair is None else e_a[pair]
     msg = gated_mlp_packed_ref(x, w, b, ln_scale, ln_bias) * env
     msg = _mask_real_edges(msg, offsets)
@@ -154,6 +158,26 @@ def fused_bond_conv_ref(v, e, a, e_b, w, b, ln_scale, ln_bias,
         msg = msg * e_b[pair[angle_ij]] * e_b[pair[angle_ik]]
     msg = _mask_real_edges(msg, offsets)
     return jax.ops.segment_sum(msg, angle_ij, num_segments=e.shape[0])
+
+
+def fused_sym_bond_conv_ref(v, e, a_u, e_b, w, b, ln_scale, ln_bias,
+                            ctr, du1, du2, rep, dest, offsets):
+    """Symmetrized Eq. 5 message path (DESIGN.md §10) -> (Eu, D) agg.
+
+    One swap-invariant message per Au row — e_s = e[du1] + e[du2] fed
+    into BOTH e slots of the packed 4D-wide GatedMLP, scaled by the
+    pair's two envelopes — scattered through the dest-sorted incidence
+    store (rep/dest/offsets): every real Au row lands in both its
+    undirected destinations (which may coincide for self-image bonds).
+    Ground truth for the two-launch §10 megakernel; also the recompute
+    its custom VJP differentiates.
+    """
+    e_s = e[du1] + e[du2]
+    x = jnp.concatenate([v[ctr], e_s, e_s, a_u], axis=-1)
+    msg = gated_mlp_packed_ref(x, w, b, ln_scale, ln_bias) \
+        * e_b[du1] * e_b[du2]
+    incid = _mask_real_edges(msg[rep], offsets)
+    return jax.ops.segment_sum(incid, dest, num_segments=e.shape[0])
 
 
 def fused_force_readout_ref(e, x_hat, w1, b1, w2, b2, bond_center, offsets,

@@ -54,6 +54,7 @@ def train_chgnet(args):
     model_cfg = model_cfg.with_(conv_impl=args.conv_impl,
                                 precision=args.precision,
                                 bond_store=args.bond_store,
+                                bond_features=args.bond_features,
                                 stress_mode=args.stress_mode,
                                 table_residency=args.table_residency)
     train_cfg = TrainConfig(global_batch=args.batch, total_steps=args.steps,
@@ -63,6 +64,7 @@ def train_chgnet(args):
     print(f"devices={n_dev} init_lr={train_cfg.init_lr:.2e} "
           f"readout={args.readout} conv_impl={args.conv_impl} "
           f"precision={args.precision} bond_store={args.bond_store} "
+          f"bond_features={args.bond_features} "
           f"stress_mode={args.stress_mode} async_ckpt={args.async_ckpt}")
     if args.ckpt:
         marker = read_resume_marker(args.ckpt)
@@ -223,6 +225,12 @@ def main():
                     help="undirected = half-graph bond store with mirror "
                          "maps (DESIGN.md §5): geometry/RBF/embed GEMM "
                          "and e^a/e^b run once per pair (Eu = E/2)")
+    ap.add_argument("--bond-features", default="directed",
+                    choices=["directed", "undirected"],
+                    help="trunk compute representation (DESIGN.md §10): "
+                         "undirected = symmetrized bond_conv/angle_update "
+                         "over Eu/Au rows (halves every bond/angle-level "
+                         "GEMM; requires --bond-store undirected)")
     ap.add_argument("--stress-mode", default="mlp",
                     choices=["mlp", "bond_virial"],
                     help="direct-readout stress tier (DESIGN.md §7): mlp = "

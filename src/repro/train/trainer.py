@@ -251,6 +251,37 @@ def make_chgnet_step_fns(model_cfg: CHGNetConfig, train_cfg: TrainConfig,
     )
 
 
+def make_chgnet_eval_serve_step(model_cfg: CHGNetConfig,
+                                train_cfg: TrainConfig,
+                                *, cache: CompileCache | None = None,
+                                donate: bool = True):
+    """One jitted ``(params, batch) -> (metrics, outputs)`` step that runs
+    the forward ONCE and derives both the eval metrics and the serve
+    outputs from it — callers that want predictions *and* MAEs (validation
+    epochs that archive outputs, MD loops that log errors) previously paid
+    two forwards and kept two batches resident.
+
+    ``donate`` (default on): the batch is consumed exactly once per call,
+    so its buffers may back the outputs (``tests/test_donation.py``
+    asserts the aliasing survives compilation); params are NOT donated —
+    they are reused every call, matching the serve-step contract.
+    """
+
+    def build():
+        @partial(jax.jit, donate_argnums=(1,) if donate else ())
+        def eval_serve_step(params, batch):
+            out = chgnet_apply(params, model_cfg, batch)
+            _, metrics = chgnet_loss(out, batch, train_cfg.loss)
+            return metrics, out
+
+        return eval_serve_step
+
+    if cache is None:
+        return build()
+    return cache.get(("chgnet_eval_serve", model_cfg, train_cfg, donate),
+                     build)
+
+
 # ---------------------------------------------------------------------------
 # Data-parallel step (shard_map over a mesh axis)
 # ---------------------------------------------------------------------------

@@ -5,8 +5,25 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # optional dep: skip, don't die, on bare envs
-from hypothesis import given, settings, strategies as st
+try:  # optional dep: skip only the property sweeps, not the whole module
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare envs
+    HAS_HYPOTHESIS = False
+
+    def given(*a, **k):  # no-op decorators so the module still imports
+        return lambda fn: fn
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    class _StubStrategies:  # st.foo(...) evaluates inside @given at import
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StubStrategies()
+needs_hypothesis = pytest.mark.skipif(not HAS_HYPOTHESIS,
+                                      reason="hypothesis not installed")
 
 from repro.core import BatchCapacities, Crystal, batch_crystals, build_graph, chgnet_apply, chgnet_init
 from repro.core.chgnet import CHGNetConfig
@@ -87,6 +104,93 @@ def test_autodiff_forces_rotation_equivariant():
                                  batch_crystals([c2], [build_graph(c2)], caps))["forces"])
     n = c.num_atoms
     np.testing.assert_allclose(f2[:n], f1[:n] @ rot.T, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# symmetric half-graph trunk (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+SYM = dict(bond_store="undirected", bond_features="undirected")
+
+
+@pytest.mark.parametrize("readout", ["direct", "autodiff"])
+def test_sym_trunk_forces_rotation_equivariant(readout):
+    """F(R x) = R F(x) holds on the Eu/Au-resident symmetric trunk: the
+    swap-symmetrized features are built from rotation-invariant geometry,
+    so equivariance is carried entirely by the readout — check it
+    survives the half-graph compute path."""
+    rng = np.random.default_rng(7)
+    c = _crystal(rng)
+    rot = random_rotation(rng)
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout=readout, num_blocks=1, **SYM)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    f1 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c], [g], caps))["forces"])
+    c2 = _rotate(c, rot)
+    g2 = build_graph(c2)
+    assert g2.num_bonds == g.num_bonds
+    f2 = np.asarray(chgnet_apply(params, cfg,
+                                 batch_crystals([c2], [g2], caps))["forces"])
+    n = c.num_atoms
+    np.testing.assert_allclose(f2[:n], f1[:n] @ rot.T, atol=2e-4)
+
+
+def test_sym_trunk_energy_and_forces_translation_invariant():
+    """Rigid translation (with periodic wrap) relabels bond images but
+    must leave the symmetric trunk's energy and per-atom forces alone."""
+    rng = np.random.default_rng(8)
+    c = _crystal(rng)
+    g = build_graph(c)
+    caps = BatchCapacities(8, g.num_bonds + 4, g.num_angles + 4)
+    cfg = CHGNetConfig(readout="direct", **SYM)
+    params = chgnet_init(jax.random.PRNGKey(0), cfg)
+    out1 = chgnet_apply(params, cfg, batch_crystals([c], [g], caps))
+    c2 = Crystal(lattice=c.lattice,
+                 frac_coords=(c.frac_coords + rng.random(3)) % 1.0,
+                 atomic_numbers=c.atomic_numbers)
+    g2 = build_graph(c2)
+    assert g2.num_bonds == g.num_bonds
+    out2 = chgnet_apply(params, cfg, batch_crystals([c2], [g2], caps))
+    np.testing.assert_allclose(np.asarray(out2["energy"]),
+                               np.asarray(out1["energy"]), atol=2e-4)
+    n = c.num_atoms
+    np.testing.assert_allclose(np.asarray(out2["forces"])[:n],
+                               np.asarray(out1["forces"])[:n], atol=2e-4)
+
+
+@needs_hypothesis
+@settings(max_examples=12, deadline=None)
+@given(sizes=st.lists(st.integers(3, 8), min_size=1, max_size=3),
+       max_nbr=st.integers(4, 10),
+       seed=st.integers(0, 2**31 - 1))
+def test_symmetric_capped_graphs_keep_half_counts(sizes, max_nbr, seed):
+    """Ragged sweep over cap_mode="symmetric" capped graphs: Eu == E/2
+    and Au == A/2 hold per graph AND survive packing + validate_layout
+    (which certifies the §10 sym-incidence store on the packed batch)."""
+    from repro.batching.pack import validate_layout
+
+    rng = np.random.default_rng(seed)
+    cs = [_crystal(rng, n) for n in sizes]
+    gs = [build_graph(c, max_nbr_per_atom=max_nbr, cap_mode="symmetric")
+          for c in cs]
+    for g in gs:
+        assert 2 * g.num_undirected == g.num_bonds
+        assert 2 * g.und_angle_rep.shape[0] == g.num_angles
+    caps = BatchCapacities(sum(sizes) + 4,
+                           sum(g.num_bonds for g in gs) + 8,
+                           sum(g.num_angles for g in gs) + 8)
+    batch = batch_crystals(cs, gs, caps)
+    validate_layout(batch)
+    e_real = int(np.asarray(batch.bond_mask).sum())
+    eu_real = int(np.asarray(batch.und_mask).sum())
+    a_real = int(np.asarray(batch.angle_mask).sum())
+    au_real = int(np.asarray(batch.und_angle_mask).sum())
+    assert 2 * eu_real == e_real
+    assert 2 * au_real == a_real
+    # the incidence count equals the directed-angle count (§10)
+    assert int(np.asarray(batch.sym_offsets)[-1]) == a_real
 
 
 # ---------------------------------------------------------------------------

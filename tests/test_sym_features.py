@@ -1,0 +1,282 @@
+"""Symmetric half-graph trunk (DESIGN.md §10): bond_features="undirected"
+keeps bond features Eu-resident and angle features Au-resident through
+every interaction block, halving the bond/angle-level GEMM row counts.
+
+Covered here: op-level agreement of sym_bond_conv / sym_angle_update with
+a directed-layout reference of the same symmetric math, tier
+self-consistency (mlp x agg x conv x residency, forward + param grads),
+the autodiff readout on top of the symmetric trunk, a training smoke, and
+config validation.  All run on CPU via REPRO_KERNELS_INTERPRET=1.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.batching import BatchCapacities, batch_crystals
+from repro.core.chgnet import CHGNetConfig, chgnet_apply, chgnet_init
+from repro.core.interaction import (
+    gated_mlp_apply,
+    linear_apply,
+    sym_angle_update,
+    sym_bond_conv,
+)
+from repro.core.losses import LossWeights, chgnet_loss
+from repro.core.neighbors import Crystal, build_graph
+
+
+def _crystal(rng, n, labels=True, scale=4.0):
+    kw = {}
+    if labels:
+        kw = dict(energy=float(rng.normal()),
+                  forces=rng.normal(0, .1, (n, 3)),
+                  stress=rng.normal(0, .1, (3, 3)),
+                  magmoms=np.abs(rng.normal(0, 1, n)))
+    return Crystal(
+        lattice=np.eye(3) * scale + rng.normal(0, .05, (3, 3)),
+        frac_coords=rng.random((n, 3)),
+        atomic_numbers=rng.integers(1, 60, n),
+        **kw,
+    )
+
+
+def _batch(rng, sizes=(5, 7, 4), **kw):
+    cs = [_crystal(rng, n, **kw) for n in sizes]
+    gs = [build_graph(c) for c in cs]
+    caps = BatchCapacities(sum(sizes) + 8,
+                           sum(g.num_bonds for g in gs) + 16,
+                           sum(g.num_angles for g in gs) + 16)
+    return batch_crystals(cs, gs, caps)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return _batch(np.random.default_rng(0))
+
+
+@pytest.fixture(scope="module")
+def params():
+    # parameter shapes are bond_features-independent (the symmetric trunk
+    # reuses the directed MLPs verbatim — checkpoint compatible)
+    return chgnet_init(jax.random.PRNGKey(0), CHGNetConfig(),
+                       dtype=jnp.float32)
+
+
+SYM = dict(bond_store="undirected", bond_features="undirected")
+
+
+def _assert_close(got, want, atol, msg):
+    scale = max(1.0, float(np.max(np.abs(np.asarray(want)))))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol * scale, err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# op level: Eu/Au-resident compute == the same math in the directed layout
+# ---------------------------------------------------------------------------
+
+def _sym_op_inputs(batch, d=24):
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.normal(size=(batch.atom_cap, d)), jnp.float32)
+    e_u = jnp.asarray(rng.normal(size=(batch.und_cap, d)), jnp.float32) \
+        * batch.und_mask[:, None]
+    a_u = jnp.asarray(
+        rng.normal(size=(batch.und_angle_ij.shape[0], d)), jnp.float32) \
+        * batch.und_angle_mask[:, None]
+    e_b = jnp.asarray(rng.normal(size=(batch.und_cap, d)), jnp.float32) \
+        * batch.und_mask[:, None]
+    from repro.core.interaction import interaction_block_init
+    p = interaction_block_init(jax.random.PRNGKey(7), d, jnp.float32)
+    return p, v, e_u, a_u, e_b
+
+
+def _directed_sym_message(p, batch, v, e_u, a_u, e_b):
+    """The §10 message evaluated per DIRECTED angle: expand the Eu/Au
+    tables through the mirror maps, feed the swap-symmetric e_s into both
+    e slots."""
+    e_dir = e_u[batch.bond_pair]
+    eb_dir = e_b[batch.bond_pair]
+    ctr = batch.bond_center[batch.angle_ij]
+    e_s = e_dir[batch.angle_ij] + e_dir[batch.angle_ik]
+    x = jnp.concatenate([v[ctr], e_s, e_s, a_u[batch.angle_pair]], axis=-1)
+    msg = gated_mlp_apply(p["bond_mlp"], x, "packed") \
+        * eb_dir[batch.angle_ij] * eb_dir[batch.angle_ik]
+    return msg * batch.angle_mask[:, None]
+
+
+def test_sym_bond_conv_matches_directed_layout(batch):
+    """agg[u] over the sym-incidence store == the directed-angle
+    aggregation of the identical swap-symmetric message, mapped through
+    bond_pair — the §10 claim that the half-graph scatter loses nothing."""
+    p, v, e_u, a_u, e_b = _sym_op_inputs(batch)
+    got = sym_bond_conv(p, batch, v, e_u, a_u, e_b, mlp_impl="packed",
+                        agg_impl="scatter", conv_impl="unfused")
+    msg = _directed_sym_message(p, batch, v, e_u, a_u, e_b)
+    agg = jax.ops.segment_sum(msg, batch.bond_pair[batch.angle_ij],
+                              num_segments=batch.und_cap)
+    want = e_u + linear_apply(p["bond_out"], agg) \
+        * batch.und_mask[:, None]
+    _assert_close(got, want, 1e-5, "sym_bond_conv vs directed layout")
+
+
+def test_sym_angle_update_matches_directed_layout(batch):
+    """Every directed angle's f_a update equals its dedup row's update —
+    swap symmetry makes the two orientations agree, so the single Au row
+    carries both."""
+    p, v, e_u, a_u, e_b = _sym_op_inputs(batch)
+    a_new = sym_angle_update(p, batch, v, e_u, a_u, mlp_impl="packed")
+    e_dir = e_u[batch.bond_pair]
+    ctr = batch.bond_center[batch.angle_ij]
+    e_s = e_dir[batch.angle_ij] + e_dir[batch.angle_ik]
+    x = jnp.concatenate([v[ctr], e_s, e_s, a_u[batch.angle_pair]], axis=-1)
+    upd = gated_mlp_apply(p["angle_mlp"], x, "packed")
+    want_dir = a_u[batch.angle_pair] + upd
+    mask = np.asarray(batch.angle_mask) > 0
+    _assert_close(np.asarray(a_new[batch.angle_pair])[mask],
+                  np.asarray(want_dir)[mask], 1e-5,
+                  "sym_angle_update vs directed layout")
+
+
+# ---------------------------------------------------------------------------
+# model level: tier self-consistency, fwd + param grads
+# ---------------------------------------------------------------------------
+
+# the §2/§3 matrix corners (same set as tests/test_bond_store.py)
+TIERS = [
+    ("packed", "scatter", "unfused", "auto"),
+    ("ref", "sorted", "unfused", "auto"),
+    ("packed", "matmul", "unfused", "auto"),
+    ("pallas", "pallas", "unfused", "auto"),
+    ("packed", "scatter", "fused", "vmem"),
+    ("packed", "pallas", "fused", "hbm"),
+]
+
+
+def _base_cfg():
+    return CHGNetConfig(readout="direct", **SYM)
+
+
+@pytest.mark.parametrize("mlp_impl,agg_impl,conv_impl,residency", TIERS)
+def test_sym_tiers_agree_forward(batch, params, mlp_impl, agg_impl,
+                                 conv_impl, residency):
+    want = chgnet_apply(params, _base_cfg(), batch)
+    got = chgnet_apply(
+        params,
+        _base_cfg().with_(mlp_impl=mlp_impl, agg_impl=agg_impl,
+                          conv_impl=conv_impl, table_residency=residency),
+        batch)
+    for k in want:
+        _assert_close(got[k], want[k], 1e-5,
+                      f"{k} {mlp_impl}/{agg_impl}/{conv_impl}/{residency}")
+
+
+@pytest.mark.parametrize("mlp_impl,agg_impl,conv_impl,residency", TIERS)
+def test_sym_tiers_agree_gradients(batch, params, mlp_impl, agg_impl,
+                                   conv_impl, residency):
+    def loss(p, c):
+        return chgnet_loss(chgnet_apply(p, c, batch), batch,
+                           LossWeights())[0]
+
+    g_ref = jax.jit(jax.grad(loss), static_argnums=1)(params, _base_cfg())
+    g_got = jax.jit(jax.grad(loss), static_argnums=1)(
+        params,
+        _base_cfg().with_(mlp_impl=mlp_impl, agg_impl=agg_impl,
+                          conv_impl=conv_impl, table_residency=residency))
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(g_ref)[0],
+            jax.tree_util.tree_flatten_with_path(g_got)[0]):
+        _assert_close(b, a, 1e-5,
+                      f"{jax.tree_util.keystr(path)} "
+                      f"{mlp_impl}/{agg_impl}/{conv_impl}/{residency}")
+
+
+def test_sym_autodiff_readout_matches_direct_energy(batch, params):
+    """The autodiff readout differentiates the symmetric trunk through
+    the Eu geometry; its energies must match the direct tier's and its
+    forces/stress must be finite."""
+    direct = chgnet_apply(params, _base_cfg(), batch)
+    auto = chgnet_apply(params, CHGNetConfig(readout="autodiff", **SYM),
+                        batch)
+    _assert_close(auto["energy"], direct["energy"], 1e-5, "energy")
+    for k in ("forces", "stress"):
+        assert np.all(np.isfinite(np.asarray(auto[k]))), k
+
+
+def test_sym_block_variant_reference_runs(batch, params):
+    out = chgnet_apply(
+        params, CHGNetConfig(readout="direct", block_variant="reference",
+                             **SYM), batch)
+    for k, t in out.items():
+        assert np.all(np.isfinite(np.asarray(t))), k
+
+
+def test_sym_training_smoke(batch, params):
+    cfg = CHGNetConfig(readout="direct", conv_impl="fused", **SYM)
+
+    @jax.jit
+    def step(p):
+        def loss(q):
+            return chgnet_loss(chgnet_apply(q, cfg, batch), batch,
+                               LossWeights())[0]
+        l, g = jax.value_and_grad(loss)(p)
+        return l, jax.tree.map(lambda a, b: a - 1e-3 * b, p, g)
+
+    p = params
+    losses = []
+    for _ in range(3):
+        l, p = step(p)
+        losses.append(float(l))
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# serve path: Verlet updates re-emit the dedup-angle maps end to end
+# ---------------------------------------------------------------------------
+
+def test_sym_serve_engine_end_to_end():
+    """ServeEngine + BatchedMD on the symmetric trunk: every per-step
+    Verlet graph re-emits valid angle_pair / und_angle_* maps (the packs
+    run validate_layout, which certifies the §10 sym-incidence store
+    too), and forces stay finite across MD steps."""
+    from repro.serve import BatchedMD, ServeEngine
+
+    rng = np.random.default_rng(5)
+    crystals = [_crystal(rng, n, labels=False) for n in (4, 5)]
+    cfg = CHGNetConfig(readout="direct", **SYM)
+    params = chgnet_init(jax.random.PRNGKey(1), cfg)
+    serve = ServeEngine.for_structures(params, cfg, crystals,
+                                       validate_layout=True)
+    md = BatchedMD(serve, crystals, dt=1e-3)
+    out = md.step(3)
+    assert md.steps_done == 3
+    for f in out["forces"]:
+        assert np.all(np.isfinite(f))
+    for r in md.replicas:
+        g = r.nlist.update(r.crystal)
+        # update() must rebuild the dedup-angle maps the §10 trunk needs
+        assert g.angle_pair is not None and g.und_angle_rep is not None
+        assert 2 * g.und_angle_rep.shape[0] == g.num_angles
+        ap, rep = g.angle_pair, g.und_angle_rep
+        # representatives round-trip and every dedup row has both
+        # directed orientations
+        assert np.array_equal(ap[rep], np.arange(rep.shape[0]))
+        assert np.all(np.bincount(ap, minlength=rep.shape[0]) == 2)
+        # swap-closure: the partner orientation maps to the same dedup row
+        order = np.lexsort((g.angle_ik, g.angle_ij))
+        swap = np.lexsort((g.angle_ij, g.angle_ik))
+        assert np.array_equal(ap[order], ap[swap])
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_bond_features_requires_undirected_store():
+    with pytest.raises(ValueError, match="bond_store"):
+        CHGNetConfig(bond_features="undirected")
+
+
+def test_bond_features_rejects_unknown_value():
+    with pytest.raises(ValueError, match="bond_features"):
+        CHGNetConfig(bond_features="half", bond_store="undirected")
